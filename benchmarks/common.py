@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Benchmarks print ``name,us_per_call,derived`` rows (harness contract) and
+run on host devices.  Multi-device benchmarks spawn a subprocess with
+XLA_FLAGS set, keeping the main process at 1 device.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on device)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def run_subprocess_bench(code: str, devices: int, timeout=560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{r.stderr[-2000:]}")
+    return r.stdout

@@ -1,0 +1,50 @@
+"""Paper Fig. 2 analogue: weight exchange-and-average strategies.
+
+Compares all_reduce / ring / pairwise exchange of an AlexNet-sized pytree
+across 8 host-device replicas: wall time + the collective ops each lowers
+to (from compiled HLO) — the communication-schedule axis the paper explored
+with P2P copies on a PCIe switch."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_subprocess_bench
+
+CHILD = """
+import time, re, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import exchange_average
+from repro.models import alexnet
+from repro.configs import ALEXNET_SMOKE
+
+R = 8
+mesh = jax.make_mesh((R,), ("data",))
+params = alexnet.init(jax.random.PRNGKey(0), ALEXNET_SMOKE)
+rep = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), params)
+sh = jax.tree.map(lambda x: NamedSharding(mesh, P(*("data",) + (None,) * (x.ndim - 1))), rep)
+rep = jax.device_put(rep, sh)
+n_bytes = sum(x.nbytes for x in jax.tree.leaves(rep))
+for strat in ("all_reduce", "ring", "pairwise"):
+    f = jax.jit(lambda t, s=strat: exchange_average(t, s), in_shardings=(sh,), out_shardings=sh)
+    txt = f.lower(rep).compile().as_text()
+    ops = {k: len(re.findall(k + r"(?:-start)?\\(", txt))
+           for k in ("all-reduce", "collective-permute", "all-gather", "all-to-all")}
+    jax.block_until_ready(f(rep))
+    t0 = time.time()
+    for _ in range(10):
+        out = f(rep)
+    jax.block_until_ready(out)
+    us = (time.time() - t0) / 10 * 1e6
+    opstr = ";".join(f"{k}:{v}" for k, v in ops.items() if v)
+    print(f"RESULT,{strat},{us:.1f},bytes={n_bytes};{opstr}")
+"""
+
+
+def main():
+    out = run_subprocess_bench(CHILD, devices=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT"):
+            _, strat, us, derived = line.split(",", 3)
+            emit(f"exchange/{strat}", float(us), derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 1's conv-backend axis (cuda-convnet vs cuDNN R1/R2), on TPU
+terms: XLA direct conv vs the Pallas im2col+MXU kernel (interpret mode on
+CPU — correctness-equivalent, timing indicative only), plus the other two
+Pallas kernels vs their oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.conv2d import ops as conv_ops, ref as conv_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rwkv6 import ref as wkv_ref
+from repro.kernels.rwkv6.rwkv6 import wkv_pallas
+
+
+def main():
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    # conv1 of (reduced) AlexNet
+    x = jax.random.normal(ks[0], (8, 64, 64, 3))
+    w = jax.random.normal(ks[1], (7, 7, 3, 16)) * 0.1
+    f_xla = jax.jit(lambda x, w: conv_ref.conv2d_ref(x, w, 2, 0))
+    emit("conv/xla_direct", time_fn(f_xla, x, w), "backend=lax.conv")
+    f_pal = jax.jit(lambda x, w: conv_ops.conv2d_im2col(
+        x, w, stride=2, padding=0))
+    emit("conv/pallas_im2col", time_fn(f_pal, x, w),
+         "backend=pallas(interpret)")
+
+    # attention S=256
+    q = jax.random.normal(ks[2], (2, 256, 2, 2, 64))
+    k = jax.random.normal(ks[3], (2, 256, 2, 64))
+    v = jax.random.normal(ks[4], (2, 256, 2, 64))
+    f_ref = jax.jit(lambda q, k, v: fa_ref.attention_ref(
+        q, k, v, causal=True, scale=0.125))
+    emit("attention/xla_ref", time_fn(f_ref, q, k, v), "")
+    f_fa = jax.jit(lambda q, k, v: fa_ops.flash_attention(
+        q, k, v, causal=True, scale=0.125, bq=64, bk=64))
+    emit("attention/pallas_flash", time_fn(f_fa, q, k, v),
+         "backend=pallas(interpret)")
+
+    # rwkv6 T=256
+    r = jax.random.normal(ks[0], (1, 256, 2, 32))
+    kk = jax.random.normal(ks[1], (1, 256, 2, 32))
+    vv = jax.random.normal(ks[2], (1, 256, 2, 32))
+    ww = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (1, 256, 2, 32)) * 0.5))
+    u = jax.random.normal(ks[4], (2, 32)) * 0.5
+    f_seq = jax.jit(lambda *a: wkv_ref.wkv_sequential(*a)[0])
+    emit("wkv6/sequential_scan", time_fn(f_seq, r, kk, vv, ww, u), "")
+    f_chk = jax.jit(lambda *a: wkv_ref.wkv_chunked(*a, chunk=64)[0])
+    emit("wkv6/chunked_jnp", time_fn(f_chk, r, kk, vv, ww, u), "")
+    f_pl = jax.jit(lambda *a: wkv_pallas(*a, chunk=64, interpret=True))
+    emit("wkv6/pallas_chunked", time_fn(f_pl, r, kk, vv, ww, u),
+         "backend=pallas(interpret)")
+
+
+if __name__ == "__main__":
+    main()

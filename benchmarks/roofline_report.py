@@ -1,0 +1,81 @@
+"""Render the roofline table for EXPERIMENTS.md from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod1]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(mesh: str, results_dir: str = RESULTS):
+    rows = []
+    for f in glob.glob(os.path.join(results_dir, f"*_{mesh}.json")):
+        d = json.load(open(f))
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.get(d["shape"], 9)))
+    return rows
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n / 2 ** 30:.1f}"
+
+
+def onesent(d):
+    """One sentence on what would move the dominant term down."""
+    dom = d["roofline"]["dominant"]
+    if dom == "collective":
+        return ("sequence-/activation-sharding over 'model' (reduce-scatter "
+                "instead of all-reduce) cuts the per-layer TP collective")
+    if dom == "memory":
+        return ("operator fusion + bf16 activations reduce HLO bytes; "
+                "on TPU most of this traffic fuses away")
+    return "larger per-chip batch or fewer model shards raises MXU occupancy"
+
+
+def table(rows):
+    out = ["| arch | shape | mode | layout | compute s | memory s | "
+           "collective s | dominant | MODEL_FLOPs | useful frac | "
+           "temp GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        r = d["roofline"]
+        layout = (f"R={d['n_replicas']}"
+                  + (f"+fsdp({d['fsdp_axis']})" if d["fsdp_axis"] else ""))
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mode']} | {layout} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | "
+            f"{(r['useful_fraction'] or 0):.2f} "
+            f"| {fmt_bytes(d['memory']['temp_size_in_bytes'])} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--sentences", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh, args.results)
+    print(f"### Roofline — mesh {args.mesh} "
+          f"({rows[0]['chips'] if rows else '?'} chips)\n")
+    print(table(rows))
+    if args.sentences:
+        print()
+        for d in rows:
+            print(f"- **{d['arch']} x {d['shape']}** "
+                  f"({d['roofline']['dominant']}-bound): {onesent(d)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+  table1_throughput   Table 1 (replicas x parallel-loading grid)
+  loading_overlap     Fig. 1  (double-buffered loading)
+  exchange_strategies Fig. 2  (exchange+average schedules)
+  kernel_backends     Table 1's conv-backend axis (+ other Pallas kernels)
+  parity_training     §3 accuracy-parity claim (param-avg vs grad-avg)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (exchange_strategies, kernel_backends,
+                        loading_overlap, local_sgd_ablation, parity_training,
+                        table1_throughput)
+
+SUITES = {
+    "table1_throughput": table1_throughput.main,
+    "loading_overlap": loading_overlap.main,
+    "exchange_strategies": exchange_strategies.main,
+    "kernel_backends": kernel_backends.main,
+    "parity_training": parity_training.main,
+    "local_sgd_ablation": local_sgd_ablation.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"# FAILED {name}: {e}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Table 1 analogue: AlexNet training time per 20 iterations,
+{1, 2, 4} replicas x {parallel loading on/off} x conv backend.
+
+The paper's numbers (Titan Black, batch 256 global): cuDNN-R2 2-GPU with
+parallel loading 19.72 s / 20 iters vs 43.52 s for 1-GPU serial — a 2.2x
+combined speedup.  Here replicas are host devices (CPU), so absolute times
+are meaningless; the DERIVED column reports the speedup structure the
+paper's table demonstrates (scaling efficiency + loading overlap gain).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_subprocess_bench
+
+CHILD = """
+import time, jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import ALEXNET_SMOKE
+from repro.core import init_param_avg_state, make_param_avg_step, reshape_for_replicas
+from repro.data import PrefetchLoader, synthetic
+from repro.data.preprocess import make_image_preprocess
+from repro.models import alexnet
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+
+R = __REPLICAS__
+PREFETCH = __PREFETCH__
+BACKEND = "__BACKEND__"
+cfg = ALEXNET_SMOKE
+GLOBAL_BATCH = 64
+opt = sgd_momentum()
+state = init_param_avg_state(jax.random.PRNGKey(0), lambda r: alexnet.init(r, cfg), opt, R)
+step = jax.jit(make_param_avg_step(
+    lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"], conv_backend=BACKEND),
+    opt, schedules.constant(0.01)))
+mean = synthetic.mean_image(synthetic.blob_images(10, GLOBAL_BATCH, cfg.image_size + 8, seed=1), 2)
+prep = make_image_preprocess(mean, cfg.image_size, seed=0)
+src = map(lambda b: reshape_for_replicas({k: jnp.asarray(v) for k, v in prep(b).items()}, R),
+          synthetic.blob_images(10, GLOBAL_BATCH, cfg.image_size + 8, seed=0))
+loader = PrefetchLoader(src, prefetch=PREFETCH)
+# warmup
+state, _ = step(state, next(loader))
+jax.block_until_ready(state.params)
+t0 = time.time()
+for i in range(20):
+    state, loss = step(state, next(loader))
+jax.block_until_ready(state.params)
+print("RESULT", time.time() - t0)
+loader.close()
+"""
+
+
+def main():
+    results = {}
+    for backend in ("xla",):
+        for replicas in (1, 2, 4):
+            for prefetch in (2, 0):
+                code = (CHILD.replace("__REPLICAS__", str(replicas))
+                        .replace("__PREFETCH__", str(prefetch))
+                        .replace("__BACKEND__", backend))
+                out = run_subprocess_bench(code, devices=replicas)
+                secs = float([l for l in out.splitlines()
+                              if l.startswith("RESULT")][0].split()[1])
+                results[(backend, replicas, prefetch)] = secs
+                load = "parload" if prefetch else "serial"
+                emit(f"table1/{backend}/{replicas}rep/{load}",
+                     secs / 20 * 1e6, f"s_per_20it={secs:.2f}")
+    base = results[("xla", 1, 0)]
+    for (backend, r, p), secs in results.items():
+        if (r, p) != (1, 0):
+            emit(f"table1/speedup/{r}rep/"
+                 f"{'parload' if p else 'serial'}",
+                 secs / 20 * 1e6, f"speedup_vs_serial1={base / secs:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

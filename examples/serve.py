@@ -1,0 +1,73 @@
+"""Serving example: batched prefill + greedy decode with a KV cache.
+
+Trains a small LM on Markov data briefly (so generation is non-trivial),
+then serves a batch of prompts: prefill fills the ring cache, decode_step
+extends one token at a time.  Also demonstrates the SWA ring buffer by
+serving a sliding-window variant.
+
+    PYTHONPATH=src python examples/serve.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.core import (init_param_avg_state, make_param_avg_step,
+                        reshape_for_replicas, unreplicate)
+from repro.data import synthetic
+from repro.models import transformer
+from repro.optim import schedules
+from repro.optim.optimizers import adamw
+
+VOCAB, PROMPT, GEN, BATCH = 64, 24, 16, 4
+
+cfg = reduced(ARCHS["gemma-7b-swa"], vocab=VOCAB)
+cfg = dataclasses.replace(cfg, sliding_window=16)   # exercise the ring
+
+# --- quick training so the model has something to say -----------------
+opt = adamw(weight_decay=0.0)
+state = init_param_avg_state(jax.random.PRNGKey(0),
+                             lambda r: models.init(r, cfg), opt, 1)
+step = jax.jit(make_param_avg_step(lambda p, b: models.loss_fn(p, cfg, b),
+                                   opt, schedules.constant(3e-3)))
+src = synthetic.markov_lm(VOCAB, 8, 64, seed=1)
+for i in range(30):
+    batch = {k: jnp.asarray(v) for k, v in next(src).items()}
+    state, loss = step(state, reshape_for_replicas(batch, 1))
+params = unreplicate(state.params)
+print(f"trained 30 steps, loss {float(loss):.3f}")
+
+# --- serve -------------------------------------------------------------
+prompts = jnp.asarray(next(src)["tokens"][:BATCH, :PROMPT])
+total = PROMPT + GEN
+
+t0 = time.time()
+logits, _, cache = transformer.forward(
+    params, cfg, prompts, attn_impl="xla", return_cache=True,
+    cache=transformer.init_decode_cache(cfg, BATCH, total))
+print(f"prefill {PROMPT} tokens x{BATCH}: {time.time() - t0:.3f}s "
+      f"(cache capacity {cache['blocks'][0]['k'].shape[2]} = window)")
+
+decode = jax.jit(
+    lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos))
+cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+generated = [cur]
+t0 = time.time()
+for t in range(PROMPT, total - 1):
+    lg, cache = decode(params, cache, cur, t)
+    cur = jnp.argmax(lg, -1).astype(jnp.int32)
+    generated.append(cur)
+gen = jnp.concatenate(generated, axis=1)
+dt = time.time() - t0
+print(f"decoded {gen.shape[1]} tokens x{BATCH} in {dt:.3f}s "
+      f"({BATCH * gen.shape[1] / dt:.0f} tok/s)")
+for b in range(BATCH):
+    print(f"  prompt {prompts[b, -6:].tolist()} -> {gen[b].tolist()}")
+
+# sanity: greedy continuation of train-distribution prompts should often
+# follow the Markov chain's argmax transition
+assert gen.shape == (BATCH, GEN - 0)
+print("serve OK")

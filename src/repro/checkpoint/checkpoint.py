@@ -1,0 +1,71 @@
+"""Pytree checkpointing: raw-bytes npz + JSON manifest.
+
+bfloat16 has no native numpy dtype, so every leaf is stored as a uint8
+buffer with (dtype, shape) recorded in the manifest — round-trips any jax
+dtype exactly.  Layout:
+
+    <dir>/step_<N>/manifest.json
+    <dir>/step_<N>/arrays.npz     (key = flattened pytree path)
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    manifest, buffers = {}, {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        manifest[key] = {"dtype": str(leaf.dtype), "shape": list(arr.shape)}
+        buffers[key] = np.frombuffer(arr.tobytes(), np.uint8)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "arrays": manifest}, f)
+    np.savez(os.path.join(d, "arrays.npz"), **buffers)
+    return d
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)["arrays"]
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_like = _flatten(like)
+    restored = {}
+    for key in flat_like:
+        meta = manifest[key]
+        buf = data[key].tobytes()
+        np_dtype = jnp.dtype(meta["dtype"])       # ml_dtypes handles bf16
+        arr = np.frombuffer(buf, dtype=np_dtype).reshape(meta["shape"])
+        restored[key] = jnp.asarray(arr)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [restored[k] for k in keys])
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", name))]
+    return max(steps) if steps else None

@@ -1,0 +1,74 @@
+"""AlexNet — the paper's own architecture (Krizhevsky et al., 2012).
+
+5 conv layers (3 followed by max-pool), local response normalization after
+conv1/conv2, 2 fully-connected layers + softmax over 1000 classes.  This is
+the exact single-tower variant the Theano paper trains (their Fig. 1/2 and
+Table 1); batch 256 on 1 replica / 128 per replica on 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    out_channels: int
+    kernel: int
+    stride: int
+    padding: int
+    pool: bool       # 3x3 stride-2 max pool after this conv
+    lrn: bool        # local response normalization after this conv
+
+
+@dataclasses.dataclass(frozen=True)
+class AlexNetConfig:
+    name: str = "alexnet"
+    family: str = "conv"
+    image_size: int = 227
+    in_channels: int = 3
+    n_classes: int = 1000
+    convs: Tuple[ConvSpec, ...] = (
+        ConvSpec(96, 11, 4, 0, pool=True, lrn=True),
+        ConvSpec(256, 5, 1, 2, pool=True, lrn=True),
+        ConvSpec(384, 3, 1, 1, pool=False, lrn=False),
+        ConvSpec(384, 3, 1, 1, pool=False, lrn=False),
+        ConvSpec(256, 3, 1, 1, pool=True, lrn=False),
+    )
+    fc_dim: int = 4096
+    dropout: float = 0.5
+    dtype: str = "float32"
+    citation: str = "Krizhevsky et al. 2012; Ding et al. ICLR 2015 (this paper)"
+
+    def n_params(self) -> int:
+        c_in, hw = self.in_channels, self.image_size
+        total = 0
+        for cs in self.convs:
+            total += cs.kernel * cs.kernel * c_in * cs.out_channels + cs.out_channels
+            hw = (hw + 2 * cs.padding - cs.kernel) // cs.stride + 1
+            if cs.pool:
+                hw = (hw - 3) // 2 + 1
+            c_in = cs.out_channels
+        flat = hw * hw * c_in
+        total += flat * self.fc_dim + self.fc_dim
+        total += self.fc_dim * self.fc_dim + self.fc_dim
+        total += self.fc_dim * self.n_classes + self.n_classes
+        return total
+
+
+CONFIG = AlexNetConfig()
+
+# Reduced variant for CPU smoke tests / examples: 64x64 images, thin channels.
+SMOKE = AlexNetConfig(
+    name="alexnet-smoke",
+    image_size=64,
+    n_classes=10,
+    convs=(
+        ConvSpec(16, 7, 2, 0, pool=True, lrn=True),
+        ConvSpec(32, 5, 1, 2, pool=True, lrn=True),
+        ConvSpec(32, 3, 1, 1, pool=False, lrn=False),
+        ConvSpec(32, 3, 1, 1, pool=False, lrn=False),
+        ConvSpec(32, 3, 1, 1, pool=True, lrn=False),
+    ),
+    fc_dim=128,
+)

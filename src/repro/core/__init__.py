@@ -1,0 +1,7 @@
+"""The paper's contribution: data parallelism by parameter averaging."""
+from repro.core.param_avg import (STRATEGIES, exchange_average, replicate,
+                                  replica_spread, unreplicate)
+from repro.core.steps import (TrainState, init_grad_avg_state,
+                              init_param_avg_state, make_grad_avg_step,
+                              make_param_avg_step, make_serve_step,
+                              reshape_for_replicas)

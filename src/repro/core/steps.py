@@ -1,0 +1,176 @@
+"""Train/serve step builders.
+
+``make_param_avg_step`` is the paper's algorithm (Fig. 2): per-replica
+independent forward/backward/update (NO gradient communication), then
+exchange+average of params and optimizer state.  ``make_grad_avg_step`` is
+the modern baseline: single param copy, gradients mean-reduced across the
+batch by XLA.  ``sync_every`` turns the paper's every-step averaging into
+local SGD (beyond-paper extension — expressible only in the param-avg
+formulation).
+
+State layout (param_avg): every leaf has leading axis R = #replicas, sharded
+over ('pod','data'); batches are (R, per_replica_batch, ...).  vmap over
+axis 0 keeps each replica's computation on its own mesh slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.param_avg import exchange_average, replicate
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def init_param_avg_state(rng, init_fn, optimizer: Optimizer,
+                         n_replicas: int) -> TrainState:
+    params = init_fn(rng)
+    params_r = replicate(params, n_replicas)
+    opt_r = jax.vmap(optimizer.init)(params_r)
+    return TrainState(params_r, opt_r, jnp.zeros((), jnp.int32))
+
+
+def init_grad_avg_state(rng, init_fn, optimizer: Optimizer) -> TrainState:
+    params = init_fn(rng)
+    return TrainState(params, optimizer.init(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
+                        schedule: Callable, *, strategy: str = "all_reduce",
+                        sync_every: int = 1, microbatch: int = 1):
+    """loss_fn(params, batch) -> scalar.  Returns step(state, batch).
+
+    batch leaves have leading axis R matching state.params.
+    ``microbatch`` > 1 accumulates gradients over that many slices of the
+    per-replica batch (fp32 accumulator) — bounds activation memory at the
+    cost of re-reading params per slice.
+    """
+
+    def loss_and_grad(params, batch):
+        if microbatch == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        from repro.models._unroll import scan_or_unroll
+        # split as (b/m, m) then move m to the front: microbatch i takes the
+        # i-th row of each contiguous group, so a batch dim sharded over
+        # 'data' stays cleanly sharded after the reshape (a plain (m, b/m)
+        # reshape interleaves shards and GSPMD replicates — 4x compute).
+        mb = jax.tree.map(
+            lambda x: jnp.moveaxis(
+                x.reshape((x.shape[0] // microbatch, microbatch)
+                          + x.shape[1:]), 1, 0), batch)
+        acc0 = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+
+        def mstep(carry, mbatch):
+            lsum, gsum = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                gsum, g)
+            return (lsum + l, gsum), None
+
+        (lsum, gsum), _ = scan_or_unroll(mstep, acc0, mb)
+        inv = 1.0 / microbatch
+        return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def step(state: TrainState, batch) -> tuple:
+        lr = schedule(state.step)
+
+        n_rep = jax.tree.leaves(batch)[0].shape[0]
+        if n_rep == 1:
+            # degenerate single-replica case: skip vmap entirely — the
+            # size-1 batched axis confuses GSPMD sharding propagation
+            # (observed as "involuntary full rematerialization" resharding)
+            p0 = jax.tree.map(lambda x: x[0], state.params)
+            o0 = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
+                              state.opt_state)
+            b0 = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = loss_and_grad(p0, b0)
+            updates, o0 = optimizer.update(grads, o0, p0, lr)
+            p0 = apply_updates(p0, updates)
+            params = jax.tree.map(lambda x: x[None], p0)
+            opt_state = jax.tree.map(
+                lambda x: x[None] if x.ndim > 0 else x, o0)
+            # re-attach scalar leaves' replica axis bookkeeping
+            opt_state = jax.tree.map(
+                lambda new, old: new if new.ndim == old.ndim else
+                jnp.broadcast_to(new, old.shape),
+                opt_state, state.opt_state)
+            return TrainState(params, opt_state, state.step + 1), loss
+
+        # 1) independent per-replica grads — no cross-replica communication
+        losses, grads = jax.vmap(loss_and_grad, in_axes=(0, 0))(
+            state.params, batch)
+        # 2) independent per-replica optimizer updates
+        updates, opt_state = jax.vmap(
+            lambda g, s, p: optimizer.update(g, s, p, lr))(
+                grads, state.opt_state, state.params)
+        params = jax.vmap(apply_updates)(state.params, updates)
+
+        # 3) exchange & average params AND optimizer state (paper fn. 3)
+        if sync_every == 1:
+            params = exchange_average(params, strategy)
+            opt_state = exchange_average(opt_state, strategy)
+        else:
+            do_sync = (state.step + 1) % sync_every == 0
+            params = jax.tree.map(
+                lambda a, b: jnp.where(do_sync, a, b),
+                exchange_average(params, strategy), params)
+            opt_state = jax.tree.map(
+                lambda a, b: jnp.where(do_sync, a, b),
+                exchange_average(opt_state, strategy), opt_state)
+
+        new_state = TrainState(params, opt_state, state.step + 1)
+        return new_state, jnp.mean(losses)
+
+    return step
+
+
+def make_grad_avg_step(loss_fn: Callable, optimizer: Optimizer,
+                       schedule: Callable):
+    """Modern baseline: loss is a mean over the global batch, so XLA
+    all-reduces gradients inside the backward pass."""
+
+    def step(state: TrainState, batch) -> tuple:
+        lr = schedule(state.step)
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params, lr)
+        params = apply_updates(state.params, updates)
+        return TrainState(params, opt_state, state.step + 1), loss
+
+    return step
+
+
+def make_serve_step(decode_fn: Callable):
+    """decode_fn(params, cache, tokens, pos) -> (logits, cache).
+
+    Greedy argmax serving step: feeds back the sampled token.
+    """
+
+    def step(params, cache, tokens, pos):
+        logits, cache = decode_fn(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(tokens.dtype)
+        return next_tok, cache
+
+    return step
+
+
+def reshape_for_replicas(batch, n_replicas: int):
+    """(B, ...) host batch -> (R, B/R, ...)."""
+    def f(x):
+        b = x.shape[0]
+        assert b % n_replicas == 0, (b, n_replicas)
+        return x.reshape((n_replicas, b // n_replicas) + x.shape[1:])
+    return jax.tree.map(f, batch)

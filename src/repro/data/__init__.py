@@ -1,0 +1,2 @@
+from repro.data.pipeline import PrefetchLoader
+from repro.data import preprocess, synthetic  # noqa: F401

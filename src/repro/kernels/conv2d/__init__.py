@@ -1,0 +1,1 @@
+from repro.kernels.conv2d import ops, ref  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pallas TPU blocked matmul — the MXU half of the im2col convolution.
+
+The paper's hot-spot is convolution, and its Table 1 compares conv backends
+(cuda-convnet vs cuDNN R1/R2).  The TPU-native adaptation is NOT a direct
+port of either CUDA kernel: on TPU, convolution is lowered to im2col patch
+extraction + a systolic-array matmul.  This kernel is that matmul — blocked
+(bm, bk) x (bk, bn) tiles staged through VMEM with an fp32 accumulator
+carried across the K grid axis, bias add + optional ReLU fused into the
+final tile write (mirroring cuDNN's fused epilogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_scr, *, n_k: int,
+                   relu: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        y = acc_scr[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "relu",
+                                             "interpret"))
+def matmul_bias(x, w, b, *, bm: int = 128, bk: int = 128, bn: int = 128,
+                relu: bool = False, interpret: bool = True):
+    """(M,K) @ (K,N) + b(N,) with fused epilogue.  Pads to block multiples."""
+    m, k = x.shape
+    _, n = w.shape
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))[None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=kp // bk, relu=relu),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+                  pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]

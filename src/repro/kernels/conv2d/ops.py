@@ -1,0 +1,36 @@
+"""im2col convolution: patch extraction (XLA) + Pallas MXU matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d.conv2d import matmul_bias
+
+
+def im2col(x, kernel: int, stride: int, padding: int):
+    """x (B,H,W,C) -> patches (B, OH, OW, K*K*C)."""
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kernel, kernel), (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields channel-major (C*K*K) features;
+    # reorder to (K*K*C) to match w.reshape(K*K*Cin, Cout)
+    oh, ow = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(b, oh, ow, c, kernel * kernel)
+    patches = patches.transpose(0, 1, 2, 4, 3).reshape(b, oh, ow,
+                                                       kernel * kernel * c)
+    return patches
+
+
+def conv2d_im2col(x, w, *, stride: int, padding: int, bias=None,
+                  relu: bool = False, interpret: bool = True):
+    """x (B,H,W,Cin), w (K,K,Cin,Cout)."""
+    k, _, cin, cout = w.shape
+    patches = im2col(x, k, stride, padding)
+    b, oh, ow, feat = patches.shape
+    wmat = w.reshape(k * k * cin, cout)
+    bvec = jnp.zeros((cout,), x.dtype) if bias is None else bias
+    y = matmul_bias(patches.reshape(b * oh * ow, feat), wmat, bvec,
+                    relu=relu, interpret=interpret)
+    return y.reshape(b, oh, ow, cout)

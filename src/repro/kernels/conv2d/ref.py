@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: direct convolution via lax.conv_general_dilated."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, stride: int, padding: int):
+    """x (B,H,W,Cin), w (K,K,Cin,Cout) -> (B,OH,OW,Cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_bias_ref(x, w, b, relu: bool = False):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)

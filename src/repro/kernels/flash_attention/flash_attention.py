@@ -1,0 +1,102 @@
+"""Pallas TPU flash attention (forward) with causal + sliding-window masks.
+
+Grid: (B*Hq, S/bq, S/bk) — the KV axis is ``arbitrary`` (sequential) and the
+online-softmax running stats (m, l, acc) live in VMEM scratch carried across
+KV steps.  GQA is handled in the BlockSpec index maps: the K/V block row for
+query head h is ``b*Hkv + h // group`` — no materialized head repetition.
+
+Block shapes (bq, hd) / (bk, hd) are MXU-aligned for hd ∈ {64, 128, 256}.
+Numerics: scores are computed in fp32; masked lanes use -1e30 (every valid
+query row attends to at least itself under causal masking, so no row is ever
+fully masked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, causal: bool, window, scale: float,
+                  n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_q_heads", "n_kv_heads",
+                                             "causal", "window", "scale",
+                                             "bq", "bk", "interpret"))
+def flash_attention_folded(q, k, v, *, n_q_heads: int, n_kv_heads: int,
+                           causal=True, window=None, scale=1.0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True):
+    """q (B*Hq, S, hd); k, v (B*Hkv, S, hd)."""
+    bhq, s, hd = q.shape
+    group = n_q_heads // n_kv_heads
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    n_k = s // bk
+
+    def q_map(i, j, kk):
+        return (i, j, 0)
+
+    def kv_map(i, j, kk):
+        b, h = i // n_q_heads, i % n_q_heads
+        return (b * n_kv_heads + h // group, kk, 0)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                          window=window, scale=scale, n_k=n_k),
+        grid=(bhq, s // bq, n_k),
+        in_specs=[pl.BlockSpec((1, bq, hd), q_map),
+                  pl.BlockSpec((1, bk, hd), kv_map),
+                  pl.BlockSpec((1, bk, hd), kv_map)],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((bhq, s, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

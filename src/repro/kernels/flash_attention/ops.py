@@ -1,0 +1,23 @@
+"""Public flash-attention op in model layout (B,S,Hkv,G,hd)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_folded
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=1.0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q (B,S,Hkv,G,hd); k,v (B,S,Hkv,hd).  Returns (B,S,Hkv,G,hd)."""
+    b, s, hkv, g, hd = q.shape
+    hq = hkv * g
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * hq, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    bq_ = min(bq, s)
+    bk_ = min(bk, s)
+    o = flash_attention_folded(qf, kf, vf, n_q_heads=hq, n_kv_heads=hkv,
+                               causal=causal, window=window, scale=scale,
+                               bq=bq_, bk=bk_, interpret=interpret)
+    return o.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention: masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=1.0):
+    """q (B,S,Hkv,G,hd); k,v (B,S,Hkv,hd)."""
+    s = jnp.einsum("bqhgk,bshk->bhgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqs,bshk->bqhgk", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

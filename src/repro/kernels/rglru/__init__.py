@@ -1,0 +1,1 @@
+from repro.kernels.rglru import ops, ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Public RG-LRU recurrence op with implementation dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru import ref
+from repro.kernels.rglru.rglru import rglru_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def rglru_scan(a, b, h0=None, *, impl: str = "chunked", chunk: int = 64):
+    """h_t = a_t h_{t-1} + b_t.  Returns (h (B,T,D), h_final)."""
+    if impl == "sequential":
+        return ref.rglru_sequential(a, b, h0)
+    if impl == "chunked":
+        return ref.rglru_chunked(a, b, h0, chunk=chunk)
+    if impl == "pallas":
+        if h0 is not None:
+            raise NotImplementedError("pallas path starts from zero state")
+        h = rglru_pallas(a, b, chunk=chunk, interpret=True)
+        return h, h[:, -1].astype("float32")
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence.
+
+    h_t = a_t * h_{t-1} + b_t          (elementwise over channels)
+
+``rglru_sequential`` is the ground-truth scan; ``rglru_chunked`` computes
+within-chunk prefix products in closed form and carries the state across
+chunks — the same TPU-native chunking used for RWKV6, here for the simpler
+diagonal recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_sequential(a, b, h0=None):
+    """a, b: (B, T, D); returns (h (B,T,D), h_final (B,D))."""
+    bsz, t, d = a.shape
+    h0 = jnp.zeros((bsz, d), jnp.float32) if h0 is None else h0
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (a.astype(jnp.float32).transpose(1, 0, 2),
+                           b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), hT
+
+
+def rglru_chunked(a, b, h0=None, chunk: int = 64):
+    """Chunked-parallel form.  Within a chunk of length C:
+
+        h_t = P_t * h_in + sum_{s<=t} (P_t / P_s) * b_s,   P_t = prod a_{<=t}
+
+    computed as P_t * (h_in + cumsum(b_s / P_s)) with the division guarded
+    by the log-space cumulative product (a in (0,1], so P decays; chunks are
+    kept short so 1/P_s stays in fp32 range — same scheme as WKV6).
+    """
+    bsz, t, d = a.shape
+    t_orig = t
+    if t % chunk:
+        pad = chunk - t % chunk
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        t += pad
+    nc = t // chunk
+    h0 = jnp.zeros((bsz, d), jnp.float32) if h0 is None else h0
+    ac = a.astype(jnp.float32).reshape(bsz, nc, chunk, d).transpose(1, 0, 2, 3)
+    bc = b.astype(jnp.float32).reshape(bsz, nc, chunk, d).transpose(1, 0, 2, 3)
+
+    def one_chunk(h, ab):
+        aa, bb = ab                                   # (B, C, D)
+        loga = jnp.log(jnp.maximum(aa, 1e-37))
+        logp = jnp.cumsum(loga, axis=1)               # log P_t
+        p = jnp.exp(logp)
+        scaled = bb * jnp.exp(-logp)                  # b_s / P_s
+        h_all = p * (h[:, None, :] + jnp.cumsum(scaled, axis=1))
+        return h_all[:, -1, :], h_all
+
+    hT, hs = jax.lax.scan(one_chunk, h0, (ac, bc))
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, t, d)
+    return h[:, :t_orig], hT

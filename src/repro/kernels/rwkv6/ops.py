@@ -1,0 +1,36 @@
+"""Public WKV6 op: jit'd wrapper dispatching between implementations.
+
+``impl``:
+  ``chunked``    — pure-jnp chunked-parallel (default; lowers on any backend,
+                   used by the dry-run and CPU training)
+  ``sequential`` — the scan oracle (decode path / small shapes)
+  ``pallas``     — the TPU kernel (interpret-mode on CPU hosts)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6.rwkv6 import wkv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def wkv(r, k, v, w, u, s0=None, *, impl: str = "chunked", chunk: int = 64):
+    """Returns (y, final_state).  See ref.wkv_sequential for semantics."""
+    if impl == "sequential":
+        return ref.wkv_sequential(r, k, v, w, u, s0)
+    if impl == "chunked":
+        return ref.wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+    if impl == "pallas":
+        if s0 is not None:
+            raise NotImplementedError("pallas path starts from zero state")
+        y = wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+        # final state from the chunked oracle (cheap relative to the seq pass)
+        _, s_fin = ref.wkv_chunked(r, k, v, w, u, chunk=chunk)
+        return y, s_fin
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+wkv_decode = ref.wkv_decode

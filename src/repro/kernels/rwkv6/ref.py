@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the RWKV6 (Finch) WKV recurrence.
+
+Per head with state S ∈ R^{K×V} (key-dim × value-dim):
+
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+``wkv_sequential`` is the ground-truth scan (O(T) steps, used as the oracle
+and for single-token decode).  ``wkv_chunked`` is the TPU-native
+chunked-parallel form: within a chunk the (C,C) decay-weighted scores are
+computed with exponents ``cum_{t-1}-cum_s ≤ 0`` (never overflows); across
+chunks the state is carried by ``lax.scan``.  This is the hardware adaptation
+of the reference CUDA kernel — MXU-shaped matmuls instead of a per-timestep
+warp loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_sequential(r, k, v, w, u, s0=None):
+    """r,k,v,w: (B,T,H,K) with w = per-step decay in (0,1); u: (H,K).
+
+    Returns y (B,T,H,K) and final state (B,H,K,K).
+    """
+    b, t, h, kk = r.shape
+    s0 = jnp.zeros((b, h, kk, kk), jnp.float32) if s0 is None else s0
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs              # (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,K,K)
+        s_eff = s + u[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s_eff)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(x.astype(jnp.float32).transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 64):
+    """Chunked-parallel WKV6; bit-compatible with ``wkv_sequential`` (fp32).
+
+    T is padded internally to a chunk multiple with inert steps
+    (k=0, v=0, w=1: state unchanged); padded outputs are sliced off.
+    """
+    b, t, h, kk = r.shape
+    t_orig = t
+    if t % chunk:
+        pad = chunk - t % chunk
+        zero = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zero)
+        k = jnp.pad(k, zero)
+        v = jnp.pad(v, zero)
+        w = jnp.pad(w, zero, constant_values=1.0)
+        t = t + pad
+    nc = t // chunk
+    s0 = jnp.zeros((b, h, kk, kk), jnp.float32) if s0 is None else s0
+
+    rc, kc, vc, wc = (x.astype(jnp.float32)
+                      .reshape(b, nc, chunk, h, kk)
+                      .transpose(1, 0, 3, 2, 4)       # (nc, B, H, C, K)
+                      for x in (r, k, v, w))
+    lw = jnp.log(wc)                                   # ≤ 0
+    cum = jnp.cumsum(lw, axis=-2)                      # (nc,B,H,C,K) cum_t = Σ_{s≤t} log w_s
+    cum_prev = cum - lw                                # cum_{t-1} (cum_0 = 0)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # s < t
+
+    def one_chunk(s, xs):
+        rr, kk_, vv, cm, cmp_ = xs                     # (B,H,C,K)
+        # intra-chunk scores: A[t,s] = Σ_i r[t,i] k[s,i] e^{cum_{t-1,i}-cum_{s,i}}  (s<t)
+        dec = jnp.exp(jnp.where(tri[:, :, None],
+                                cmp_[..., :, None, :] - cm[..., None, :, :],
+                                -jnp.inf))             # (B,H,C,C,K)
+        a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rr, kk_, dec)
+        diag = jnp.einsum("bhtk,hk,bhtk->bht", rr, u.astype(jnp.float32), kk_)
+        a = a + jnp.eye(chunk) * diag[..., :, None]
+        y = jnp.einsum("bhts,bhsv->bhtv", a, vv)
+        # cross-chunk: y_t += (r_t ⊙ e^{cum_{t-1}}) S
+        y = y + jnp.einsum("bhtk,bhkv->bhtv", rr * jnp.exp(cmp_), s)
+        # state update: S' = diag(e^{cum_C}) S + Σ_s (k_s e^{cum_C - cum_s}) v_s^T
+        cend = cm[..., -1:, :]                          # (B,H,1,K)
+        kscaled = kk_ * jnp.exp(cend - cm)
+        s = jnp.exp(cend[..., 0, :])[..., :, None] * s + \
+            jnp.einsum("bhsk,bhsv->bhkv", kscaled, vv)
+        return s, y
+
+    s_fin, ys = jax.lax.scan(one_chunk, s0, (rc, kc, vc, cum, cum_prev))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, kk)
+    return y[:, :t_orig], s_fin
+
+
+def wkv_decode(r, k, v, w, u, s):
+    """Single-token decode.  r,k,v,w: (B,H,K); s: (B,H,K,K)."""
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, s + u[None, :, :, None] * kv)
+    s = w[..., :, None] * s + kv
+    return y, s

@@ -1,0 +1,36 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods = 512
+chips as (pod=2, data=16, model=16) — the 'pod' axis crosses the
+inter-pod links (DCN/optical), mirroring the paper's "GPUs under different
+PCI-E switches" locality boundary (§4.4).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only the dry-run entrypoint forces the 512-device host platform.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 1):
+    """Small mesh over host devices for tests/examples (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set by the caller)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

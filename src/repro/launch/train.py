@@ -1,0 +1,177 @@
+"""Training driver: real steps on host devices.
+
+Runs the paper's parameter-averaging data parallelism end-to-end on this
+host's devices (set REPRO_DEVICES=N to fan out over N host devices — this
+driver sets XLA_FLAGS itself when the variable is present, BEFORE importing
+jax, so it must stay the first import in the process).
+
+Examples:
+    REPRO_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
+        --arch olmo-1b --smoke --steps 50 --replicas 4
+    PYTHONPATH=src python -m repro.launch.train --arch alexnet --steps 100
+"""
+import os
+
+if os.environ.get("REPRO_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DEVICES"])
+
+# ruff: noqa: E402
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint, models
+from repro.configs import (ALEXNET, ALEXNET_SMOKE, SHAPES, get_config,
+                           reduced)
+from repro.core import (init_param_avg_state, make_param_avg_step,
+                        reshape_for_replicas, replica_spread)
+from repro.data import PrefetchLoader, synthetic
+from repro.models import alexnet as alexnet_mod
+from repro.optim import schedules
+from repro.optim.optimizers import get_optimizer
+
+
+def build_lm(args):
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg, n_layers=args.layers or 2,
+                      d_model=args.d_model or 256)
+    source = synthetic.markov_lm(cfg.vocab_size, args.batch, args.seq_len,
+                                 seed=args.seed)
+
+    def add_extras(b):
+        out = {"tokens": b["tokens"], "labels": b["labels"]}
+        bsz, s = b["tokens"].shape
+        if cfg.family == "encdec":
+            out["frames"] = np.random.default_rng(0).normal(
+                size=(bsz, max(s // 4, 8), cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            n = cfg.n_image_tokens
+            out["image_embeds"] = np.zeros((bsz, n, cfg.d_model), np.float32)
+            mask = np.zeros((bsz, s), bool)
+            mask[:, :n] = True
+            out["image_mask"] = mask
+        return out
+
+    def loss(params, batch):
+        return models.loss_fn(params, cfg, batch, attn_impl=args.attn_impl)
+
+    init = lambda r: models.init(r, cfg)  # noqa: E731
+    return cfg, init, loss, map(add_extras, source)
+
+
+def build_alexnet(args):
+    cfg = ALEXNET_SMOKE if (args.smoke or args.image_size < 128) else ALEXNET
+    source = synthetic.blob_images(cfg.n_classes, args.batch,
+                                   cfg.image_size + 8, seed=args.seed)
+    mean = synthetic.mean_image(
+        synthetic.blob_images(cfg.n_classes, args.batch, cfg.image_size + 8,
+                              seed=args.seed + 1), 2)
+    from repro.data.preprocess import make_image_preprocess
+    prep = make_image_preprocess(mean, cfg.image_size, seed=args.seed)
+
+    def loss(params, batch):
+        return alexnet_mod.loss_fn(params, cfg, batch["images"],
+                                   batch["labels"],
+                                   conv_backend=args.conv_backend)
+
+    init = lambda r: alexnet_mod.init(r, cfg)  # noqa: E731
+    return cfg, init, loss, map(prep, source)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="alexnet")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--replicas", type=int, default=None)
+    ap.add_argument("--strategy", default="all_reduce")
+    ap.add_argument("--sync-every", type=int, default=1)
+    ap.add_argument("--optimizer", default="sgd_momentum")
+    ap.add_argument("--schedule", default="constant")
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--conv-backend", default="xla")
+    ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    n_dev = jax.device_count()
+    n_rep = args.replicas or n_dev
+    assert args.batch % n_rep == 0, (args.batch, n_rep)
+
+    if args.arch == "alexnet":
+        cfg, init, loss, source = build_alexnet(args)
+    else:
+        cfg, init, loss, source = build_lm(args)
+
+    opt = get_optimizer(args.optimizer)
+    if args.schedule == "constant":
+        sched = schedules.constant(args.lr)
+    elif args.schedule == "wsd":
+        sched = schedules.wsd(args.lr, args.steps // 10,
+                              int(args.steps * 0.7), args.steps // 5)
+    else:
+        sched = schedules.cosine(args.lr, args.steps // 10, args.steps)
+
+    rng = jax.random.PRNGKey(args.seed)
+    state = init_param_avg_state(rng, init, opt, n_rep)
+    step_fn = jax.jit(make_param_avg_step(loss, opt, sched,
+                                          strategy=args.strategy,
+                                          sync_every=args.sync_every))
+
+    if n_dev > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((n_rep, n_dev // n_rep), ("data", "model"))
+        rep_sh = NamedSharding(mesh, P("data"))
+        state = jax.device_put(state, jax.tree.map(
+            lambda x: NamedSharding(mesh, P(*("data",) + (None,) *
+                                            (x.ndim - 1)))
+            if x.ndim > 0 else NamedSharding(mesh, P()), state))
+        put = lambda b: jax.device_put(b, jax.tree.map(  # noqa: E731
+            lambda x: rep_sh, b))
+    else:
+        put = jax.device_put
+
+    loader = PrefetchLoader(
+        map(lambda b: reshape_for_replicas(b, n_rep), source),
+        prefetch=args.prefetch, device_put=put)
+
+    print(f"arch={getattr(cfg, 'name', args.arch)} replicas={n_rep} "
+          f"devices={n_dev} strategy={args.strategy} "
+          f"sync_every={args.sync_every}")
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = next(loader)
+        state, loss_val = step_fn(state, batch)
+        if (i + 1) % args.log_every == 0 or i == 0:
+            lv = float(loss_val)
+            losses.append(lv)
+            print(f"step {i + 1:5d} loss {lv:.4f} "
+                  f"({(time.time() - t0) / (i + 1):.3f}s/step)", flush=True)
+        if args.ckpt_dir and args.ckpt_every and \
+                (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt_dir, i + 1, state)
+    spread = float(replica_spread(state.params))
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
+          f"final loss {losses[-1] if losses else float('nan'):.4f}; "
+          f"replica spread {spread:.2e}")
+    loader.close()
+
+
+if __name__ == "__main__":
+    main()

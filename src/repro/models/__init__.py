@@ -1,0 +1,70 @@
+"""Unified model API: init / loss / decode dispatch by config family.
+
+``model_inputs(cfg, shape)`` describes the input pytree for each
+(arch x shape) — the single source of truth shared by the data pipeline,
+the smoke tests and the dry-run's ShapeDtypeStruct specs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import alexnet, encdec, transformer
+from repro.models.layers import softmax_xent
+
+
+def init(rng, cfg):
+    if cfg.family == "encdec":
+        return encdec.init(rng, cfg)
+    return transformer.init(rng, cfg)
+
+
+def logits_fn(params, cfg, batch, attn_impl="auto", remat=False):
+    """batch: dict of arrays per model_inputs.  Returns (logits, aux)."""
+    if cfg.family == "encdec":
+        return encdec.forward(params, cfg, batch["frames"], batch["tokens"],
+                              attn_impl=attn_impl, remat=remat)
+    if cfg.family == "vlm":
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   image_embeds=batch["image_embeds"],
+                                   image_mask=batch["image_mask"],
+                                   attn_impl=attn_impl, remat=remat)
+    return transformer.forward(params, cfg, batch["tokens"],
+                               attn_impl=attn_impl, remat=remat)
+
+
+def loss_fn(params, cfg, batch, attn_impl="auto", remat=False):
+    """Next-token cross entropy (+ MoE aux)."""
+    logits, aux = logits_fn(params, cfg, batch, attn_impl, remat=remat)
+    labels = batch["labels"]
+    return softmax_xent(logits[:, :-1], labels[:, 1:]) + aux
+
+
+def init_decode_cache(cfg, batch: int, seq_len: int, enc_len: int = 1024):
+    if cfg.family == "encdec":
+        return encdec.init_decode_cache(cfg, batch, seq_len, enc_len)
+    return transformer.init_decode_cache(cfg, batch, seq_len)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cfg, cache, tokens, pos)
+    return transformer.decode_step(params, cfg, cache, tokens, pos)
+
+
+def model_inputs(cfg, batch: int, seq_len: int):
+    """Shape/dtype description of the training/prefill batch."""
+    spec = {"tokens": ((batch, seq_len), jnp.int32),
+            "labels": ((batch, seq_len), jnp.int32)}
+    if cfg.family == "encdec":
+        spec["frames"] = ((batch, max(seq_len // 4, 8), cfg.d_model),
+                          jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        n_img = cfg.n_image_tokens
+        spec["image_embeds"] = ((batch, n_img, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+        spec["image_mask"] = ((batch, seq_len), jnp.bool_)
+    return spec
+
+
+__all__ = ["alexnet", "encdec", "transformer", "init", "logits_fn", "loss_fn",
+           "init_decode_cache", "decode_step", "model_inputs"]

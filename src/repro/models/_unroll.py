@@ -1,0 +1,32 @@
+"""Scan-vs-unroll switch for layer stacks.
+
+XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+count, so the dry-run's scan-cost correction compiles small-depth UNROLLED
+variants to measure exact per-superblock costs.  Production code always
+scans (small HLO, fast compile); only the dry-run flips ``UNROLL`` on.
+"""
+from __future__ import annotations
+
+import jax
+
+UNROLL = False
+
+
+def scan_or_unroll(f, init, xs):
+    """Drop-in for jax.lax.scan(f, init, xs) honoring the UNROLL flag."""
+    if not UNROLL:
+        return jax.lax.scan(f, init, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda x: x[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and all(y is not None for y in jax.tree.leaves(ys[0])) and \
+            ys[0] is not None:
+        import jax.numpy as jnp
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,271 @@
+"""Attention: GQA/MQA, causal + sliding-window, KV cache with ring buffer.
+
+Three full-sequence implementations, selectable per call:
+  ``xla``      — masked-softmax einsum (materializes S×S scores; small S only)
+  ``chunked``  — flash-style online-softmax scan over KV blocks (default for
+                 long sequences; bounded memory, pure jnp, differentiable)
+  ``flash``    — Pallas TPU kernel (``repro.kernels.flash_attention``);
+                 interpret-mode on CPU hosts
+
+Decode uses a ring-buffer cache of capacity ``min(seq_len, window)`` so SWA
+archs keep an O(window) working set at 512k positions.  Keys are stored
+pre-RoPE'd (absolute positions), so wrap-around never invalidates them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rope_freqs
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, hq * hd, dtype).reshape(d, hq, hd),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype).reshape(d, hkv, hd),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype).reshape(d, hkv, hd),
+        "wo": dense_init(ks[3], hq * hd, d, dtype).reshape(hq, hd, d),
+    }
+
+
+def _qkv(params, cfg, x, xc=None):
+    """Project to q (from x) and k,v (from xc or x)."""
+    xc = x if xc is None else xc
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", xc, params["wk"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", xc, params["wv"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return q, k, v
+
+
+def _out(params, cfg, o):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(o.dtype),
+                      preferred_element_type=jnp.float32).astype(o.dtype)
+
+
+def _group(q, n_kv):
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def _mask(q_pos, k_pos, window, causal: bool):
+    """(..., Sq, Sk) boolean validity mask."""
+    m = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _sdpa_xla(q, k, v, mask, scale):
+    """q (B,S,Hkv,G,hd), k/v (B,Sk,Hkv,hd), mask (Sq,Sk)."""
+    s = jnp.einsum("bqhgk,bshk->bhgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqs,bshk->bqhgk", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, window, causal, scale,
+                  q_block: int = 256, kv_block: int = 256):
+    """Flash-style online softmax: scan over q blocks (outer) and kv blocks
+    (inner carry of (m, l, acc)).  Never materializes S×S."""
+    b, sq, h, g, hd = q.shape
+    sk = k.shape[1]
+    nq = -(-sq // q_block)
+    nk = -(-sk // kv_block)
+    pq, pk = nq * q_block - sq, nk * kv_block - sk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, pq), constant_values=-(10 ** 9))
+    kpos = jnp.pad(k_pos, (0, pk), constant_values=10 ** 9)
+    qb = qp.reshape(b, nq, q_block, h, g, hd)
+    kb = kp.reshape(b, nk, kv_block, h, hd)
+    vb = vp.reshape(b, nk, kv_block, h, hd)
+    qposb = qpos.reshape(nq, q_block)
+    kposb = kpos.reshape(nk, kv_block)
+
+    def q_step(_, qi):
+        qcur, qpcur = qi                       # (b, qb, h, g, hd), (qb,)
+        m0 = jnp.full((b, h, g, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, q_block, h, g, hd), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kcur, vcur, kpcur = ki
+            s = jnp.einsum("bqhgk,bshk->bhgqs", qcur, kcur,
+                           preferred_element_type=jnp.float32) * scale
+            valid = _mask(qpcur, kpcur, window, causal)
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bhgqs,bshk->bqhgk", p.astype(qcur.dtype), vcur,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), kposb))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qb.transpose(1, 0, 2, 3, 4, 5), qposb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_block, h, g, hd)
+    return out[:, :sq]
+
+
+def _sdpa_qloop(q, k, v, window, causal, scale, max_score_bytes=2 ** 28):
+    """Static python loop over query chunks; per chunk the KV range is a
+    STATIC slice [lo, hi) derived from causality/window — so HLO flops are
+    near-exact (no masked-out wasted compute beyond chunk granularity) and
+    the score temp is bounded.  Used by the dry-run lowering."""
+    b, s, h, g, hd = q.shape
+    sk = k.shape[1]
+    qc = min(s, max(256, max_score_bytes // max(sk * 4, 1)))
+    n_chunks = -(-s // qc)
+    outs = []
+    for i in range(n_chunks):
+        lo_q, hi_q = i * qc, min((i + 1) * qc, s)
+        hi_k = hi_q if causal else sk
+        lo_k = 0
+        if window is not None:
+            lo_k = max(0, lo_q - window + 1)
+        qch = q[:, lo_q:hi_q]
+        kch = k[:, lo_k:hi_k]
+        vch = v[:, lo_k:hi_k]
+        mask = _mask(jnp.arange(lo_q, hi_q), jnp.arange(lo_k, hi_k),
+                     window, causal)
+        outs.append(_sdpa_xla(qch, kch, vch, mask, scale))
+    return jnp.concatenate(outs, axis=1)
+
+
+def full_attention(params, cfg, x, *, xc=None, causal=True, rope=True,
+                   window=None, impl="auto", q_offset=0):
+    """Full-sequence attention.  x (B,S,d); xc = cross-attention memory."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, xc)
+    sk = k.shape[1]
+    q_pos = jnp.arange(s) + q_offset
+    k_pos = jnp.arange(sk) + (0 if xc is None else 0)
+    if rope and xc is None:
+        inv = rope_freqs(cfg)
+        q = apply_rope(q, q_pos, inv)
+        k = apply_rope(k, k_pos, inv)
+    qg = _group(q, cfg.n_kv_heads)
+    scale = cfg.head_dim ** -0.5
+    if impl == "auto":
+        impl = "chunked" if max(s, sk) > 2048 else "xla"
+    if impl == "xla":
+        mask = _mask(q_pos, k_pos, window, causal)
+        o = _sdpa_xla(qg, k, v, mask, scale)
+    elif impl == "qloop":
+        o = _sdpa_qloop(qg, k, v, window, causal, scale)
+    elif impl == "chunked":
+        o = _sdpa_chunked(qg, k, v, q_pos, k_pos, window, causal, scale)
+    elif impl == "flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+        o = flash_ops.flash_attention(qg, k, v, causal=causal, window=window,
+                                      scale=scale)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    o = o.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    return _out(params, cfg, o)
+
+
+# ------------------------------------------------------------- KV cache ----
+
+def cache_capacity(cfg, seq_len: int, window=None) -> int:
+    w = window if window is not None else cfg.sliding_window
+    return min(seq_len, w) if w is not None else seq_len
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype):
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cross_decode(params, cfg, x, cross_cache):
+    """Cross-attention for one decode token.  x (B,1,d); cache K/V
+    (B,T_enc,Hkv,hd) precomputed from the encoder memory.  No RoPE, no mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    qg = _group(q, cfg.n_kv_heads)
+    k, v = cross_cache["k"], cross_cache["v"]
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k.astype(x.dtype),
+                   preferred_element_type=jnp.float32) * cfg.head_dim ** -0.5
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", p, v.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(x.shape[0], 1, cfg.n_heads, cfg.head_dim)
+    return _out(params, cfg, o)
+
+
+def fill_cache(params, cfg, x, cache, *, window=None, rope=True):
+    """Fill a ring-buffer cache from a full prefix x (B,S,d).
+
+    Writes the last ``cap`` positions' K/V into their ring slots
+    (slot = position % cap), matching what S decode_attention steps would
+    have produced.
+    """
+    b, s, _ = x.shape
+    cap = cache["k"].shape[1]
+    _, k, v = _qkv(params, cfg, x)
+    if rope:
+        inv = rope_freqs(cfg)
+        k = apply_rope(k, jnp.arange(s), inv)
+    take = min(cap, s)
+    positions = jnp.arange(s - take, s)
+    slots = positions % cap
+    k_new = cache["k"].at[:, slots].set(k[:, s - take:].astype(cache["k"].dtype))
+    v_new = cache["v"].at[:, slots].set(v[:, s - take:].astype(cache["v"].dtype))
+    return {"k": k_new, "v": v_new}
+
+
+def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True):
+    """One-token decode.  x (B,1,d); cache {k,v} (B,W,Hkv,hd); pos scalar.
+
+    Writes the new K/V at slot ``pos % W`` (ring buffer), attends over valid
+    slots.  Returns (out (B,1,d), new_cache).
+    """
+    q, k_new, v_new = _qkv(params, cfg, x)
+    cap = cache["k"].shape[1]
+    if rope:
+        inv = rope_freqs(cfg)
+        ppos = jnp.full((1,), pos)
+        q = apply_rope(q, ppos, inv)
+        k_new = apply_rope(k_new, ppos, inv)
+    slot = pos % cap
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    # slot i holds absolute position pos - ((pos - i) mod W); valid iff >= 0
+    # (and automatically within the window, since the ring holds the last W).
+    idx = jnp.arange(cap)
+    slot_pos = pos - jnp.mod(pos - idx, cap)
+    valid = slot_pos >= 0
+    if window is not None and window < cap:
+        valid &= slot_pos > pos - window
+    qg = _group(q, cfg.n_kv_heads)                    # (B,1,Hkv,G,hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k,
+                   preferred_element_type=jnp.float32) * cfg.head_dim ** -0.5
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", p, v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(x.shape[0], 1, cfg.n_heads, cfg.head_dim)
+    return _out(params, cfg, o), {"k": k, "v": v}

@@ -1,0 +1,137 @@
+"""Encoder-decoder backbone (seamless-m4t-medium assignment).
+
+The audio frontend is a STUB per the assignment carve-out: the encoder
+consumes precomputed frame embeddings (B, T_enc, d_model) directly — the
+mel-spectrogram + conformer feature extractor is not part of the backbone.
+
+Encoder: bidirectional dense blocks.  Decoder: causal self-attention +
+cross-attention over the encoder memory + MLP.  Both stacks scan over
+layers.  Decode carries a self-attention ring cache and precomputed cross
+K/V (built once from the encoder output).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models._unroll import scan_or_unroll
+
+from repro.models import attention as attn
+from repro.models.layers import (embed_apply, embed_init, mlp_apply, mlp_init,
+                                 norm_apply, norm_init, unembed_apply)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init(rng, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 6)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": norm_init(cfg, dt), "attn": attn.attn_init(k1, cfg, dt),
+                "norm2": norm_init(cfg, dt), "ffn": mlp_init(k2, cfg, dt)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": norm_init(cfg, dt), "self_attn": attn.attn_init(k1, cfg, dt),
+                "norm_x": norm_init(cfg, dt), "cross_attn": attn.attn_init(k2, cfg, dt),
+                "norm2": norm_init(cfg, dt), "ffn": mlp_init(k3, cfg, dt)}
+
+    return {
+        "embed": embed_init(ks[0], cfg, dt),
+        "enc_blocks": jax.vmap(enc_block)(jax.random.split(ks[1], cfg.n_enc_layers)),
+        "enc_norm": norm_init(cfg, dt),
+        "dec_blocks": jax.vmap(dec_block)(jax.random.split(ks[2], cfg.n_layers)),
+        "final_norm": norm_init(cfg, dt),
+    }
+
+
+def encode(params, cfg, frames, attn_impl="auto", remat=False):
+    """frames (B, T_enc, d_model) stub embeddings -> encoder memory."""
+    def block(h, bp):
+        x = norm_apply(bp["norm1"], cfg, h)
+        h = h + attn.full_attention(bp["attn"], cfg, x, causal=False,
+                                    impl=attn_impl)
+        x = norm_apply(bp["norm2"], cfg, h)
+        return h + mlp_apply(bp["ffn"], cfg, x), None
+
+    if remat:
+        block = jax.checkpoint(block)
+    h, _ = scan_or_unroll(block, frames, params["enc_blocks"])
+    return norm_apply(params["enc_norm"], cfg, h)
+
+
+def _dec_block_seq(bp, cfg, h, memory, attn_impl):
+    x = norm_apply(bp["norm1"], cfg, h)
+    h = h + attn.full_attention(bp["self_attn"], cfg, x, causal=True,
+                                impl=attn_impl)
+    x = norm_apply(bp["norm_x"], cfg, h)
+    h = h + attn.full_attention(bp["cross_attn"], cfg, x, xc=memory,
+                                causal=False, rope=False, impl=attn_impl)
+    x = norm_apply(bp["norm2"], cfg, h)
+    return h + mlp_apply(bp["ffn"], cfg, x)
+
+
+def forward(params, cfg, frames, dec_tokens, attn_impl="auto", remat=False):
+    """Returns (logits (B,S,V) f32, aux=0)."""
+    memory = encode(params, cfg, frames, attn_impl, remat=remat)
+    h = embed_apply(params["embed"], cfg, dec_tokens)
+
+    def block(h, bp):
+        return _dec_block_seq(bp, cfg, h, memory, attn_impl), None
+
+    if remat:
+        block = jax.checkpoint(block)
+    h, _ = scan_or_unroll(block, h, params["dec_blocks"])
+    h = norm_apply(params["final_norm"], cfg, h)
+    return unembed_apply(params["embed"], cfg, h), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- decode ----
+
+def init_decode_cache(cfg, batch: int, seq_len: int, enc_len: int):
+    dt = _dtype(cfg)
+    l = cfg.n_layers
+
+    def stack(x):
+        return jnp.broadcast_to(x[None], (l,) + x.shape).copy()
+
+    self_c = attn.init_cache(cfg, batch, attn.cache_capacity(cfg, seq_len), dt)
+    cross = {"k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt),
+             "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt)}
+    return {"self": jax.tree.map(stack, self_c),
+            "cross": jax.tree.map(stack, cross)}
+
+
+def build_cross_cache(params, cfg, memory):
+    """Precompute per-layer cross-attention K/V from the encoder memory."""
+    def one(bp):
+        _, k, v = attn._qkv(bp["cross_attn"], cfg, memory)
+        return {"k": k, "v": v}
+
+    return jax.vmap(one)(params["dec_blocks"])
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """tokens (B,1); cache {'self': stacked ring, 'cross': stacked K/V}."""
+    h = embed_apply(params["embed"], cfg, tokens)
+
+    def block(h, xs):
+        bp, sc, cc = xs
+        x = norm_apply(bp["norm1"], cfg, h)
+        y, new_sc = attn.decode_attention(bp["self_attn"], cfg, x, sc, pos)
+        h = h + y
+        x = norm_apply(bp["norm_x"], cfg, h)
+        h = h + attn.cross_decode(bp["cross_attn"], cfg, x, cc)
+        x = norm_apply(bp["norm2"], cfg, h)
+        return h + mlp_apply(bp["ffn"], cfg, x), new_sc
+
+    h, new_self = scan_or_unroll(block, h,
+                               (params["dec_blocks"], cache["self"],
+                                cache["cross"]))
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_apply(params["embed"], cfg, h)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,130 @@
+"""Shared layer primitives: norms, MLPs, embeddings, RoPE.
+
+Functional style throughout: ``*_init(rng, ...) -> params`` and pure apply
+functions.  Params are plain dicts (pytrees); layer stacks carry a leading
+scan axis added by the model modules.  Matmuls accumulate in float32
+(``preferred_element_type``) and cast back to the param dtype, mirroring MXU
+behaviour; norms and softmax run in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def matmul(x, w):
+    y = jnp.matmul(x, w.astype(x.dtype), preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def norm_init(cfg, dtype):
+    if cfg.norm == "np_ln":        # non-parametric (olmo): no learnables
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}          # rmsnorm
+
+
+def norm_apply(params, cfg, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm in ("layernorm", "np_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:                                                      # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs ----
+
+def mlp_init(rng, cfg, dtype, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_in": dense_init(ks[0], d, f, dtype),
+                "w_gate": dense_init(ks[1], d, f, dtype),
+                "w_out": dense_init(ks[2], f, d, dtype)}
+    return {"w_in": dense_init(ks[0], d, f, dtype),
+            "w_out": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_apply(params, cfg, x):
+    h = matmul(x, params["w_in"])
+    if cfg.mlp == "swiglu":
+        h = h * jax.nn.silu(matmul(x, params["w_gate"]))
+    elif cfg.mlp == "geglu":
+        h = h * jax.nn.gelu(matmul(x, params["w_gate"]))
+    else:
+        h = jax.nn.gelu(h)
+    return matmul(h, params["w_out"])
+
+
+# ----------------------------------------------------------- embeddings ----
+
+def embed_init(rng, cfg, dtype):
+    v = getattr(cfg, "padded_vocab", cfg.vocab_size)
+    p = {"tok": (jax.random.normal(rng, (v, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(jax.random.fold_in(rng, 1),
+                                  cfg.d_model, v, dtype)
+    return p
+
+
+def embed_apply(params, cfg, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed_apply(params, cfg, h):
+    if cfg.tie_embeddings:
+        w = params["tok"].astype(h.dtype)          # (V, d)
+        logits = jnp.matmul(h, w.T, preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.matmul(h, params["lm_head"].astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+    if getattr(cfg, "padded_vocab", cfg.vocab_size) != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]      # mask padded rows
+    return logits  # float32
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+def rope_freqs(cfg, head_dim: int | None = None):
+    hd = head_dim or cfg.head_dim
+    exponent = jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    return 1.0 / (cfg.rope_theta ** exponent)      # (hd/2,)
+
+
+def apply_rope(x, positions, inv_freq):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- loss ----
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross-entropy; logits float32 (B, S, V), labels int (B, S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

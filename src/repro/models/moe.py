@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded sort-based
+dispatch (GShard semantics, MaxText-style mechanics).
+
+One-hot dispatch einsums cost O(S·E·C·d) FLOPs — for mixtral-scale configs
+that is >100x the expert FFN itself and would poison the roofline.  We
+instead sort token-assignments by expert id, compute each token's rank within
+its expert (position-in-expert), scatter into a static (E, C, d) buffer
+(overflow tokens dropped, GShard-style), run batched expert matmuls, and
+gather back weighted by the router gate.  FLOPs = capacity_factor x active.
+
+Two dispatch scopes (``MoEConfig.dispatch``):
+  ``flat``     one sort over all B*S tokens — maximum balance, but under
+               GSPMD the sort/scatter crosses the whole mesh (collective-
+               heavy; the baseline the paper-era GShard design implies)
+  ``rowwise``  vmap the dispatch over the batch dim — routing stays local
+               to each batch shard, trading a little capacity slack for
+               locality (beyond-paper perf variant; see EXPERIMENTS §Perf)
+
+Aux load-balance loss is the Switch Transformer form: E * Σ_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, matmul, mlp_apply, mlp_init
+
+
+def moe_init(rng, cfg, dtype):
+    d, f, m = cfg.d_model, cfg.d_ff, cfg.moe
+    ks = jax.random.split(rng, 5)
+    e = m.n_experts
+    p = {
+        "router": dense_init(ks[0], d, e, dtype),
+        "w_in": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                 * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e, f, d), jnp.float32)
+                  * f ** -0.5).astype(dtype),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f), jnp.float32)
+                       * d ** -0.5).astype(dtype)
+    if m.shared_expert:
+        p["shared"] = mlp_init(ks[4], cfg, dtype)
+    return p
+
+
+def _buffer_constraint(x, bspec):
+    """GSPMD hint: first len(bspec) dims per bspec, rest unsharded.  Keeping
+    the hidden (f) dim of intermediates UNSHARDED forces XLA to all-gather
+    the (small) FSDP'd weight shards instead of partial-sum all-reducing the
+    (huge) activation buffers."""
+    if bspec is None:
+        return x
+    from jax.sharding import PartitionSpec as _P
+    spec = _P(*(tuple(bspec) + (None,) * (x.ndim - len(bspec))))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _expert_ffn(p, cfg, x, bspec=None):
+    """x (E, C, d) -> (E, C, d) via batched expert matmuls."""
+    h = jnp.einsum("ecd,edf->ecf", x, p["w_in"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", x, p["w_gate"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        h = h * jax.nn.silu(g)
+    elif cfg.mlp == "geglu":
+        g = jnp.einsum("ecd,edf->ecf", x, p["w_gate"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        h = h * jax.nn.gelu(g)
+    else:
+        h = jax.nn.gelu(h)
+    # NOTE: constraining h to f-unsharded here was tried (EXPERIMENTS §Perf
+    # B5) and REFUTED — it replicates the C dim across 'data' (5x compute).
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _dispatch_ffn(p, cfg, xt, cf):
+    """Sort-based dispatch over a flat token block xt (T, d).
+
+    Returns (out (T, d), aux scalar)."""
+    m = cfg.moe
+    t, d = xt.shape
+    e, k = m.n_experts, m.top_k
+
+    logits = matmul(xt, p["router"]).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)                      # (T, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load balance aux: E * Σ_e (fraction routed) * (mean prob)
+    f_e = jnp.mean(jax.nn.one_hot(eid[:, 0], e, dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e) * m.router_aux_coef
+
+    cap = int(max(1, min(t * k, round(t * k * cf / e))))
+
+    flat_e = eid.reshape(t * k)                              # (TK,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)                  # token id per slot
+    order = jnp.argsort(flat_e)                              # stable
+    se = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts                     # exclusive prefix
+    pos = jnp.arange(t * k) - starts[se]                     # rank in expert
+    keep = pos < cap
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    src = xt[flat_tok[order]]                                # (TK, d)
+    # pos >= cap is out-of-bounds on axis 1 => dropped by mode="drop"
+    buf = buf.at[se, pos].set(src, mode="drop")
+
+    bspec = getattr(m, "buffer_sharding", None)
+    buf = _buffer_constraint(buf, bspec)
+    out_buf = _expert_ffn(p, cfg, buf, bspec)                # (E, C, d)
+    out_buf = _buffer_constraint(out_buf, bspec)
+
+    vals = out_buf[se, jnp.clip(pos, 0, cap - 1)]            # (TK, d)
+    vals = jnp.where(keep[:, None], vals, 0.0)
+    gflat = gate.reshape(t * k)[order]
+    out = jnp.zeros((t, d), xt.dtype).at[flat_tok[order]].add(
+        vals * gflat[:, None].astype(xt.dtype))
+    return out, aux
+
+
+def moe_apply(p, cfg, x, capacity_factor: float | None = None):
+    """x (B,S,d).  Returns (out (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    cf = m.capacity_factor if capacity_factor is None else capacity_factor
+    b, s, d = x.shape
+    if getattr(m, "dispatch", "flat") == "rowwise":
+        out, aux = jax.vmap(lambda xr: _dispatch_ffn(p, cfg, xr, cf))(x)
+        aux = jnp.mean(aux)
+    else:
+        out, aux = _dispatch_ffn(p, cfg, x.reshape(b * s, d), cf)
+        out = out.reshape(b, s, d)
+    if m.shared_expert:
+        out = out + mlp_apply(p["shared"], cfg, x.reshape(b * s, d)
+                              ).reshape(b, s, d)
+    return out, aux

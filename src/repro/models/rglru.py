@@ -1,0 +1,121 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Block: two linear branches from the normed input; branch 1 goes through a
+causal depthwise conv (width 4) and the RG-LRU; branch 2 is a GeLU gate;
+their product is projected back to d_model.
+
+RG-LRU per channel:
+    r_t = sigmoid(block_diag_A x_t)          recurrence gate
+    i_t = sigmoid(block_diag_I x_t)          input gate
+    log a_t = -c * softplus(Lambda) * r_t    (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form uses ``jax.lax.associative_scan`` on the (a, b) pairs —
+the TPU-native mapping of the paper-pool's linear-recurrence scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, matmul
+
+CONV_WIDTH = 4
+N_DIAG_BLOCKS = 16
+C_COEF = 8.0
+
+
+def rglru_block_init(rng, cfg, dtype):
+    d = cfg.d_model
+    d_rnn = cfg.d_model
+    bs = d_rnn // N_DIAG_BLOCKS
+    ks = jax.random.split(rng, 8)
+    # Lambda init so a^c in [0.9, 0.999] at r=1 (paper's init range)
+    lam = jax.random.uniform(ks[5], (d_rnn,), jnp.float32, 0.3, 0.9)
+    return {
+        "wx": dense_init(ks[0], d, d_rnn, dtype),
+        "wg": dense_init(ks[1], d, d_rnn, dtype),
+        "wo": dense_init(ks[2], d_rnn, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (CONV_WIDTH, d_rnn), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "gate_a": (jax.random.normal(ks[4], (N_DIAG_BLOCKS, bs, bs),
+                                     jnp.float32) * bs ** -0.5).astype(dtype),
+        "gate_i": (jax.random.normal(ks[6], (N_DIAG_BLOCKS, bs, bs),
+                                     jnp.float32) * bs ** -0.5).astype(dtype),
+        "lambda": lam.astype(dtype),
+    }
+
+
+def _block_diag(x, w):
+    """x (..., d_rnn) @ block-diagonal w (NB, bs, bs)."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xb, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y.reshape(x.shape)
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(_block_diag(x, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(x, p["gate_i"]).astype(jnp.float32))
+    log_a = -C_COEF * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) computed stably via log1p(-exp(2 log a))
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    bt = b_scale * (i * x.astype(jnp.float32))
+    return a, bt
+
+
+def _conv1d_causal(p, x, state=None):
+    """Depthwise causal conv, width 4.  x (B,S,d); state (B,3,d) history."""
+    b, s, d = x.shape
+    pad = (jnp.zeros((b, CONV_WIDTH - 1, d), x.dtype) if state is None
+           else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    y = sum(xp[:, i:i + s] * w[i] for i in range(CONV_WIDTH))
+    new_state = xp[:, -(CONV_WIDTH - 1):]
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_seq(p, cfg, x, cache=None):
+    """x (B,S,d).  Returns (out (B,S,d), new_cache)."""
+    xb = matmul(x, p["wx"])
+    gate = jax.nn.gelu(matmul(x, p["wg"]))
+    conv_state = None if cache is None else cache["conv"]
+    h0 = None if cache is None else cache["h"]
+    xc, conv_state = _conv1d_causal(p, xb, conv_state)
+    a, bt = _gates(p, xc)                        # (B,S,d) fp32
+    if h0 is not None:
+        # fold the carried state into the first step: b_1 += a_1 * h_0
+        bt = bt.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
+    out = matmul((h.astype(x.dtype) * gate), p["wo"])
+    new_cache = {"conv": conv_state.astype(x.dtype), "h": h[:, -1].astype(jnp.float32)}
+    return out, new_cache
+
+
+def rglru_decode(p, cfg, x, cache):
+    """x (B,d) single step."""
+    xb = matmul(x, p["wx"])
+    gate = jax.nn.gelu(matmul(x, p["wg"]))
+    xp = jnp.concatenate([cache["conv"].astype(x.dtype), xb[:, None]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xc = sum(xp[:, i] * w[i] for i in range(CONV_WIDTH)) + p["conv_b"].astype(x.dtype)
+    a, bt = _gates(p, xc)
+    h = a * cache["h"] + bt
+    out = matmul((h.astype(x.dtype) * gate), p["wo"])
+    return out, {"conv": xp[:, 1:], "h": h}
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    d_rnn = cfg.d_model
+    return {"conv": jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), dtype),
+            "h": jnp.zeros((batch, d_rnn), jnp.float32)}

@@ -1,0 +1,153 @@
+"""RWKV6 (Finch) block: data-dependent token-shift time-mix + channel-mix.
+
+Faithful to arXiv:2404.05892 §3: ddlerp token shift with a shared low-rank
+adapter producing per-projection interpolation weights; data-dependent decay
+``w_t = exp(-exp(z_t))`` through its own low-rank adapter; per-head bonus
+``u``; GroupNorm over heads on the WKV output.  The recurrence itself lives
+in ``repro.kernels.rwkv6``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ops as wkv_ops
+from repro.models.layers import dense_init, matmul
+
+DDLERP_RANK = 32
+DECAY_RANK = 64
+
+
+def rwkv_block_init(rng, cfg, dtype):
+    d, h, hd, f = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
+    ks = jax.random.split(rng, 16)
+    p = {
+        # time-mix
+        "tm": {
+            "mu_base": jnp.zeros((d,), dtype),
+            "mu_wkvrg": jnp.zeros((5, d), dtype),
+            "lora_a": dense_init(ks[0], d, 5 * DDLERP_RANK, dtype, scale=0.01),
+            "lora_b": (jax.random.normal(ks[1], (5, DDLERP_RANK, d), jnp.float32)
+                       * 0.01).astype(dtype),
+            "wr": dense_init(ks[2], d, d, dtype),
+            "wk": dense_init(ks[3], d, d, dtype),
+            "wv": dense_init(ks[4], d, d, dtype),
+            "wg": dense_init(ks[5], d, d, dtype),
+            "wo": dense_init(ks[6], d, d, dtype),
+            "decay_base": jnp.full((d,), -4.0, dtype),   # w ≈ exp(-e^-4) ≈ .982
+            "decay_a": dense_init(ks[7], d, DECAY_RANK, dtype, scale=0.01),
+            "decay_b": dense_init(ks[8], DECAY_RANK, d, dtype, scale=0.01),
+            "u": (jax.random.normal(ks[9], (h, hd), jnp.float32) * 0.5).astype(dtype),
+            "ln_x_scale": jnp.ones((d,), dtype),
+        },
+        # channel-mix
+        "cm": {
+            "mu_k": jnp.zeros((d,), dtype),
+            "mu_r": jnp.zeros((d,), dtype),
+            "wk": dense_init(ks[10], d, f, dtype),
+            "wv": dense_init(ks[11], f, d, dtype),
+            "wr": dense_init(ks[12], d, d, dtype),
+        },
+    }
+    return p
+
+
+def _ddlerp(tm, x, x_prev):
+    """Data-dependent lerp producing the 5 shifted inputs (w,k,v,r,g)."""
+    xx = x_prev - x
+    xxx = x + xx * tm["mu_base"].astype(x.dtype)
+    lo = jnp.tanh(matmul(xxx, tm["lora_a"]))                     # (..., 5R)
+    lo = lo.reshape(lo.shape[:-1] + (5, DDLERP_RANK))
+    delta = jnp.einsum("...nr,nrd->...nd", lo, tm["lora_b"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    mu = tm["mu_wkvrg"].astype(x.dtype) + delta                  # (..., 5, d)
+    return x[..., None, :] + xx[..., None, :] * mu               # (..., 5, d)
+
+
+def _decay(tm, xw):
+    z = tm["decay_base"].astype(jnp.float32) + matmul(
+        jnp.tanh(matmul(xw, tm["decay_a"])), tm["decay_b"]).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.minimum(z, 8.0)))                # (0,1)
+
+
+def _groupnorm_heads(x, scale, h, eps=64e-5):
+    """GroupNorm with one group per head over the flattened (H*hd) output."""
+    b_shape = x.shape[:-1]
+    xh = x.reshape(b_shape + (h, -1)).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(b_shape + (-1,)) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None, impl="chunked"):
+    """x (B,S,d).  Returns (out, (last_x, final_wkv_state))."""
+    tm = p["tm"]
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    prev = jnp.zeros((b, 1, d), x.dtype) if shift_state is None else shift_state[:, None]
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xs = _ddlerp(tm, x, x_prev)                                   # (B,S,5,d)
+    xw, xk, xv, xr, xg = (xs[:, :, i] for i in range(5))
+    w = _decay(tm, xw).reshape(b, s, h, hd)
+    r = matmul(xr, tm["wr"]).reshape(b, s, h, hd)
+    k = matmul(xk, tm["wk"]).reshape(b, s, h, hd)
+    v = matmul(xv, tm["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(matmul(xg, tm["wg"]))
+    y, s_fin = wkv_ops.wkv(r, k, v, w, tm["u"].astype(jnp.float32),
+                           wkv_state, impl=impl, chunk=min(64, s))
+    y = y.astype(x.dtype).reshape(b, s, d)
+    y = _groupnorm_heads(y, tm["ln_x_scale"], h) * g
+    return matmul(y, tm["wo"]), (x[:, -1], s_fin)
+
+
+def time_mix_decode(p, cfg, x, shift_state, wkv_state):
+    """x (B,d) single token."""
+    tm = p["tm"]
+    b, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xs = _ddlerp(tm, x, shift_state)                              # (B,5,d)
+    xw, xk, xv, xr, xg = (xs[:, i] for i in range(5))
+    w = _decay(tm, xw).reshape(b, h, hd)
+    r = matmul(xr, tm["wr"]).reshape(b, h, hd)
+    k = matmul(xk, tm["wk"]).reshape(b, h, hd)
+    v = matmul(xv, tm["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(matmul(xg, tm["wg"]))
+    y, s_new = wkv_ops.wkv_decode(r, k, v, w, tm["u"].astype(jnp.float32),
+                                  wkv_state)
+    y = y.astype(x.dtype).reshape(b, d)
+    y = _groupnorm_heads(y, tm["ln_x_scale"], h) * g
+    return matmul(y, tm["wo"]), (x, s_new)
+
+
+def channel_mix_seq(p, cfg, x, shift_state=None):
+    cm = p["cm"]
+    b, s, d = x.shape
+    prev = jnp.zeros((b, 1, d), x.dtype) if shift_state is None else shift_state[:, None]
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * cm["mu_k"].astype(x.dtype)
+    xr = x + xx * cm["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(matmul(xk, cm["wk"])))
+    out = jax.nn.sigmoid(matmul(xr, cm["wr"])) * matmul(kk, cm["wv"])
+    return out, x[:, -1]
+
+
+def channel_mix_decode(p, cfg, x, shift_state):
+    cm = p["cm"]
+    xx = shift_state - x
+    xk = x + xx * cm["mu_k"].astype(x.dtype)
+    xr = x + xx * cm["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(matmul(xk, cm["wk"])))
+    out = jax.nn.sigmoid(matmul(xr, cm["wr"])) * matmul(kk, cm["wv"])
+    return out, x
+
+
+def init_rwkv_cache(cfg, batch: int, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }

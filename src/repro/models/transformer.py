@@ -1,0 +1,302 @@
+"""Decoder-only transformer composer covering dense / moe / ssm / hybrid /
+vlm families through a per-layer *pattern* of block kinds.
+
+Layers are grouped into superblocks of ``len(pattern)`` and scanned with
+``jax.lax.scan`` (params stacked per pattern position) — this keeps the HLO
+size O(pattern) instead of O(n_layers), which is what makes 40-layer configs
+lower in reasonable time.  A remainder of ``n_layers % len(pattern)`` layers
+is applied unstacked.
+
+Block kinds:
+  ``dense``  attention (full or SWA per config) + dense MLP
+  ``moe``    attention + MoE FFN
+  ``attn``   local (sliding-window) attention + MLP       [hybrid]
+  ``rec``    RG-LRU recurrent block + MLP                 [hybrid]
+  ``rwkv``   RWKV6 time-mix + channel-mix                 [ssm]
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models._unroll import scan_or_unroll
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (embed_apply, embed_init, mlp_apply, mlp_init,
+                                 norm_apply, norm_init, unembed_apply)
+
+
+def block_kinds(cfg) -> Tuple[str, ...]:
+    if cfg.family == "hybrid":
+        return tuple(cfg.layer_pattern or ("rec", "rec", "attn"))
+    if cfg.family == "moe":
+        k = cfg.moe.every_k
+        return ("dense",) * (k - 1) + ("moe",) if k > 1 else ("moe",)
+    if cfg.family == "ssm":
+        return ("rwkv",)
+    return ("dense",)      # dense, vlm
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _split(cfg):
+    pattern = block_kinds(cfg)
+    np_, rem = divmod(cfg.n_layers, len(pattern))
+    return pattern, np_, rem
+
+
+# ------------------------------------------------------------------ init ----
+
+def block_init(rng, cfg, kind: str):
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    if kind == "rwkv":
+        p = rwkv_mod.rwkv_block_init(ks[0], cfg, dt)
+        p["norm1"] = norm_init(cfg, dt)
+        p["norm2"] = norm_init(cfg, dt)
+        return p
+    p = {"norm1": norm_init(cfg, dt), "norm2": norm_init(cfg, dt)}
+    if kind == "rec":
+        p["mix"] = rglru_mod.rglru_block_init(ks[0], cfg, dt)
+    else:
+        p["attn"] = attn.attn_init(ks[0], cfg, dt)
+    if kind == "moe":
+        p["ffn"] = moe_mod.moe_init(ks[1], cfg, dt)
+    else:
+        p["ffn"] = mlp_init(ks[1], cfg, dt)
+    return p
+
+
+def init(rng, cfg):
+    pattern, np_, rem = _split(cfg)
+    ks = jax.random.split(rng, 4)
+    dt = _dtype(cfg)
+    params = {"embed": embed_init(ks[0], cfg, dt),
+              "final_norm": norm_init(cfg, dt)}
+    blocks = []
+    if np_ > 0:
+        for pi, kind in enumerate(pattern):
+            krng = jax.random.split(jax.random.fold_in(ks[1], pi), np_)
+            blocks.append(jax.vmap(lambda k, kd=kind: block_init(k, cfg, kd))(krng))
+    params["blocks"] = tuple(blocks)
+    params["rem_blocks"] = tuple(
+        block_init(jax.random.fold_in(ks[2], i), cfg, pattern[i])
+        for i in range(rem))
+    return params
+
+
+# --------------------------------------------------------------- forward ----
+
+def _window(cfg, kind):
+    # hybrid "attn" layers are local by construction; dense/moe layers are
+    # windowed only when the config says so (mixtral/llama4/gemma-swa)
+    return cfg.sliding_window
+
+
+def block_apply_seq(p, cfg, kind, h, *, attn_impl="auto", cache=None):
+    """Full-sequence block.  Returns (h, aux, new_cache).
+
+    ``cache`` (optional) is this block's decode-cache; when given, carry
+    state (rwkv/rec) resumes from it and the returned new_cache reflects the
+    processed sequence (attention blocks fill their ring buffer).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        y, (tm_shift, wkv) = rwkv_mod.time_mix_seq(
+            p, cfg, norm_apply(p["norm1"], cfg, h),
+            None if cache is None else cache["tm_shift"],
+            None if cache is None else cache["wkv"])
+        h = h + y
+        y, cm_shift = rwkv_mod.channel_mix_seq(
+            p, cfg, norm_apply(p["norm2"], cfg, h),
+            None if cache is None else cache["cm_shift"])
+        h = h + y
+        new_cache = {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+        return h, aux, new_cache
+
+    x = norm_apply(p["norm1"], cfg, h)
+    new_cache = None
+    if kind == "rec":
+        y, new_cache = rglru_mod.rglru_seq(
+            p["mix"], cfg, x, None if cache is None else cache["mix"])
+        new_cache = {"mix": new_cache}
+    else:
+        y = attn.full_attention(p["attn"], cfg, x, causal=True,
+                                window=_window(cfg, kind), impl=attn_impl)
+        if cache is not None:
+            new_cache = attn.fill_cache(p["attn"], cfg, x, cache,
+                                        window=_window(cfg, kind))
+    h = h + y
+    x = norm_apply(p["norm2"], cfg, h)
+    if kind == "moe":
+        y, aux = moe_mod.moe_apply(p["ffn"], cfg, x)
+    else:
+        y = mlp_apply(p["ffn"], cfg, x)
+    return h + y, aux, new_cache
+
+
+def _scatter_image(cfg, h, image_embeds, image_mask):
+    """Early fusion: replace masked token positions with patch embeddings."""
+    idx = jnp.cumsum(image_mask.astype(jnp.int32), axis=1) - 1
+    idx = jnp.clip(idx, 0, image_embeds.shape[1] - 1)
+    gathered = jnp.take_along_axis(image_embeds.astype(h.dtype),
+                                   idx[..., None], axis=1)
+    return jnp.where(image_mask[..., None], gathered, h)
+
+
+def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
+            attn_impl="auto", return_cache=False, cache=None, remat=False):
+    """tokens (B,S) -> (logits (B,S,V) float32, aux scalar[, cache]).
+
+    ``remat=True`` checkpoints each scanned superblock (recompute in the
+    backward pass) — required to fit long-sequence training activations.
+    """
+    pattern, np_, rem = _split(cfg)
+    b, s = tokens.shape
+    h = embed_apply(params["embed"], cfg, tokens)
+    if cfg.family == "vlm" and image_embeds is not None:
+        h = _scatter_image(cfg, h, image_embeds, image_mask)
+    if return_cache and cache is None:
+        cache = init_decode_cache(cfg, b, s)
+    aux = jnp.zeros((), jnp.float32)
+
+    new_block_caches = ()
+    if np_ > 0:
+        def superblock(carry, xs):
+            h, aux = carry
+            bp = xs[0] if return_cache else xs
+            bc = xs[1] if return_cache else (None,) * len(pattern)
+            ncs = []
+            for pi, kind in enumerate(pattern):
+                h, a, nc = block_apply_seq(bp[pi], cfg, kind, h,
+                                           attn_impl=attn_impl, cache=bc[pi])
+                aux = aux + a
+                ncs.append(nc)
+            return (h, aux), (tuple(ncs) if return_cache else None)
+
+        if getattr(cfg, "seq_shard", False):
+            from jax.sharding import PartitionSpec as _P
+            inner = superblock
+
+            def superblock(carry, xs):      # noqa: F811
+                (h, aux), ys = inner(carry, xs)
+                h = jax.lax.with_sharding_constraint(
+                    h, _P(None, "model", None))
+                return (h, aux), ys
+
+        xs = ((tuple(params["blocks"]), tuple(cache["blocks"]))
+              if return_cache else tuple(params["blocks"]))
+        sb = jax.checkpoint(superblock) if remat else superblock
+        (h, aux), ys = scan_or_unroll(sb, (h, aux), xs)
+        if return_cache:
+            new_block_caches = ys
+
+    new_rem = []
+    for i, bp in enumerate(params["rem_blocks"]):
+        bc = cache["rem_blocks"][i] if return_cache else None
+        h, a, nc = block_apply_seq(bp, cfg, pattern[i], h,
+                                   attn_impl=attn_impl, cache=bc)
+        aux = aux + a
+        new_rem.append(nc)
+
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_apply(params["embed"], cfg, h)
+    if return_cache:
+        return logits, aux, {"blocks": new_block_caches,
+                             "rem_blocks": tuple(new_rem)}
+    return logits, aux
+
+
+# ---------------------------------------------------------------- decode ----
+
+def _block_cache_init(cfg, kind, batch, capacity, dtype):
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return {"mix": rglru_mod.init_rglru_cache(cfg, batch, dtype)}
+    cap = attn.cache_capacity(cfg, capacity, _window(cfg, kind))
+    return attn.init_cache(cfg, batch, cap, dtype)
+
+
+def init_decode_cache(cfg, batch: int, seq_len: int):
+    """Stacked per-pattern-position caches (+ remainder layers unstacked)."""
+    dt = _dtype(cfg)
+    pattern, np_, rem = _split(cfg)
+
+    def stack(kind):
+        one = _block_cache_init(cfg, kind, batch, seq_len, dt)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (np_,) + x.shape).copy(), one)
+
+    return {
+        "blocks": tuple(stack(kind) for kind in pattern) if np_ > 0 else (),
+        "rem_blocks": tuple(
+            _block_cache_init(cfg, pattern[i], batch, seq_len, dt)
+            for i in range(rem)),
+    }
+
+
+def block_apply_decode(p, cfg, kind, h, cache, pos):
+    """Single-token block.  h (B,1,d).  Returns (h, new_cache)."""
+    if kind == "rwkv":
+        x = norm_apply(p["norm1"], cfg, h)[:, 0]
+        y, (tm_shift, wkv) = rwkv_mod.time_mix_decode(
+            p, cfg, x, cache["tm_shift"], cache["wkv"])
+        h = h + y[:, None]
+        x = norm_apply(p["norm2"], cfg, h)[:, 0]
+        y, cm_shift = rwkv_mod.channel_mix_decode(p, cfg, x, cache["cm_shift"])
+        h = h + y[:, None]
+        return h, {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+
+    x = norm_apply(p["norm1"], cfg, h)
+    if kind == "rec":
+        y, mix_cache = rglru_mod.rglru_decode(p["mix"], cfg, x[:, 0],
+                                              cache["mix"])
+        h = h + y[:, None]
+        new_cache = {"mix": mix_cache}
+    else:
+        y, new_cache = attn.decode_attention(p["attn"], cfg, x, cache, pos,
+                                             window=_window(cfg, kind))
+        h = h + y
+    x = norm_apply(p["norm2"], cfg, h)
+    if kind == "moe":
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, x)
+    else:
+        y = mlp_apply(p["ffn"], cfg, x)
+    return h + y, new_cache
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decode step.  tokens (B,1) int32; pos scalar int32 (absolute
+    position of this token).  Returns (logits (B,1,V) f32, new_cache)."""
+    pattern, np_, rem = _split(cfg)
+    h = embed_apply(params["embed"], cfg, tokens)
+
+    new_block_caches = ()
+    if np_ > 0:
+        def superblock(h, xs):
+            bp, bc = xs
+            ncs = []
+            for pi, kind in enumerate(pattern):
+                h, nc = block_apply_decode(bp[pi], cfg, kind, h, bc[pi], pos)
+                ncs.append(nc)
+            return h, tuple(ncs)
+
+        h, new_block_caches = scan_or_unroll(
+            superblock, h, (tuple(params["blocks"]), tuple(cache["blocks"])))
+
+    new_rem = []
+    for i, bp in enumerate(params["rem_blocks"]):
+        h, nc = block_apply_decode(bp, cfg, pattern[i], h,
+                                   cache["rem_blocks"][i], pos)
+        new_rem.append(nc)
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_apply(params["embed"], cfg, h)
+    return logits, {"blocks": new_block_caches, "rem_blocks": tuple(new_rem)}

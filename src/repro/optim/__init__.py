@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw, apply_updates, sgd_momentum,
+                                    OptState, Optimizer)
+from repro.optim import schedules  # noqa: F401

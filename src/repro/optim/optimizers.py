@@ -1,0 +1,104 @@
+"""Optimizers, implemented from scratch (no optax in this environment).
+
+The paper trains AlexNet with SGD + momentum and averages BOTH parameters
+and momentum across replicas (footnote 3) — so optimizer state here is a
+first-class pytree that the data-parallel core can exchange+average exactly
+like the paper does.
+
+An optimizer is a pair of pure functions bundled in ``Optimizer``:
+    init(params)                        -> state
+    update(grads, state, params, lr)    -> (updates, state)
+``apply_updates`` adds updates to params.  SGD+momentum is *linear* in the
+gradient/state, which is what makes the paper's parameter averaging exactly
+equivalent to gradient averaging (proved in tests/core/test_param_avg.py);
+AdamW is provided as the non-linear counterexample and the modern default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[..., tuple]
+    name: str = "optimizer"
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 5e-4,
+                 nesterov: bool = False,
+                 state_dtype=jnp.float32) -> Optimizer:
+    """The paper's optimizer (AlexNet defaults: m=0.9, wd=5e-4).
+
+    ``state_dtype=bf16`` halves the momentum buffer (beyond-paper memory
+    variant; the paper stored fp32 momentum per GPU) — update math stays
+    fp32, only storage is cast."""
+
+    def init(params):
+        return {"velocity": _tree_zeros_like(params, state_dtype)}
+
+    def update(grads, state, params, lr):
+        g_eff = jax.tree.map(
+            lambda g, p: g.astype(jnp.float32)
+            + weight_decay * p.astype(jnp.float32), grads, params)
+        vel = jax.tree.map(lambda v, g: momentum * v.astype(jnp.float32) + g,
+                           state["velocity"], g_eff)
+        if nesterov:
+            step_dir = jax.tree.map(lambda v, g: momentum * v + g, vel, g_eff)
+        else:
+            step_dir = vel
+        updates = jax.tree.map(lambda s: -lr * s, step_dir)
+        vel = jax.tree.map(lambda v: v.astype(state_dtype), vel)
+        return updates, {"velocity": vel}
+
+    return Optimizer(init, update, "sgd_momentum")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"mu": _tree_zeros_like(params, jnp.float32),
+                "nu": _tree_zeros_like(params, jnp.float32),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        updates = jax.tree.map(
+            lambda m, n, p: -lr * ((m / c1) / (jnp.sqrt(n / c2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update, "adamw")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd_momentum":
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,51 @@
+"""Learning-rate schedules.
+
+``step_decay`` is the paper's AlexNet schedule (divide by 10 when validation
+error plateaus — realized as fixed-epoch steps as in the Caffe reference).
+``wsd`` is MiniCPM's warmup-stable-decay (arXiv:2404.06395 §4), included
+because minicpm-2b is an assigned architecture.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr: float, decay_every: int, factor: float = 0.1):
+    def f(step):
+        k = jnp.floor_divide(step, decay_every).astype(jnp.float32)
+        return lr * factor ** k
+    return f
+
+
+def cosine(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio * lr + (1 - min_ratio) * lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        min_ratio: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, exponential-ish
+    (here: linear in log space) decay over the final ``decay`` steps."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * jnp.exp(jnp.log(min_ratio) * prog)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out
+    return f
+
+
+def get_schedule(name: str, **kw):
+    return {"constant": constant, "step_decay": step_decay, "cosine": cosine,
+            "wsd": wsd}[name](**kw)

@@ -1,0 +1,265 @@
+"""PartitionSpec assignment: name/shape rules over flattened param paths.
+
+Layout policy (Megatron-style tensor parallelism on the 'model' axis):
+  embeddings       vocab over 'model' (GSPMD pads uneven vocabs)
+  attention        head axis over 'model' when divisible, else head_dim
+  dense MLP        d_ff over 'model'
+  MoE experts      expert axis over 'model' when divisible, else d_ff;
+                   with ``fsdp_axis`` set, d_ff additionally over that axis
+                   (used when a full replica cannot fit per data slice)
+  rwkv / rglru     output-feature dim over 'model'
+  norms / scalars  replicated
+
+Training state in param-avg mode carries a leading replica axis, sharded
+over ``replica_axes`` (('pod','data') by default — one full model+momentum
+copy per replica, exactly the paper's memory layout).
+
+Caches: KV heads over 'model' when divisible, else the sequence axis.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):              # dataclass GetAttrKey
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p).strip("."))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh,
+               model_axis="model", fsdp_axis=None) -> P:
+    """Base spec for one parameter leaf (no stack/replica axes)."""
+    m = _axis_size(mesh, model_axis)
+
+    def div(n):
+        return n % m == 0
+
+    # ---- embeddings ----
+    # pjit requires explicitly-sharded ARGUMENT dims to divide evenly, so
+    # uneven vocabs (minicpm 122753, olmo 50304...) shard d_model instead.
+    if re.search(r"embed/tok$", path):
+        if div(shape[-2]):
+            return P(model_axis, None)
+        return P(None, model_axis) if div(shape[-1]) else P(None, None)
+    if re.search(r"embed/lm_head$", path):
+        if div(shape[-1]):
+            return P(None, model_axis)
+        return P(model_axis, None) if div(shape[-2]) else P(None, None)
+
+    # ---- attention projections (d, H, hd) / (H, hd, d) ----
+    if re.search(r"(attn|self_attn|cross_attn)/w[qkv]$", path):
+        h = shape[-2]
+        if div(h):
+            return P(None, model_axis, None)
+        if div(shape[-1]):
+            return P(None, None, model_axis)
+        return P(None, None, None)
+    if re.search(r"(attn|self_attn|cross_attn)/wo$", path):
+        if div(shape[-3]):
+            return P(model_axis, None, None)
+        if div(shape[-2]):
+            return P(None, model_axis, None)
+        return P(None, None, None)
+
+    # ---- MoE ----
+    if re.search(r"ffn/router$", path):
+        return P(None, None)
+    if re.search(r"ffn/w_(in|gate)$", path) and len(shape) == 3:   # (E,d,f)
+        e = shape[-3]
+        if div(e):
+            return P(model_axis, None, fsdp_axis)
+        return P(None, None, (model_axis,) if fsdp_axis is None else
+                 (model_axis, fsdp_axis))
+    if re.search(r"ffn/w_out$", path) and len(shape) == 3:         # (E,f,d)
+        e = shape[-3]
+        if div(e):
+            return P(model_axis, fsdp_axis, None)
+        return P(None, (model_axis,) if fsdp_axis is None else
+                 (model_axis, fsdp_axis), None)
+
+    # ---- dense MLP (d,f)/(f,d), incl. moe shared expert & rwkv cm ----
+    if re.search(r"(ffn|shared)/w_(in|gate)$", path) or \
+            re.search(r"cm/wk$", path):
+        return P(None, model_axis)
+    if re.search(r"(ffn|shared|cm)/w?_?out$", path) or \
+            re.search(r"(ffn|shared)/w_out$", path) or \
+            re.search(r"cm/wv$", path):
+        return P(model_axis, None)
+    if re.search(r"cm/wr$", path):
+        return P(None, model_axis)
+
+    # ---- rwkv time-mix ----
+    if re.search(r"tm/w[rkvg]$", path):
+        return P(None, model_axis)
+    if re.search(r"tm/wo$", path):
+        return P(model_axis, None)
+    if re.search(r"tm/u$", path):
+        return P(model_axis, None) if div(shape[0]) else P(None, None)
+
+    # ---- rglru ----
+    if re.search(r"mix/w[xg]$", path):
+        return P(None, model_axis)
+    if re.search(r"mix/wo$", path):
+        return P(model_axis, None)
+    if re.search(r"mix/conv_w$", path):
+        return P(None, model_axis)
+    if re.search(r"mix/(conv_b|lambda)$", path):
+        return P(model_axis) if div(shape[0]) else P(None)
+    if re.search(r"mix/gate_[ai]$", path):
+        return P(model_axis, None, None) if div(shape[0]) else P(None, None, None)
+
+    # ---- alexnet ----
+    if re.search(r"convs/\d+/w$", path):
+        return P(None, None, None, model_axis) if div(shape[-1]) else P(*([None] * 4))
+    if re.search(r"fcs/\d+/w$", path):
+        return P(None, model_axis) if div(shape[-1]) else P(None, None)
+
+    # norms, biases, lora adapters, scalars: replicated
+    return P(*([None] * len(shape)))
+
+
+def _add_fsdp(spec: P, shape, fsdp_axis, mesh: Mesh) -> P:
+    """ZeRO-3-style extension: place ``fsdp_axis`` on the largest still-
+    unsharded dim of a big weight (>= 1M elems), if divisible.  Gives every
+    family (not just MoE) an FSDP layout when a full replica cannot fit."""
+    if fsdp_axis is None or fsdp_axis in jax.tree.leaves(tuple(spec)):
+        return spec
+    n = 1
+    for d in shape:
+        n *= d
+    if len(shape) < 2 or n < 1 << 20:
+        return spec
+    size = _axis_size(mesh, fsdp_axis)
+    cands = [i for i, (s, ax) in enumerate(zip(shape, tuple(spec)))
+             if ax is None and s % size == 0]
+    if not cands:
+        return spec
+    i = max(cands, key=lambda i: shape[i])
+    parts = list(spec)
+    parts[i] = fsdp_axis
+    return P(*parts)
+
+
+def state_sharding(state_shapes, cfg, mesh: Mesh, *, replica_axes=None,
+                   fsdp_axis=None, model_axis="model"):
+    """NamedSharding tree for a TrainState (or bare params pytree).
+
+    ``replica_axes``: mesh axes carrying the leading replica dim of every
+    leaf (param-avg mode); None for unreplicated (grad-avg / serve).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = leaf.shape
+        extra = 0
+        if replica_axes is not None and not re.search(r"(^|/)step$", ps):
+            extra += 1
+        if re.search(r"(^|/)(blocks/\d+|enc_blocks|dec_blocks)/", ps) and \
+                "rem_blocks" not in ps:
+            extra += 1           # scan-stacked layer axis
+        # optimizer state mirrors param structure after the leading
+        # {velocity,mu,nu} key; adam count is a scalar
+        if re.search(r"(^|/)count$", ps) or re.search(r"(^|/)step$", ps):
+            out.append(NamedSharding(mesh, P(*([None] * leaf.ndim))))
+            continue
+        base_ndim = leaf.ndim - extra
+        base = param_spec(ps, shape[extra:], cfg, mesh,
+                          model_axis=model_axis, fsdp_axis=fsdp_axis)
+        # NOTE: applying _add_fsdp to DENSE weights was tried and REFUTED
+        # (EXPERIMENTS §Perf A5: GSPMD turns the gathers into 20x memory/
+        # collective traffic); fsdp stays MoE-expert-only via param_spec.
+        assert len(base) <= base_ndim, (ps, shape, base)
+        lead = []
+        if replica_axes is not None:
+            if len(replica_axes) == 0:
+                lead.append(None)        # R=1 axis present but unsharded
+            else:
+                lead.append(replica_axes if len(replica_axes) > 1 else
+                            replica_axes[0])
+            extra -= 1
+        lead.extend([None] * extra)
+        spec = P(*lead, *tuple(base) + (None,) * (base_ndim - len(base)))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(batch_shapes, mesh: Mesh, *, batch_axes=("pod", "data"),
+                   inner_axis=None, replicated: bool = False):
+    """Batch arrays: leading axis over ``batch_axes`` (this is the replica
+    axis in param-avg mode); optional ``inner_axis`` shards the per-replica
+    batch dim (dim 1) — used in the FSDP fallback layout."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def one(leaf):
+        if replicated:
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        lead = None
+        if axes and leaf.shape[0] % _axis_size(mesh, axes) == 0:
+            lead = axes if len(axes) > 1 else axes[0]
+        rest = [None] * (leaf.ndim - 1)
+        if inner_axis is not None and leaf.ndim > 1 and \
+                leaf.shape[1] % _axis_size(mesh, inner_axis) == 0:
+            rest[0] = inner_axis
+        return NamedSharding(mesh, P(lead, *rest))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_sharding(cache_shapes, cfg, mesh: Mesh, *,
+                   batch_axes=("pod", "data"), model_axis="model"):
+    """Decode-cache sharding: batch over data axes; KV heads over 'model'
+    when divisible, else the sequence axis; recurrent states over 'model'
+    on their feature dim."""
+    m = _axis_size(mesh, model_axis)
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b_axis = (axes if len(axes) > 1 else axes[0]) if axes else None
+    bsz = _axis_size(mesh, axes) if axes else 1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = bool(re.search(r"(^|/)(blocks|self|cross)/", ps)) and \
+            "rem_blocks" not in ps
+        lead = (None,) if stacked else ()
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        ba = b_axis if (b_axis and shape[0] % bsz == 0) else None
+        if re.search(r"/(k|v)$", ps):                 # (B, S, Hkv, hd)
+            if shape[2] % m == 0:
+                spec = P(*lead, ba, None, model_axis, None)
+            else:
+                spec = P(*lead, ba, model_axis, None, None)
+        elif re.search(r"/wkv$", ps):                 # (B, H, hd, hd)
+            spec = P(*lead, ba, model_axis if shape[1] % m == 0 else None,
+                     None, None)
+        elif re.search(r"/(tm_shift|cm_shift|h)$", ps):   # (B, d)
+            spec = P(*lead, ba, model_axis if shape[-1] % m == 0 else None)
+        elif re.search(r"/conv$", ps):                # (B, 3, d_rnn)
+            spec = P(*lead, ba, None,
+                     model_axis if shape[-1] % m == 0 else None)
+        else:
+            spec = P(*lead, *([None] * len(shape)))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

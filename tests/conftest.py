@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol)

@@ -1,0 +1,177 @@
+"""Properties of the paper's parameter-averaging data parallelism.
+
+The central theorem this reproduction rests on: with identical init and a
+LINEAR optimizer (SGD+momentum — the paper's), exchange-and-average after
+independent updates is exactly gradient averaging, which is why the paper's
+65-epoch accuracy lands within 0.5% of the single-GPU baseline.  AdamW (a
+nonlinear optimizer) breaks the equivalence — asserted as a counterexample.
+Hypothesis drives the linear-model cases over random shapes/seeds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (STRATEGIES, exchange_average, init_grad_avg_state,
+                        init_param_avg_state, make_grad_avg_step,
+                        make_param_avg_step, replica_spread, replicate,
+                        reshape_for_replicas, unreplicate)
+from repro.optim import schedules
+from repro.optim.optimizers import adamw, sgd_momentum
+
+
+def linear_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_batches(n, b, din, dout, seed):
+    rng = np.random.default_rng(seed)
+    return [{"x": jnp.asarray(rng.normal(size=(b, din)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(b, dout)), jnp.float32)}
+            for _ in range(n)]
+
+
+def init_fn(din, dout):
+    return lambda r: {"w": jax.random.normal(r, (din, dout)) * 0.3,
+                      "b": jnp.zeros((dout,))}
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.sampled_from([2, 4, 8]), din=st.integers(2, 12),
+       dout=st.integers(1, 6), seed=st.integers(0, 10 ** 6),
+       momentum=st.floats(0.0, 0.95), wd=st.floats(0.0, 0.01))
+def test_param_avg_equals_grad_avg_sgd(r, din, dout, seed, momentum, wd):
+    """The paper's method == gradient averaging, exactly, for SGD+momentum."""
+    opt = sgd_momentum(momentum=momentum, weight_decay=wd)
+    sch = schedules.constant(0.05)
+    rng = jax.random.PRNGKey(seed % 2 ** 31)
+    sp = init_param_avg_state(rng, init_fn(din, dout), opt, r)
+    sg = init_grad_avg_state(rng, init_fn(din, dout), opt)
+    pstep = jax.jit(make_param_avg_step(linear_loss, opt, sch))
+    gstep = jax.jit(make_grad_avg_step(linear_loss, opt, sch))
+    for batch in make_batches(6, 4 * r, din, dout, seed):
+        sp, _ = pstep(sp, reshape_for_replicas(batch, r))
+        sg, _ = gstep(sg, batch)
+    for a, b in zip(jax.tree.leaves(sp.params), jax.tree.leaves(sg.params)):
+        np.testing.assert_allclose(a[0], b, rtol=2e-5, atol=2e-5)
+
+
+def test_adamw_breaks_equivalence():
+    """Nonlinear optimizer: param averaging != grad averaging (sanity that
+    the equivalence above is not vacuous)."""
+    opt = adamw()
+    sch = schedules.constant(0.05)
+    rng = jax.random.PRNGKey(3)
+    sp = init_param_avg_state(rng, init_fn(8, 4), opt, 4)
+    sg = init_grad_avg_state(rng, init_fn(8, 4), opt)
+    pstep = jax.jit(make_param_avg_step(linear_loss, opt, sch))
+    gstep = jax.jit(make_grad_avg_step(linear_loss, opt, sch))
+    for batch in make_batches(5, 16, 8, 4, 7):
+        sp, _ = pstep(sp, reshape_for_replicas(batch, 4))
+        sg, _ = gstep(sg, batch)
+    diff = max(float(jnp.max(jnp.abs(a[0] - b))) for a, b in
+               zip(jax.tree.leaves(sp.params), jax.tree.leaves(sg.params)))
+    assert diff > 1e-4
+
+
+@pytest.mark.parametrize("strategy", ["all_reduce", "ring", "pairwise"])
+def test_strategies_compute_exact_mean(strategy):
+    """ring / pairwise / all_reduce are numerically the same mean."""
+    rng = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(rng, (8, 3, 5)),
+            "b": jax.random.normal(jax.random.fold_in(rng, 1), (8, 7))}
+    out = exchange_average(tree, strategy)
+    for k in tree:
+        expected = jnp.broadcast_to(jnp.mean(tree[k], 0, keepdims=True),
+                                    tree[k].shape)
+        np.testing.assert_allclose(out[k], expected, rtol=1e-5, atol=1e-6)
+
+
+def test_pairwise_requires_power_of_two():
+    tree = {"a": jnp.ones((6, 2))}
+    with pytest.raises(AssertionError):
+        exchange_average(tree, "pairwise")
+
+
+@settings(max_examples=8, deadline=None)
+@given(r=st.sampled_from([2, 4]), seed=st.integers(0, 100))
+def test_exchange_average_idempotent(r, seed):
+    rng = jax.random.PRNGKey(seed)
+    tree = {"w": jax.random.normal(rng, (r, 4, 3))}
+    once = exchange_average(tree, "all_reduce")
+    twice = exchange_average(once, "all_reduce")
+    np.testing.assert_allclose(once["w"], twice["w"], rtol=1e-6, atol=1e-7)
+    assert float(replica_spread(once)) < 1e-6
+
+
+def test_local_sgd_sync_every():
+    """sync_every=k: replicas drift for k-1 steps then re-coincide."""
+    opt = sgd_momentum()
+    sch = schedules.constant(0.05)
+    rng = jax.random.PRNGKey(1)
+    state = init_param_avg_state(rng, init_fn(6, 3), opt, 4)
+    step = jax.jit(make_param_avg_step(linear_loss, opt, sch, sync_every=3))
+    spreads = []
+    for batch in make_batches(6, 8, 6, 3, 11):
+        state, _ = step(state, reshape_for_replicas(batch, 4))
+        spreads.append(float(replica_spread(state.params)))
+    # steps 1,2 drift; step 3 syncs; etc.
+    assert spreads[0] > 1e-6 and spreads[1] > 1e-6
+    assert spreads[2] < 1e-6
+    assert spreads[5] < 1e-6 and spreads[4] > 1e-6
+
+
+def test_sync_every_one_equals_every_step_sync():
+    opt = sgd_momentum()
+    sch = schedules.constant(0.05)
+    rng = jax.random.PRNGKey(2)
+    s1 = init_param_avg_state(rng, init_fn(6, 3), opt, 2)
+    s2 = init_param_avg_state(rng, init_fn(6, 3), opt, 2)
+    stepa = jax.jit(make_param_avg_step(linear_loss, opt, sch, sync_every=1))
+    stepb = jax.jit(make_param_avg_step(linear_loss, opt, sch))
+    for batch in make_batches(4, 8, 6, 3, 13):
+        s1, _ = stepa(s1, reshape_for_replicas(batch, 2))
+        s2, _ = stepb(s2, reshape_for_replicas(batch, 2))
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_replicate_unreplicate_roundtrip():
+    tree = {"x": jnp.arange(12.0).reshape(3, 4)}
+    r = replicate(tree, 4)
+    assert r["x"].shape == (4, 3, 4)
+    back = unreplicate(r)
+    np.testing.assert_allclose(back["x"], tree["x"])
+
+
+def test_momentum_is_averaged_too():
+    """Paper footnote 3: optimizer state participates in the exchange."""
+    opt = sgd_momentum(momentum=0.9)
+    sch = schedules.constant(0.05)
+    rng = jax.random.PRNGKey(5)
+    state = init_param_avg_state(rng, init_fn(6, 3), opt, 4)
+    step = jax.jit(make_param_avg_step(linear_loss, opt, sch))
+    batch = make_batches(1, 8, 6, 3, 17)[0]
+    state, _ = step(state, reshape_for_replicas(batch, 4))
+    assert float(replica_spread(state.opt_state)) < 1e-6
+
+
+def test_microbatch_equivalent():
+    """Gradient accumulation (microbatch>1) == one big batch, exactly (the
+    loss is a mean and SGD is linear)."""
+    opt = sgd_momentum(momentum=0.9)
+    sch = schedules.constant(0.05)
+    rng = jax.random.PRNGKey(7)
+    s1 = init_param_avg_state(rng, init_fn(6, 3), opt, 2)
+    s2 = init_param_avg_state(rng, init_fn(6, 3), opt, 2)
+    step1 = jax.jit(make_param_avg_step(linear_loss, opt, sch))
+    step4 = jax.jit(make_param_avg_step(linear_loss, opt, sch, microbatch=4))
+    for batch in make_batches(3, 16, 6, 3, 23):
+        rb = reshape_for_replicas(batch, 2)
+        s1, l1 = step1(s1, rb)
+        s2, l4 = step4(s2, rb)
+        np.testing.assert_allclose(l1, l4, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,48 @@
+"""Checkpoint roundtrip across dtypes and pytree shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    tree = {
+        "bf16": jnp.full((3, 4), 1.5, jnp.bfloat16),
+        "f32": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "i32": jnp.arange(5, dtype=jnp.int32),
+        "nested": [{"a": jnp.zeros((2, 2))}, (jnp.ones((1,)),)],
+    }
+    checkpoint.save(str(tmp_path), 42, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out = checkpoint.restore(str(tmp_path), 42, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    tree = {"x": jnp.ones(2)}
+    checkpoint.save(str(tmp_path), 10, tree)
+    checkpoint.save(str(tmp_path), 30, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 30
+
+
+def test_train_state_roundtrip(tmp_path):
+    from repro.core import init_param_avg_state
+    from repro.optim.optimizers import sgd_momentum
+    from repro import models
+    from repro.configs import ARCHS, reduced
+    cfg = reduced(ARCHS["olmo-1b"])
+    opt = sgd_momentum()
+    state = init_param_avg_state(jax.random.PRNGKey(0),
+                                 lambda r: models.init(r, cfg), opt, 2)
+    checkpoint.save(str(tmp_path), 1, state)
+    like = jax.tree.map(jnp.zeros_like, state)
+    out = checkpoint.restore(str(tmp_path), 1, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

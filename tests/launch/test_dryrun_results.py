@@ -1,0 +1,68 @@
+"""Integrity of the recorded dry-run artifacts: every supported
+(arch x shape x mesh) combo present, well-formed, and fitting the layout
+policy.  Skipped when results/dryrun is absent (fresh checkout)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, supports_shape
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "results",
+                       "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "*_pod1.json")),
+    reason="dry-run results not generated")
+
+
+def expected_combos():
+    out = []
+    for arch in ASSIGNED:
+        cfg = ARCHS[arch]
+        for shape in SHAPES.values():
+            if supports_shape(cfg, shape):
+                out.append((arch, shape.name))
+            elif arch == "gemma-7b" and shape.name == "long_500k":
+                out.append((arch, shape.name))     # SWA variant
+    return out
+
+
+@pytest.mark.parametrize("mesh", ["pod1", "pod2"])
+def test_all_supported_combos_recorded(mesh):
+    combos = expected_combos()
+    assert len(combos) == 35
+    missing = []
+    for arch, shape in combos:
+        path = os.path.join(RESULTS, f"{arch}_{shape}_{mesh}.json")
+        if not os.path.exists(path):
+            missing.append((arch, shape))
+    assert not missing, missing
+
+
+@pytest.mark.parametrize("mesh", ["pod1", "pod2"])
+def test_records_well_formed(mesh):
+    for path in glob.glob(os.path.join(RESULTS, f"*_{mesh}.json")):
+        d = json.load(open(path))
+        assert d["chips"] == (256 if mesh == "pod1" else 512), path
+        r = d["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            assert r[term] >= 0, (path, term)
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert d["cost"]["flops"] > 0, path
+        # train combos must carry the replica layout bookkeeping
+        if d["mode"] == "train":
+            assert d["n_replicas"] >= 1
+            assert "all-reduce" in d["collectives"] or \
+                d["collectives"]["total_bytes"] >= 0
+
+
+def test_paper_layout_policy_recorded():
+    """Dense <=10B archs train with the paper-faithful full-replica layout;
+    the big MoEs record the FSDP fallback."""
+    d = json.load(open(os.path.join(RESULTS, "gemma-7b_train_4k_pod1.json")))
+    assert d["replica_axes"] == ["data"] and d["fsdp_axis"] is None
+    d = json.load(open(os.path.join(RESULTS,
+                                    "mixtral-8x7b_train_4k_pod1.json")))
+    assert d["fsdp_axis"] == "data"

@@ -1,0 +1,78 @@
+"""Sharding-spec properties, across every arch and several mesh
+factorizations (no compilation — pure spec construction + audit)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+CHILD = """
+import jax
+from repro import models
+from repro.configs import ARCHS, ASSIGNED
+from repro.core import init_param_avg_state
+from repro.optim.optimizers import sgd_momentum
+from repro.sharding.specs import state_sharding, cache_sharding, _path_str
+
+failures = []
+for shape in [(2, 4), (4, 2), (8, 1)]:
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    for arch in ASSIGNED:
+        cfg = ARCHS[arch]
+        # params + optimizer state with replica axis
+        st = jax.eval_shape(lambda: init_param_avg_state(
+            jax.random.PRNGKey(0), lambda r: models.init(r, cfg),
+            sgd_momentum(), shape[0]))     # R = data-axis size, as in prod
+        shard = state_sharding(st, cfg, mesh, replica_axes=("data",))
+        flat, _ = jax.tree_util.tree_flatten_with_path(st)
+        flatsh, _ = jax.tree_util.tree_flatten_with_path(shard)
+        for (p, leaf), (_, ns) in zip(flat, flatsh):
+            spec = tuple(ns.spec)
+            # 1) spec rank never exceeds leaf rank
+            if len(spec) > leaf.ndim:
+                failures.append((arch, shape, _path_str(p), "rank"))
+                continue
+            # 2) every sharded dim divides evenly (pjit argument rule)
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axs = ax if isinstance(ax, tuple) else (ax,)
+                k = 1
+                for a in axs:
+                    k *= sizes[a]
+                if leaf.shape[dim] % k:
+                    failures.append((arch, shape, _path_str(p),
+                                     f"indivisible {leaf.shape} {spec}"))
+            # 3) no axis used twice in one spec
+            used = [a for ax in spec if ax is not None
+                    for a in (ax if isinstance(ax, tuple) else (ax,))]
+            if len(used) != len(set(used)):
+                failures.append((arch, shape, _path_str(p), "dup axis"))
+        # 4) no big weight left fully replicated
+        for (p, leaf), (_, ns) in zip(flat, flatsh):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            if n > 8e6 and not [x for x in jax.tree.leaves(tuple(ns.spec))]:
+                ps = _path_str(p)
+                if "lora" not in ps and "decay" not in ps:
+                    failures.append((arch, shape, ps, "replicated-big"))
+        # caches
+        cs = jax.eval_shape(lambda: models.init_decode_cache(cfg, 8, 64))
+        cache_sharding(cs, cfg, mesh)   # must not raise
+assert not failures, failures[:10]
+print("OK", len(ASSIGNED) * 3, "arch x mesh combos")
+"""
+
+
+def test_spec_properties_all_archs():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", CHILD], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OK" in r.stdout

@@ -1,0 +1,126 @@
+"""Per-assigned-architecture smoke tests (required deliverable f).
+
+Each instantiates a REDUCED same-family variant (2 layers, d_model<=512,
+<=4 experts) and runs one forward + one train step on CPU, asserting output
+shapes and no NaNs.  The FULL configs are exercised only via the dry-run.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ALEXNET_SMOKE, ARCHS, ASSIGNED, reduced
+from repro.core import (init_param_avg_state, make_param_avg_step,
+                        reshape_for_replicas)
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+
+B, S = 2, 64
+
+
+def make_batch(cfg, rng, b=B, s=S):
+    ks = jax.random.split(rng, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[2], (b, s // 4, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.n_image_tokens, cfg.d_model))
+        mask = jnp.zeros((b, s), bool).at[:, :cfg.n_image_tokens].set(True)
+        batch["image_mask"] = mask
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_train_step(arch, rng):
+    cfg = reduced(ARCHS[arch])
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = models.init(rng, cfg)
+    batch = make_batch(cfg, rng)
+
+    logits, aux = models.logits_fn(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+
+    # one param-averaging train step over 2 replicas
+    opt = sgd_momentum()
+    state = init_param_avg_state(
+        rng, lambda r: models.init(r, cfg), opt, 2)
+    step = jax.jit(make_param_avg_step(
+        lambda p, b: models.loss_fn(p, cfg, b), opt,
+        schedules.constant(1e-2)))
+    state2, loss = step(state, reshape_for_replicas(batch, 2))
+    assert np.isfinite(float(loss))
+    for a, b_ in zip(jax.tree.leaves(state.params),
+                     jax.tree.leaves(state2.params)):
+        assert a.shape == b_.shape
+    assert not any(bool(jnp.any(jnp.isnan(x.astype(jnp.float32))))
+                   for x in jax.tree.leaves(state2.params))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_serve_step(arch, rng):
+    """One-token decode with a KV cache (the decode_32k/long_500k path)."""
+    cfg = reduced(ARCHS[arch])
+    params = models.init(rng, cfg)
+    cache = models.init_decode_cache(cfg, B, 32, enc_len=16)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        mem = encdec.encode(params, cfg,
+                            jax.random.normal(rng, (B, 16, cfg.d_model)))
+        cache = {"self": cache["self"],
+                 "cross": encdec.build_cross_cache(params, cfg, mem)}
+    toks = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
+    logits, new_cache = models.decode_step(params, cfg, cache, toks, 5)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+def test_alexnet_smoke(rng):
+    from repro.models import alexnet
+    cfg = ALEXNET_SMOKE
+    params = alexnet.init(rng, cfg)
+    imgs = jax.random.normal(rng, (4, cfg.image_size, cfg.image_size, 3))
+    labels = jax.random.randint(rng, (4,), 0, cfg.n_classes)
+    logits = alexnet.forward(params, cfg, imgs)
+    assert logits.shape == (4, cfg.n_classes)
+    loss = alexnet.loss_fn(params, cfg, imgs, labels, train=True,
+                           dropout_rng=rng)
+    assert np.isfinite(float(loss))
+    g = jax.grad(alexnet.loss_fn)(params, cfg, imgs, labels)
+    assert not any(bool(jnp.any(jnp.isnan(x))) for x in jax.tree.leaves(g))
+
+
+def test_remat_matches(rng):
+    """Gradient with remat == gradient without (numerics identical)."""
+    cfg = reduced(ARCHS["olmo-1b"])
+    params = models.init(rng, cfg)
+    batch = make_batch(cfg, rng)
+    g1 = jax.grad(lambda p: models.loss_fn(p, cfg, batch, remat=False))(params)
+    g2 = jax.grad(lambda p: models.loss_fn(p, cfg, batch, remat=True))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_unroll_matches(rng):
+    """UNROLL=True (dry-run aux path) computes the same function."""
+    from repro.models import _unroll
+    cfg = reduced(ARCHS["recurrentgemma-9b"], n_layers=2)
+    params = models.init(rng, cfg)
+    batch = make_batch(cfg, rng)
+    l1 = models.loss_fn(params, cfg, batch)
+    try:
+        _unroll.UNROLL = True
+        l2 = models.loss_fn(params, cfg, batch)
+    finally:
+        _unroll.UNROLL = False
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6)

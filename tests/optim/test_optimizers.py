@@ -1,0 +1,78 @@
+"""Optimizers vs hand-computed updates; schedule properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import schedules
+from repro.optim.optimizers import adamw, apply_updates, sgd_momentum
+
+
+def test_sgd_momentum_manual():
+    opt = sgd_momentum(momentum=0.9, weight_decay=0.0)
+    p = {"w": jnp.array([1.0, 2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([0.5, -1.0])}
+    u1, s = opt.update(g, s, p, 0.1)
+    np.testing.assert_allclose(u1["w"], -0.1 * jnp.array([0.5, -1.0]))
+    u2, s = opt.update(g, s, p, 0.1)
+    # v2 = 0.9*g + g = 1.9 g
+    np.testing.assert_allclose(u2["w"], -0.1 * 1.9 * jnp.array([0.5, -1.0]),
+                               rtol=1e-6)
+
+
+def test_weight_decay_pulls_to_zero():
+    opt = sgd_momentum(momentum=0.0, weight_decay=0.1)
+    p = {"w": jnp.array([1.0])}
+    s = opt.init(p)
+    u, _ = opt.update({"w": jnp.array([0.0])}, s, p, 1.0)
+    assert float(u["w"][0]) < 0
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = adamw(weight_decay=0.0)
+    p = {"w": jnp.array([0.0, 0.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([3.0, -0.01])}
+    u, _ = opt.update(g, s, p, 1e-3)
+    # bias-corrected first step ~ lr * sign(g)
+    np.testing.assert_allclose(jnp.abs(u["w"]), 1e-3, rtol=1e-3)
+
+
+def test_apply_updates_dtype_preserved():
+    p = {"w": jnp.ones((2,), jnp.bfloat16)}
+    out = apply_updates(p, {"w": jnp.full((2,), 0.5, jnp.float32)})
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32), 1.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(lr=st.floats(1e-5, 1.0), warmup=st.integers(1, 50),
+       total=st.integers(60, 500))
+def test_cosine_schedule_bounds(lr, warmup, total):
+    f = schedules.cosine(lr, warmup, total)
+    for step in [0, warmup // 2, warmup, (warmup + total) // 2, total]:
+        v = float(f(step))
+        assert 0.0 <= v <= lr * (1 + 1e-6)
+    assert abs(float(f(warmup)) - lr) < lr * 0.1 + 1e-9
+
+
+def test_wsd_three_phases():
+    f = schedules.wsd(1.0, warmup=10, stable=50, decay=20)
+    assert float(f(5)) == 0.5                      # warmup: linear
+    assert abs(float(f(30)) - 1.0) < 1e-6          # stable: flat
+    assert float(f(70)) < 0.5                      # decay
+    assert float(f(80)) <= 0.011                   # floor ~ min_ratio
+
+
+def test_step_decay():
+    f = schedules.step_decay(1.0, decay_every=10, factor=0.1)
+    assert abs(float(f(5)) - 1.0) < 1e-6
+    assert abs(float(f(15)) - 0.1) < 1e-6
+    assert abs(float(f(25)) - 0.01) < 1e-7
+
+
+def test_schedules_monotone_after_peak():
+    f = schedules.cosine(1.0, warmup=5, total=100)
+    vals = [float(f(s)) for s in range(5, 100, 5)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
