@@ -1,32 +1,53 @@
 """Paper Fig. 2 analogue: weight exchange-and-average strategies.
 
-Compares all_reduce / ring / pairwise exchange of an AlexNet-sized pytree
-across 8 host-device replicas: wall time + the collective ops each lowers
-to (from compiled HLO) — the communication-schedule axis the paper explored
-with P2P copies on a PCIe switch."""
+Two tables over ``REPRO_DEVICES`` host-device replicas (default 4):
+
+1. bare exchange of an AlexNet-sized pytree per strategy — wall time + the
+   collective ops each lowers to (from compiled HLO), the communication-
+   schedule axis the paper explored with P2P copies on a PCIe switch;
+2. full mesh-engine train step (shard_map, AlexNet-smoke) per strategy —
+   end-to-end step time with the exchange on the critical path, the
+   Table 1-style number.
+
+    REPRO_DEVICES=4 PYTHONPATH=src python -m benchmarks.run \
+        --only exchange_strategies
+"""
 from __future__ import annotations
+
+import os
 
 from benchmarks.common import emit, run_subprocess_bench
 
-CHILD = """
+CHILD_EXCHANGE = """
 import time, re, jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.core import exchange_average
+from repro.core import Exchanger, replica_specs
+from repro.core.param_avg import shard_map
+from repro.launch.mesh import make_replica_mesh
 from repro.models import alexnet
 from repro.configs import ALEXNET_SMOKE
 
-R = 8
-mesh = jax.make_mesh((R,), ("data",))
+R = jax.device_count()
+mesh = make_replica_mesh(R)
 params = alexnet.init(jax.random.PRNGKey(0), ALEXNET_SMOKE)
 rep = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), params)
-sh = jax.tree.map(lambda x: NamedSharding(mesh, P(*("data",) + (None,) * (x.ndim - 1))), rep)
-rep = jax.device_put(rep, sh)
+spec = replica_specs(rep, "data")
+from repro.sharding.specs import replica_sharding
+rep = jax.device_put(rep, replica_sharding(rep, mesh, replica_axes=("data",)))
 n_bytes = sum(x.nbytes for x in jax.tree.leaves(rep))
-for strat in ("all_reduce", "ring", "pairwise"):
-    f = jax.jit(lambda t, s=strat: exchange_average(t, s), in_shardings=(sh,), out_shardings=sh)
+pow2 = R & (R - 1) == 0
+strats = ("all_reduce", "ring", "pairwise") if pow2 else \
+    ("all_reduce", "ring")
+if not pow2:
+    print(f"# pairwise skipped: needs power-of-two replicas, got {R}")
+for strat in strats:
+    ex = Exchanger(strat, axis="data")
+    f = jax.jit(shard_map(lambda t: ex.average(t), mesh=mesh,
+                          in_specs=(spec,), out_specs=spec, check_rep=False))
     txt = f.lower(rep).compile().as_text()
     ops = {k: len(re.findall(k + r"(?:-start)?\\(", txt))
            for k in ("all-reduce", "collective-permute", "all-gather", "all-to-all")}
+    want = ex.expected_collective
+    assert ops.get(want), (strat, want, ops)
     jax.block_until_ready(f(rep))
     t0 = time.time()
     for _ in range(10):
@@ -34,16 +55,77 @@ for strat in ("all_reduce", "ring", "pairwise"):
     jax.block_until_ready(out)
     us = (time.time() - t0) / 10 * 1e6
     opstr = ";".join(f"{k}:{v}" for k, v in ops.items() if v)
-    print(f"RESULT,{strat},{us:.1f},bytes={n_bytes};{opstr}")
+    print(f"RESULT,{strat},{us:.1f},replicas={R};bytes={n_bytes};{opstr}")
+"""
+
+CHILD_STEP = """
+import time, jax, jax.numpy as jnp, numpy as np
+from repro.configs import ALEXNET_SMOKE
+from repro.core import (init_param_avg_state, make_mesh_param_avg_step,
+                        reshape_for_replicas)
+from repro.launch.mesh import make_replica_mesh
+from repro.models import alexnet
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+from repro.sharding.specs import replica_sharding
+
+R = jax.device_count()
+cfg = ALEXNET_SMOKE
+mesh = make_replica_mesh(R)
+opt = sgd_momentum()
+loss = lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"])
+rng = np.random.default_rng(0)
+batch = reshape_for_replicas(
+    {"images": jnp.asarray(rng.normal(size=(4 * R, cfg.image_size,
+                                            cfg.image_size, 3)), jnp.float32),
+     "labels": jnp.asarray(rng.integers(0, cfg.n_classes, 4 * R), jnp.int32)},
+    R)
+strats = ("all_reduce", "ring", "pairwise", "none") if R & (R - 1) == 0 \
+    else ("all_reduce", "ring", "none")
+for strat in strats:
+    state = init_param_avg_state(jax.random.PRNGKey(0),
+                                 lambda r: alexnet.init(r, cfg), opt, R)
+    state = jax.device_put(state, replica_sharding(state, mesh,
+                                                   replica_axes=("data",)))
+    b = jax.device_put(batch, replica_sharding(batch, mesh,
+                                               replica_axes=("data",)))
+    step = jax.jit(make_mesh_param_avg_step(loss, opt,
+                                            schedules.constant(0.01),
+                                            mesh=mesh, strategy=strat,
+                                            replica_axes=("data",)))
+    state, _ = step(state, b)          # compile + warm
+    jax.block_until_ready(state)
+    t0 = time.time()
+    for _ in range(5):
+        state, l = step(state, b)
+    jax.block_until_ready(state)
+    us = (time.time() - t0) / 5 * 1e6
+    print(f"STEP,{strat},{us:.1f},replicas={R};engine=mesh")
 """
 
 
 def main():
-    out = run_subprocess_bench(CHILD, devices=8)
+    devices = int(os.environ.get("REPRO_DEVICES", "4"))
+    out = run_subprocess_bench(CHILD_EXCHANGE, devices=devices)
     for line in out.splitlines():
-        if line.startswith("RESULT"):
+        if line.startswith("#"):
+            print(line, flush=True)
+        elif line.startswith("RESULT"):
             _, strat, us, derived = line.split(",", 3)
             emit(f"exchange/{strat}", float(us), derived)
+    out = run_subprocess_bench(CHILD_STEP, devices=devices)
+    rows = []
+    for line in out.splitlines():
+        if line.startswith("STEP"):
+            _, strat, us, derived = line.split(",", 3)
+            emit(f"exchange_step/{strat}", float(us), derived)
+            rows.append((strat, float(us)))
+    if rows:                      # human-readable per-strategy table
+        base = dict(rows).get("none")
+        print("# strategy     step_us    exchange_overhead_vs_none")
+        for strat, us in rows:
+            ovh = f"{us - base:+.1f}us" if base else "n/a"
+            print(f"# {strat:12s} {us:9.1f}  {ovh}")
 
 
 if __name__ == "__main__":

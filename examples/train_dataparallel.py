@@ -11,7 +11,6 @@ script, not imported after jax.
 """
 import argparse
 import os
-import sys
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--devices", type=int, default=4)
@@ -32,17 +31,17 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import models
 from repro.configs import ARCHS, reduced
-from repro.core import (init_param_avg_state, make_param_avg_step,
+from repro.core import (init_param_avg_state, make_mesh_param_avg_step,
                         replica_spread, reshape_for_replicas)
 from repro.data import PrefetchLoader, synthetic
+from repro.launch.mesh import make_replica_mesh
 from repro.optim import schedules
 from repro.optim.optimizers import adamw
-from repro.sharding.specs import state_sharding
+from repro.sharding.specs import replica_sharding
 
 # vocab sized so ~150 steps of data gives >100 observations per Markov
 # state — otherwise the chain is unlearnable within the demo budget
@@ -56,17 +55,20 @@ print(f"model: {cfg.name} {n_params / 1e6:.1f}M params, "
       f"{args.devices} devices")
 
 R = args.devices
-mesh = jax.make_mesh((R, 1), ("data", "model"))
+# mesh-native engine: one replica per device on a ('data',) mesh; the
+# exchange inside the shard_map step lowers to a real all-reduce
+# (docs/architecture.md)
+mesh = make_replica_mesh(R)
 opt = adamw(weight_decay=0.01)
 sched = schedules.cosine(3e-3, warmup=args.steps // 10, total=args.steps)
 state = init_param_avg_state(jax.random.PRNGKey(0),
                              lambda r: models.init(r, cfg), opt, R)
-sshard = state_sharding(jax.eval_shape(lambda: state), cfg, mesh,
-                        replica_axes=("data",))
+sshard = replica_sharding(jax.eval_shape(lambda: state), mesh,
+                          replica_axes=("data",))
 state = jax.device_put(state, sshard)
-step = jax.jit(make_param_avg_step(
-    lambda p, b: models.loss_fn(p, cfg, b), opt, sched,
-    sync_every=args.sync_every),
+step = jax.jit(make_mesh_param_avg_step(
+    lambda p, b: models.loss_fn(p, cfg, b), opt, sched, mesh=mesh,
+    replica_axes=("data",), sync_every=args.sync_every),
     in_shardings=(sshard, None),
     out_shardings=(sshard, NamedSharding(mesh, P())))
 
@@ -77,8 +79,10 @@ loader = PrefetchLoader(
                         # so the chain stays learnable at LM-sized vocabs
                         sharpness=3.0 * cfg.vocab_size ** 0.5),
     prefetch=2,
-    device_put=lambda b: jax.device_put(reshape_for_replicas(
-        {k: jnp.asarray(v) for k, v in b.items()}, R)))
+    device_put=lambda b: jax.device_put(
+        rb := reshape_for_replicas(
+            {k: jnp.asarray(v) for k, v in b.items()}, R),
+        replica_sharding(rb, mesh, replica_axes=("data",))))
 
 t0 = time.time()
 first = None

@@ -1,15 +1,28 @@
 """Replica exchange-and-average — the paper's §2.2 / Fig. 2, generalized.
 
-Replicated state carries an explicit leading axis R (one slice per replica,
-sharded over the ('pod','data') mesh axes), so each strategy is an ordinary
-jnp program over axis 0 whose lowering produces the corresponding collective:
+Two execution engines share one ``Exchanger`` API:
 
-  ``all_reduce``  mean over axis 0, broadcast back          -> all-reduce
-  ``ring``        R-1 neighbour shifts, accumulate           -> collective-permute
-                  chain (the closest analogue of the paper's sequential
-                  P2P copies around a ring)
-  ``pairwise``    log2(R) hypercube exchange+average rounds  -> collective-permute
-                  pairs (R=2 reproduces the paper's Fig. 2 EXACTLY:
+* **mesh engine** (``axis=<mesh axis name(s)>``): each replica is one shard
+  of a ``jax.shard_map`` program over the ('pod','data') mesh axes, and the
+  strategies are per-shard collectives (``jax.lax.pmean`` /
+  ``jax.lax.ppermute``) — every strategy lowers to the real collective its
+  name promises.  This is the production path (launch/train.py,
+  examples/train_dataparallel.py).
+* **reference engine** (``axis=None``): replicated state carries an explicit
+  leading axis R and each strategy is an ordinary jnp program over axis 0.
+  It is the interpretable spec the mesh engine is tested against, and the
+  path the GSPMD dry-run (launch/dryrun.py) compiles when replicas combine
+  with tensor parallelism.
+
+Strategy -> collective:
+
+  ``all_reduce``  mean across replicas                       -> all-reduce
+                  (1 fused reduction per step)
+  ``ring``        R-1 neighbour shifts, accumulate           -> collective-
+                  permute chain (the closest analogue of the paper's
+                  sequential P2P copies around a ring)
+  ``pairwise``    log2(R) hypercube exchange+average rounds  -> collective-
+                  permute pairs (R=2 reproduces the paper's Fig. 2 EXACTLY:
                   one exchange, then average on both replicas)
   ``none``        no synchronization (local SGD / sync-every-k)
 
@@ -21,11 +34,30 @@ paper's footnote 3.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional, Tuple, Union
+
 import jax
 import jax.numpy as jnp
 
+try:                                    # jax >= 0.6 top-level export
+    from jax import shard_map           # type: ignore[attr-defined]
+except ImportError:                     # jax 0.4.x experimental home
+    from jax.experimental.shard_map import shard_map
+
 STRATEGIES = ("all_reduce", "ring", "pairwise", "none")
 
+# HLO op each strategy's mesh-engine lowering must contain (None: no
+# communication).  tests/core/test_exchange_mesh.py asserts this.
+EXPECTED_COLLECTIVE = {"all_reduce": "all-reduce",
+                       "ring": "collective-permute",
+                       "pairwise": "collective-permute",
+                       "none": None}
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+# ------------------------------------------------ reference (axis-0) engine --
 
 def _avg_all_reduce(x):
     return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
@@ -57,21 +89,113 @@ _FNS = {"all_reduce": _avg_all_reduce, "ring": _avg_ring,
         "pairwise": _avg_pairwise}
 
 
-def exchange_average(tree, strategy: str = "all_reduce"):
-    """Average every leaf of a replicated pytree over its leading R axis."""
-    if strategy == "none":
-        return tree
-    if strategy not in _FNS:
-        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
-    fn = _FNS[strategy]
+# ------------------------------------------------- mesh (per-shard) engine --
+# These run INSIDE shard_map: x is one replica's slice (no leading R axis)
+# and the replica index lives on the named mesh axis.
 
-    def avg(x):
-        if x.ndim == 0:          # scalars (e.g. adam count) are already equal
-            return x
-        xf = x.astype(jnp.float32)
-        return fn(xf).astype(x.dtype)
+def _shard_all_reduce(x, axis):
+    return jax.lax.pmean(x, axis)
 
-    return jax.tree.map(avg, tree)
+
+def _shard_ring(x, axis):
+    r = jax.lax.psum(1, axis)
+    perm = [(i, (i + 1) % r) for i in range(r)]  # same direction as the
+    acc = x                                      # reference's roll(+1)
+    cur = x
+    for _ in range(r - 1):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        acc = acc + cur
+    return acc / r
+
+
+def _shard_pairwise(x, axis):
+    r = jax.lax.psum(1, axis)
+    assert r & (r - 1) == 0, f"pairwise needs power-of-two replicas, got {r}"
+    dim = 1
+    while dim < r:
+        perm = [(i, i ^ dim) for i in range(r)]
+        x = 0.5 * (x + jax.lax.ppermute(x, axis, perm))
+        dim <<= 1
+    return x
+
+
+_SHARD_FNS = {"all_reduce": _shard_all_reduce, "ring": _shard_ring,
+              "pairwise": _shard_pairwise}
+
+
+# ------------------------------------------------------------ Exchanger API --
+
+@dataclasses.dataclass(frozen=True)
+class Exchanger:
+    """One exchange schedule bound to an execution engine.
+
+    ``axis=None``: reference engine — ``average`` expects every leaf to
+    carry a leading replica axis R and averages over it in plain jnp.
+
+    ``axis=<name or tuple of names>``: mesh engine — ``average`` must be
+    called inside ``jax.shard_map`` with ``axis`` manual; leaves are single
+    replica slices and the average is a real collective over the mesh axis.
+    """
+    strategy: str = "all_reduce"
+    axis: Optional[AxisName] = None
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"one of {STRATEGIES}")
+
+    @property
+    def is_mesh(self) -> bool:
+        return self.axis is not None
+
+    @property
+    def expected_collective(self) -> Optional[str]:
+        """HLO op the mesh engine lowers this strategy to."""
+        return EXPECTED_COLLECTIVE[self.strategy]
+
+    def average(self, tree):
+        """Exchange+average every leaf (params or optimizer state)."""
+        if self.strategy == "none":
+            return tree
+        if self.is_mesh:
+            fn = _SHARD_FNS[self.strategy]
+
+            def avg(x):
+                if x.ndim == 0:      # scalars (e.g. adam count) stay equal
+                    return x
+                xf = x.astype(jnp.float32)
+                return fn(xf, self.axis).astype(x.dtype)
+        else:
+            fn = _FNS[self.strategy]
+
+            def avg(x):
+                if x.ndim == 0:
+                    return x
+                xf = x.astype(jnp.float32)
+                return fn(xf).astype(x.dtype)
+
+        return jax.tree.map(avg, tree)
+
+
+def as_exchanger(strategy: Union[str, Exchanger],
+                 axis: Optional[AxisName] = None) -> Exchanger:
+    """Accept a strategy name or a ready Exchanger (axis overrides engine)."""
+    if isinstance(strategy, Exchanger):
+        if axis is not None and strategy.axis != axis:
+            return dataclasses.replace(strategy, axis=axis)
+        return strategy
+    return Exchanger(strategy, axis=axis)
+
+
+def exchange_average(tree, strategy: Union[str, Exchanger] = "all_reduce"):
+    """Average every leaf of a replicated pytree over its leading R axis
+    (reference engine; kept as the stable public entrypoint)."""
+    ex = as_exchanger(strategy)
+    if ex.is_mesh:
+        raise ValueError("exchange_average is the axis-0 reference; call "
+                         "Exchanger.average inside shard_map for the mesh "
+                         "engine")
+    return ex.average(tree)
 
 
 def replicate(tree, n_replicas: int):

@@ -2,25 +2,34 @@
 
 ``make_param_avg_step`` is the paper's algorithm (Fig. 2): per-replica
 independent forward/backward/update (NO gradient communication), then
-exchange+average of params and optimizer state.  ``make_grad_avg_step`` is
-the modern baseline: single param copy, gradients mean-reduced across the
-batch by XLA.  ``sync_every`` turns the paper's every-step averaging into
-local SGD (beyond-paper extension — expressible only in the param-avg
-formulation).
+exchange+average of params and optimizer state.  It runs on the reference
+engine (leading replica axis R + vmap, GSPMD sharding) and is what the
+multi-pod dry-run compiles.  ``make_mesh_param_avg_step`` is the mesh-native
+engine: the SAME algorithm as a ``jax.shard_map`` program over the replica
+mesh axes, where the exchange lowers to real collectives (see
+core/param_avg.py).  ``make_grad_avg_step`` is the modern baseline: single
+param copy, gradients mean-reduced across the batch by XLA.  ``sync_every``
+turns the paper's every-step averaging into local SGD (beyond-paper
+extension — expressible only in the param-avg formulation).
 
-State layout (param_avg): every leaf has leading axis R = #replicas, sharded
-over ('pod','data'); batches are (R, per_replica_batch, ...).  vmap over
-axis 0 keeps each replica's computation on its own mesh slice.
+State layout (both param-avg engines): every leaf has leading axis
+R = #replicas; batches are (R, per_replica_batch, ...).  The reference
+engine vmaps over axis 0; the mesh engine shards axis 0 one-replica-per-
+shard so each program instance owns exactly one replica — the paper's
+one-model-per-GPU memory layout, literally.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+import math
+from typing import Any, Callable, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.core.param_avg import exchange_average, replicate
+from repro.core.param_avg import (AxisName, Exchanger, as_exchanger,
+                                  replicate, shard_map)
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
@@ -46,12 +55,9 @@ def init_grad_avg_state(rng, init_fn, optimizer: Optimizer) -> TrainState:
                       jnp.zeros((), jnp.int32))
 
 
-def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
-                        schedule: Callable, *, strategy: str = "all_reduce",
-                        sync_every: int = 1, microbatch: int = 1):
-    """loss_fn(params, batch) -> scalar.  Returns step(state, batch).
+def _make_loss_and_grad(loss_fn: Callable, microbatch: int):
+    """Shared by both engines.  loss_fn(params, batch) -> scalar.
 
-    batch leaves have leading axis R matching state.params.
     ``microbatch`` > 1 accumulates gradients over that many slices of the
     per-replica batch (fp32 accumulator) — bounds activation memory at the
     cost of re-reading params per slice.
@@ -75,14 +81,53 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
 
         def mstep(carry, mbatch):
             lsum, gsum = carry
-            l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            li, g = jax.value_and_grad(loss_fn)(params, mbatch)
             gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                 gsum, g)
-            return (lsum + l, gsum), None
+            return (lsum + li, gsum), None
 
         (lsum, gsum), _ = scan_or_unroll(mstep, acc0, mb)
         inv = 1.0 / microbatch
         return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    return loss_and_grad
+
+
+def _synced(exchanger: Exchanger, params, opt_state, step, sync_every: int):
+    """Apply the exchange, every step or gated every ``sync_every`` steps."""
+    if sync_every == 1:
+        return exchanger.average(params), exchanger.average(opt_state)
+    do_sync = (step + 1) % sync_every == 0
+    if exchanger.is_mesh:
+        # cond, not where: do_sync is replicated across shards (every shard
+        # holds the same step counter), so all shards branch together and
+        # the skipped steps really skip the collectives — with where, local
+        # SGD would pay full exchange traffic every step
+        return jax.lax.cond(
+            do_sync,
+            lambda t: (exchanger.average(t[0]), exchanger.average(t[1])),
+            lambda t: t, (params, opt_state))
+    params = jax.tree.map(lambda a, b: jnp.where(do_sync, a, b),
+                          exchanger.average(params), params)
+    opt_state = jax.tree.map(lambda a, b: jnp.where(do_sync, a, b),
+                             exchanger.average(opt_state), opt_state)
+    return params, opt_state
+
+
+def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
+                        schedule: Callable, *,
+                        strategy: Union[str, Exchanger] = "all_reduce",
+                        sync_every: int = 1, microbatch: int = 1):
+    """Reference engine.  loss_fn(params, batch) -> scalar; returns
+    step(state, batch).  batch leaves have leading axis R matching
+    state.params.  ``strategy`` is a name or an axis-less ``Exchanger``.
+    """
+    exchanger = as_exchanger(strategy)
+    if exchanger.is_mesh:
+        raise ValueError("make_param_avg_step is the axis-0 reference "
+                         "engine; use make_mesh_param_avg_step for a "
+                         "mesh-bound Exchanger")
+    loss_and_grad = _make_loss_and_grad(loss_fn, microbatch)
 
     def step(state: TrainState, batch) -> tuple:
         lr = schedule(state.step)
@@ -119,20 +164,83 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
         params = jax.vmap(apply_updates)(state.params, updates)
 
         # 3) exchange & average params AND optimizer state (paper fn. 3)
-        if sync_every == 1:
-            params = exchange_average(params, strategy)
-            opt_state = exchange_average(opt_state, strategy)
-        else:
-            do_sync = (state.step + 1) % sync_every == 0
-            params = jax.tree.map(
-                lambda a, b: jnp.where(do_sync, a, b),
-                exchange_average(params, strategy), params)
-            opt_state = jax.tree.map(
-                lambda a, b: jnp.where(do_sync, a, b),
-                exchange_average(opt_state, strategy), opt_state)
+        params, opt_state = _synced(exchanger, params, opt_state,
+                                    state.step, sync_every)
 
         new_state = TrainState(params, opt_state, state.step + 1)
         return new_state, jnp.mean(losses)
+
+    return step
+
+
+def replica_specs(tree, axis: AxisName):
+    """shard_map PartitionSpecs for a param-avg pytree: leading replica dim
+    over ``axis``, scalars replicated."""
+    return jax.tree.map(
+        lambda x: P(axis, *([None] * (x.ndim - 1))) if x.ndim else P(), tree)
+
+
+def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
+                             schedule: Callable, *, mesh,
+                             strategy: Union[str, Exchanger] = "all_reduce",
+                             replica_axes=("pod", "data"),
+                             sync_every: int = 1, microbatch: int = 1):
+    """Mesh-native engine: the whole train step is one ``shard_map``
+    program over ``replica_axes`` of ``mesh``; each shard owns exactly one
+    replica and the exchange is a real collective (all-reduce /
+    collective-permute — see core/param_avg.py).
+
+    Requires one replica per mesh slice (R == prod of replica axis sizes)
+    and all remaining mesh axes of size 1: shard_map's partial-auto mode is
+    not implemented in the pinned jax, so tensor-parallel inner axes cannot
+    yet be delegated to GSPMD inside the manual region — combine replicas
+    with TP via the reference engine instead (launch/dryrun.py does).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = tuple(a for a in replica_axes if a in mesh.axis_names)
+    if not axes:
+        raise ValueError(f"none of {replica_axes} in mesh axes "
+                         f"{mesh.axis_names}")
+    for name, size in sizes.items():
+        if name not in axes and size != 1:
+            raise ValueError(
+                f"mesh engine needs non-replica axis {name!r} of size 1 "
+                f"(got {size}); shard_map auto-mode is unavailable — use "
+                "make_param_avg_step (reference engine) for replica x TP")
+    axis = axes if len(axes) > 1 else axes[0]
+    n_rep = math.prod(sizes[a] for a in axes)
+    exchanger = as_exchanger(strategy, axis=axis)
+    loss_and_grad = _make_loss_and_grad(loss_fn, microbatch)
+
+    def shard_step(state: TrainState, batch) -> tuple:
+        # per-shard leaves keep a leading local-replica axis of size 1
+        lr = schedule(state.step)
+        p0 = jax.tree.map(lambda x: x[0], state.params)
+        o0 = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
+                          state.opt_state)
+        b0 = jax.tree.map(lambda x: x[0], batch)
+        loss, grads = loss_and_grad(p0, b0)
+        updates, o0 = optimizer.update(grads, o0, p0, lr)
+        p0 = apply_updates(p0, updates)
+        p0, o0 = _synced(exchanger, p0, o0, state.step, sync_every)
+        params = jax.tree.map(lambda x: x[None], p0)
+        opt_state = jax.tree.map(
+            lambda new, old: new[None] if old.ndim > new.ndim else new,
+            o0, state.opt_state)
+        loss = jax.lax.pmean(loss, axis)
+        return TrainState(params, opt_state, state.step + 1), loss
+
+    def step(state: TrainState, batch) -> tuple:
+        r = jax.tree.leaves(batch)[0].shape[0]
+        if r != n_rep:
+            raise ValueError(
+                f"mesh engine needs one replica per mesh slice: batch has "
+                f"R={r} but {axes} span {n_rep} devices")
+        sspec = replica_specs(state, axis)
+        bspec = replica_specs(batch, axis)
+        fn = shard_map(shard_step, mesh=mesh, in_specs=(sspec, bspec),
+                       out_specs=(sspec, P()), check_rep=False)
+        return fn(state, batch)
 
     return step
 

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names it TPUCompilerParams; newer jax renames to CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG = -1e30
 
 
@@ -96,7 +100,7 @@ def flash_attention_folded(q, k, v, *, n_q_heads: int, n_kv_heads: int,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

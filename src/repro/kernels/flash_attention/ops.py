@@ -1,7 +1,6 @@
 """Public flash-attention op in model layout (B,S,Hkv,G,hd)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import \
     flash_attention_folded

@@ -15,6 +15,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names it TPUCompilerParams; newer jax renames to CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _rglru_kernel(a_ref, b_ref, h_ref, state, *, chunk: int):
     ci = pl.program_id(2)
@@ -49,7 +53,7 @@ def rglru_pallas(a, b, *, chunk: int = 128, bd: int = 128,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((bsz, t, d), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

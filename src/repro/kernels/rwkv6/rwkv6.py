@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names it TPUCompilerParams; newer jax renames to CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scratch, *,
                 chunk: int):
@@ -79,7 +83,7 @@ def wkv_pallas(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((b * h, t, kk), r.dtype),
         scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, uf)

@@ -39,7 +39,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import models
 from repro.configs import ASSIGNED, SHAPES, get_config, supports_shape
-from repro.core import init_param_avg_state, make_param_avg_step
+from repro.core import (as_exchanger, init_param_avg_state,
+                        make_param_avg_step)
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh, mesh_chips)
 from repro.models.transformer import block_kinds
@@ -116,10 +117,14 @@ def build_lowered(cfg, shape, mesh, mode, replica_axes, fsdp, n_rep,
                                  batch_axes=replica_axes or (),
                                  inner_axis=fsdp)
         opt = sgd_momentum(state_dtype=momentum_dtype)
+        # reference engine on purpose: production meshes combine replicas
+        # with a model axis, which shard_map cannot yet delegate to GSPMD
+        # (no partial-auto mode in the pinned jax) — same Exchanger API as
+        # the mesh engine, axis-0 execution.
         step = make_param_avg_step(
             lambda p, b: models.loss_fn(p, cfg, b, attn_impl=attn_impl,
                                         remat=True),
-            opt, schedules.constant(1e-2), strategy=strategy,
+            opt, schedules.constant(1e-2), strategy=as_exchanger(strategy),
             microbatch=microbatch)
         jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
                          out_shardings=(state_shard,
@@ -221,8 +226,17 @@ def parse_collectives(hlo_text: str) -> dict:
     return out
 
 
-def analyze(compiled) -> dict:
+def cost_analysis_dict(compiled) -> dict:
+    """jax <= 0.4.x returns a one-element list of dicts; newer jax returns
+    the dict itself."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def analyze(compiled) -> dict:
+    cost = cost_analysis_dict(compiled)
     return {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),

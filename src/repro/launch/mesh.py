@@ -32,5 +32,27 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_replica_mesh(n_replicas: int, *, pod: int = 1):
+    """Mesh for the mesh-native exchange engine: one device per replica,
+    replica axes ('pod','data') [or just ('data',)], no inner model axis.
+    Uses the first ``n_replicas`` devices, so it composes with processes
+    that have more devices than replicas (the extras idle — the engine is
+    pure data parallelism, exactly the paper's regime)."""
+    import numpy as np
+    devs = jax.devices()
+    assert n_replicas <= len(devs), (n_replicas, len(devs))
+    assert n_replicas % pod == 0, (n_replicas, pod)
+    arr = np.asarray(devs[:n_replicas])
+    if pod > 1:
+        return jax.sharding.Mesh(arr.reshape(pod, n_replicas // pod),
+                                 ("pod", "data"))
+    return jax.sharding.Mesh(arr, ("data",))
+
+
+def replica_axes_of(mesh):
+    """The mesh axes that carry replicas (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
 def mesh_chips(mesh) -> int:
     return mesh.devices.size

@@ -22,14 +22,15 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint, models
-from repro.configs import (ALEXNET, ALEXNET_SMOKE, SHAPES, get_config,
-                           reduced)
-from repro.core import (init_param_avg_state, make_param_avg_step,
-                        reshape_for_replicas, replica_spread)
+from repro.configs import ALEXNET, ALEXNET_SMOKE, get_config, reduced
+from repro.core import (init_param_avg_state, make_mesh_param_avg_step,
+                        make_param_avg_step, reshape_for_replicas,
+                        replica_spread)
+from repro.launch.mesh import make_replica_mesh
+from repro.sharding.specs import replica_sharding
 from repro.data import PrefetchLoader, synthetic
 from repro.models import alexnet as alexnet_mod
 from repro.optim import schedules
@@ -96,6 +97,12 @@ def main():
     ap.add_argument("--image-size", type=int, default=64)
     ap.add_argument("--replicas", type=int, default=None)
     ap.add_argument("--strategy", default="all_reduce")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "mesh", "reference"],
+                    help="mesh: shard_map + real collectives (one replica "
+                    "per device); reference: leading-axis-R vmap + GSPMD "
+                    "(supports replicas < devices via tensor parallelism); "
+                    "auto: mesh when replicas == devices > 1")
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--optimizer", default="sgd_momentum")
     ap.add_argument("--schedule", default="constant")
@@ -127,31 +134,43 @@ def main():
     else:
         sched = schedules.cosine(args.lr, args.steps // 10, args.steps)
 
+    engine = args.engine
+    if engine == "auto":
+        engine = "mesh" if (n_dev > 1 and n_rep == n_dev) else "reference"
+
     rng = jax.random.PRNGKey(args.seed)
     state = init_param_avg_state(rng, init, opt, n_rep)
-    step_fn = jax.jit(make_param_avg_step(loss, opt, sched,
-                                          strategy=args.strategy,
-                                          sync_every=args.sync_every))
 
-    if n_dev > 1:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((n_rep, n_dev // n_rep), ("data", "model"))
-        rep_sh = NamedSharding(mesh, P("data"))
-        state = jax.device_put(state, jax.tree.map(
-            lambda x: NamedSharding(mesh, P(*("data",) + (None,) *
-                                            (x.ndim - 1)))
-            if x.ndim > 0 else NamedSharding(mesh, P()), state))
-        put = lambda b: jax.device_put(b, jax.tree.map(  # noqa: E731
-            lambda x: rep_sh, b))
+    if engine == "mesh":
+        # mesh-native engine: shard_map over ('data',), one replica per
+        # device, exchange lowers to real collectives (docs/architecture.md)
+        mesh = make_replica_mesh(n_rep)
+        step_fn = jax.jit(make_mesh_param_avg_step(
+            loss, opt, sched, mesh=mesh, strategy=args.strategy,
+            replica_axes=("data",), sync_every=args.sync_every))
+        state = jax.device_put(state, replica_sharding(
+            state, mesh, replica_axes=("data",)))
+        put = lambda b: jax.device_put(  # noqa: E731
+            b, replica_sharding(b, mesh, replica_axes=("data",)))
     else:
-        put = jax.device_put
+        step_fn = jax.jit(make_param_avg_step(loss, opt, sched,
+                                              strategy=args.strategy,
+                                              sync_every=args.sync_every))
+        if n_dev > 1:
+            mesh = jax.make_mesh((n_rep, n_dev // n_rep), ("data", "model"))
+            state = jax.device_put(state, replica_sharding(
+                state, mesh, replica_axes=("data",)))
+            put = lambda b: jax.device_put(  # noqa: E731
+                b, replica_sharding(b, mesh, replica_axes=("data",)))
+        else:
+            put = jax.device_put
 
     loader = PrefetchLoader(
         map(lambda b: reshape_for_replicas(b, n_rep), source),
         prefetch=args.prefetch, device_put=put)
 
     print(f"arch={getattr(cfg, 'name', args.arch)} replicas={n_rep} "
-          f"devices={n_dev} strategy={args.strategy} "
+          f"devices={n_dev} engine={engine} strategy={args.strategy} "
           f"sync_every={args.sync_every}")
     losses = []
     t0 = time.time()

@@ -12,8 +12,6 @@ Layout is NHWC (TPU-native) rather than the paper's cuda-convnet C01B.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

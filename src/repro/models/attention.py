@@ -101,7 +101,7 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, window, causal, scale,
         a0 = jnp.zeros((b, q_block, h, g, hd), jnp.float32)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, den, acc = carry
             kcur, vcur, kpcur = ki
             s = jnp.einsum("bqhgk,bshk->bhgqs", qcur, kcur,
                            preferred_element_type=jnp.float32) * scale
@@ -110,16 +110,16 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, window, causal, scale,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + jnp.sum(p, axis=-1)
+            den = den * corr + jnp.sum(p, axis=-1)
             acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
                 "bhgqs,bshk->bqhgk", p.astype(qcur.dtype), vcur,
                 preferred_element_type=jnp.float32)
-            return (m_new, l, acc), None
+            return (m_new, den, acc), None
 
-        (m, l, acc), _ = jax.lax.scan(
+        (m, den, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
             (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), kposb))
-        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        out = acc / jnp.maximum(den, 1e-30).transpose(0, 3, 1, 2)[..., None]
         return None, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(q_step, None,

@@ -94,10 +94,10 @@ def forward(params, cfg, frames, dec_tokens, attn_impl="auto", remat=False):
 
 def init_decode_cache(cfg, batch: int, seq_len: int, enc_len: int):
     dt = _dtype(cfg)
-    l = cfg.n_layers
+    nl = cfg.n_layers
 
     def stack(x):
-        return jnp.broadcast_to(x[None], (l,) + x.shape).copy()
+        return jnp.broadcast_to(x[None], (nl,) + x.shape).copy()
 
     self_c = attn.init_cache(cfg, batch, attn.cache_capacity(cfg, seq_len), dt)
     cross = {"k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt),

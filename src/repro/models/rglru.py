@@ -91,9 +91,9 @@ def rglru_seq(p, cfg, x, cache=None):
         # fold the carried state into the first step: b_1 += a_1 * h_0
         bt = bt.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lt, rt):
+        al, bl = lt
+        ar, br = rt
         return al * ar, ar * bl + br
 
     _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)

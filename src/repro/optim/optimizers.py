@@ -16,7 +16,7 @@ AdamW is provided as the non-linear counterexample and the modern default.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ Caches: KV heads over 'model' when divisible, else the sequence axis.
 from __future__ import annotations
 
 import re
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -204,6 +204,22 @@ def state_sharding(state_shapes, cfg, mesh: Mesh, *, replica_axes=None,
         spec = P(*lead, *tuple(base) + (None,) * (base_ndim - len(base)))
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replica_sharding(tree_shapes, mesh: Mesh, *,
+                     replica_axes=("pod", "data")):
+    """NamedShardings for the mesh-native exchange engine: every leaf's
+    leading replica axis over ``replica_axes`` (one replica per mesh
+    slice), all other dims unsharded, scalars replicated.  This is the
+    device layout ``core.make_mesh_param_avg_step`` expects for both the
+    TrainState and each batch — built from ``core.replica_specs`` so the
+    two can never diverge."""
+    from repro.core.steps import replica_specs
+    axes = tuple(a for a in replica_axes if a in mesh.axis_names)
+    lead = (axes if len(axes) > 1 else axes[0]) if axes else None
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        replica_specs(tree_shapes, lead),
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def batch_sharding(batch_shapes, mesh: Mesh, *, batch_axes=("pod", "data"),

@@ -1,5 +1,12 @@
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# make tests/_hyp.py (hypothesis optional-dependency shim) importable from
+# test modules in subdirectories regardless of pytest's import mode
+sys.path.insert(0, os.path.dirname(__file__))
 
 
 @pytest.fixture(scope="session")

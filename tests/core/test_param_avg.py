@@ -11,9 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
-from repro.core import (STRATEGIES, exchange_average, init_grad_avg_state,
+from repro.core import (exchange_average, init_grad_avg_state,
                         init_param_avg_state, make_grad_avg_step,
                         make_param_avg_step, replica_spread, replicate,
                         reshape_for_replicas, unreplicate)

@@ -4,7 +4,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data import PrefetchLoader, synthetic
 from repro.data.preprocess import (make_image_preprocess, random_crop_flip,

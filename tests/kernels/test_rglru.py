@@ -69,9 +69,9 @@ def test_matches_model_associative_scan():
     """The model block uses jax.lax.associative_scan — 3rd implementation."""
     a, bb = make_ab(2, 64, 8, seed=3)
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lt, rt):
+        al, bl = lt
+        ar, br = rt
         return al * ar, ar * bl + br
 
     _, h3 = jax.lax.associative_scan(

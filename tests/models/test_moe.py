@@ -4,9 +4,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
-from repro.configs import ARCHS, MoEConfig, reduced
+from repro.configs import ARCHS, reduced
 from repro.models import moe
 
 

@@ -4,7 +4,6 @@ Each instantiates a REDUCED same-family variant (2 layers, d_model<=512,
 <=4 experts) and runs one forward + one train step on CPU, asserting output
 shapes and no NaNs.  The FULL configs are exercised only via the dry-run.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
 """Optimizers vs hand-computed updates; schedule properties."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.optim import schedules
 from repro.optim.optimizers import adamw, apply_updates, sgd_momentum

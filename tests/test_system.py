@@ -5,7 +5,6 @@ claim (§3: within 0.5% of the Caffe reference)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import models
 from repro.configs import ALEXNET_SMOKE, ARCHS, reduced
