@@ -1,11 +1,17 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + trajectory record.
 
 Benchmarks print ``name,us_per_call,derived`` rows (harness contract) and
 run on host devices.  Multi-device benchmarks spawn a subprocess with
 XLA_FLAGS set, keeping the main process at 1 device.
+
+Every emitted row is also recorded in-process; ``write_bench_json``
+persists the run as ``BENCH_<date>.json`` so future PRs have a baseline
+trajectory to regress against (set ``REPRO_BENCH_OUT`` to override the
+path).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -14,6 +20,8 @@ import time
 import jax
 
 REPO = os.path.join(os.path.dirname(__file__), "..")
+
+_ROWS: list = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -31,6 +39,32 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
+
+
+def recorded_rows() -> list:
+    return list(_ROWS)
+
+
+def write_bench_json(path: str = None, extra: dict = None,
+                     partial: bool = False) -> str:
+    """Persist this run's rows as a BENCH_<date>.json trajectory file.
+
+    ``partial`` runs get a ``.partial.json`` suffix (gitignored) so they
+    never overwrite the committed full-suite baseline for the day.
+    """
+    date = time.strftime("%Y-%m-%d")
+    suffix = ".partial.json" if partial else ".json"
+    path = path or os.environ.get("REPRO_BENCH_OUT") or os.path.normpath(
+        os.path.join(REPO, "benchmarks", f"BENCH_{date}{suffix}"))
+    payload = {"date": date, "jax": jax.__version__,
+               "backend": jax.default_backend(),
+               "device_count": jax.device_count(), "rows": _ROWS}
+    payload.update(extra or {})
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def run_subprocess_bench(code: str, devices: int, timeout=560) -> str:

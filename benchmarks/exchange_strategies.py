@@ -92,7 +92,8 @@ for strat in strats:
     step = jax.jit(make_mesh_param_avg_step(loss, opt,
                                             schedules.constant(0.01),
                                             mesh=mesh, strategy=strat,
-                                            replica_axes=("data",)))
+                                            replica_axes=("data",)),
+                   donate_argnums=0)   # state updates in place
     state, _ = step(state, b)          # compile + warm
     jax.block_until_ready(state)
     t0 = time.time()

@@ -17,15 +17,20 @@ from repro.kernels.rwkv6.rwkv6 import wkv_pallas
 def main():
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
 
-    # conv1 of (reduced) AlexNet
+    # conv1 of (reduced) AlexNet — both pallas pipelines vs the XLA direct
+    # conv (Table 1's backend axis: cuda-convnet vs cuDNN R1/R2)
     x = jax.random.normal(ks[0], (8, 64, 64, 3))
     w = jax.random.normal(ks[1], (7, 7, 3, 16)) * 0.1
     f_xla = jax.jit(lambda x, w: conv_ref.conv2d_ref(x, w, 2, 0))
     emit("conv/xla_direct", time_fn(f_xla, x, w), "backend=lax.conv")
+    f_fused = jax.jit(lambda x, w: conv_ops.conv2d_fused(
+        x, w, stride=2, padding=0))
+    emit("conv/pallas_fused", time_fn(f_fused, x, w),
+         "backend=pallas implicit-GEMM (interpret on cpu)")
     f_pal = jax.jit(lambda x, w: conv_ops.conv2d_im2col(
         x, w, stride=2, padding=0))
-    emit("conv/pallas_im2col", time_fn(f_pal, x, w),
-         "backend=pallas(interpret)")
+    emit("conv/pallas_im2col_ref", time_fn(f_pal, x, w),
+         "backend=pallas two-stage ref (interpret on cpu)")
 
     # attention S=256
     q = jax.random.normal(ks[2], (2, 256, 2, 2, 64))

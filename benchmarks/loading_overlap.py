@@ -21,6 +21,9 @@ def run(prefetch: int, steps: int = 15) -> float:
     cfg = ALEXNET_SMOKE
     params = alexnet.init(jax.random.PRNGKey(0), cfg)
 
+    # no donation here on purpose: params are reused every step and the
+    # only output is a scalar loss, so no input buffer can be reused —
+    # donating would just raise "donated buffers were not usable"
     @jax.jit
     def fwd(p, b):
         return alexnet.loss_fn(p, cfg, b["images"], b["labels"])

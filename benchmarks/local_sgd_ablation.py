@@ -32,7 +32,8 @@ def run(sync_every: int):
                                  lambda r: alexnet.init(r, cfg), opt, R)
     step = jax.jit(make_param_avg_step(
         lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"]),
-        opt, schedules.constant(0.02), sync_every=sync_every))
+        opt, schedules.constant(0.02), sync_every=sync_every),
+        donate_argnums=0)              # state updates in place
     src = synthetic.blob_images(cfg.n_classes, 32, cfg.image_size, seed=0)
     loss = None
     for i in range(STEPS):

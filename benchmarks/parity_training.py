@@ -32,8 +32,11 @@ def main():
                               lambda r: alexnet.init(r, cfg), opt, 4)
     sg = init_grad_avg_state(jax.random.PRNGKey(0),
                              lambda r: alexnet.init(r, cfg), opt)
-    pstep = jax.jit(make_param_avg_step(loss_fn, opt, sched))
-    gstep = jax.jit(make_grad_avg_step(loss_fn, opt, sched))
+    # donate the TrainState: the old state is consumed each step
+    pstep = jax.jit(make_param_avg_step(loss_fn, opt, sched),
+                    donate_argnums=0)
+    gstep = jax.jit(make_grad_avg_step(loss_fn, opt, sched),
+                    donate_argnums=0)
 
     src = synthetic.blob_images(cfg.n_classes, BATCH, cfg.image_size, seed=0)
     lp = lg = None

@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
 
-Emits ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+Emits ``name,us_per_call,derived`` CSV rows and writes the whole run to
+``benchmarks/BENCH_<date>.json`` (override with ``REPRO_BENCH_OUT``) so
+future PRs have a trajectory baseline.  Mapping to the paper:
   table1_throughput   Table 1 (replicas x parallel-loading grid)
   loading_overlap     Fig. 1  (double-buffered loading)
   exchange_strategies Fig. 2  (exchange+average schedules)
@@ -12,10 +14,11 @@ Emits ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
-from benchmarks import (exchange_strategies, kernel_backends,
+from benchmarks import (common, exchange_strategies, kernel_backends,
                         loading_overlap, local_sgd_ablation, parity_training,
                         table1_throughput)
 
@@ -35,9 +38,11 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
+    ran = []
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
+        ran.append(name)
         print(f"# --- {name} ---", flush=True)
         try:
             fn()
@@ -45,6 +50,13 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
             print(f"# FAILED {name}: {e}", flush=True)
+    # a partial run (--only / fast mode) must not clobber the committed
+    # full-suite baseline for the day — it gets a .partial name instead
+    partial = bool(args.only) or os.environ.get("REPRO_BENCH_FAST") == "1"
+    path = common.write_bench_json(partial=partial,
+                                   extra={"suites": ran, "failed": failed,
+                                          "partial": partial})
+    print(f"# wrote {path}", flush=True)
     if failed:
         sys.exit(1)
 

@@ -1,13 +1,25 @@
 """Paper Table 1 analogue: AlexNet training time per 20 iterations,
-{1, 2, 4} replicas x {parallel loading on/off} x conv backend.
+conv backend x {1, 2, 4} replicas x {parallel loading on/off}.
 
 The paper's numbers (Titan Black, batch 256 global): cuDNN-R2 2-GPU with
 parallel loading 19.72 s / 20 iters vs 43.52 s for 1-GPU serial — a 2.2x
 combined speedup.  Here replicas are host devices (CPU), so absolute times
 are meaningless; the DERIVED column reports the speedup structure the
 paper's table demonstrates (scaling efficiency + loading overlap gain).
+
+Both conv backends run end-to-end training: ``xla`` (lax.conv) and
+``pallas`` (the fused implicit-GEMM kernel — interpret-mode on CPU, so
+its absolute time reflects the Pallas interpreter, not the MXU; the row
+exists to keep the compiled path exercised and regression-tracked).
+
+A donation A/B pair (same config, ``donate_argnums=0`` on vs off) is
+also emitted: the donated step must be no slower than the non-donated
+baseline.  Set ``REPRO_BENCH_FAST=1`` for a 1-replica prefetch-only
+smoke (CI) — both backends still run.
 """
 from __future__ import annotations
+
+import os
 
 from benchmarks.common import emit, run_subprocess_bench
 
@@ -25,13 +37,16 @@ from repro.optim.optimizers import sgd_momentum
 R = __REPLICAS__
 PREFETCH = __PREFETCH__
 BACKEND = "__BACKEND__"
+DONATE = __DONATE__
+ITERS = __ITERS__
 cfg = ALEXNET_SMOKE
 GLOBAL_BATCH = 64
 opt = sgd_momentum()
 state = init_param_avg_state(jax.random.PRNGKey(0), lambda r: alexnet.init(r, cfg), opt, R)
 step = jax.jit(make_param_avg_step(
     lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"], conv_backend=BACKEND),
-    opt, schedules.constant(0.01)))
+    opt, schedules.constant(0.01)),
+    donate_argnums=(0,) if DONATE else ())
 mean = synthetic.mean_image(synthetic.blob_images(10, GLOBAL_BATCH, cfg.image_size + 8, seed=1), 2)
 prep = make_image_preprocess(mean, cfg.image_size, seed=0)
 src = map(lambda b: reshape_for_replicas({k: jnp.asarray(v) for k, v in prep(b).items()}, R),
@@ -41,35 +56,61 @@ loader = PrefetchLoader(src, prefetch=PREFETCH)
 state, _ = step(state, next(loader))
 jax.block_until_ready(state.params)
 t0 = time.time()
-for i in range(20):
+for i in range(ITERS):
     state, loss = step(state, next(loader))
 jax.block_until_ready(state.params)
-print("RESULT", time.time() - t0)
+print("RESULT", (time.time() - t0) * 20 / ITERS)
 loader.close()
 """
 
 
+def _run(backend: str, replicas: int, prefetch: int, donate: bool = True,
+         iters: int = 20) -> float:
+    code = (CHILD.replace("__REPLICAS__", str(replicas))
+            .replace("__PREFETCH__", str(prefetch))
+            .replace("__BACKEND__", backend)
+            .replace("__DONATE__", str(int(donate)))
+            .replace("__ITERS__", str(iters)))
+    out = run_subprocess_bench(code, devices=replicas)
+    return float([ln for ln in out.splitlines()
+                  if ln.startswith("RESULT")][0].split()[1])
+
+
 def main():
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    backends = ("xla", "pallas")
+    replica_grid = (1,) if fast else (1, 2, 4)
+    prefetches = (2,) if fast else (2, 0)
+    # interpret-mode pallas steps are ~100x slower; fewer timed iters
+    # (the emitted number is normalized to s/20it either way)
+    iters = {"xla": 4 if fast else 20, "pallas": 3 if fast else 5}
+
     results = {}
-    for backend in ("xla",):
-        for replicas in (1, 2, 4):
-            for prefetch in (2, 0):
-                code = (CHILD.replace("__REPLICAS__", str(replicas))
-                        .replace("__PREFETCH__", str(prefetch))
-                        .replace("__BACKEND__", backend))
-                out = run_subprocess_bench(code, devices=replicas)
-                secs = float([l for l in out.splitlines()
-                              if l.startswith("RESULT")][0].split()[1])
+    for backend in backends:
+        for replicas in replica_grid:
+            for prefetch in prefetches:
+                secs = _run(backend, replicas, prefetch,
+                            iters=iters[backend])
                 results[(backend, replicas, prefetch)] = secs
                 load = "parload" if prefetch else "serial"
                 emit(f"table1/{backend}/{replicas}rep/{load}",
                      secs / 20 * 1e6, f"s_per_20it={secs:.2f}")
-    base = results[("xla", 1, 0)]
+    base = results.get(("xla", 1, 0))
     for (backend, r, p), secs in results.items():
-        if (r, p) != (1, 0):
+        if backend == "xla" and base and (r, p) != (1, 0):
             emit(f"table1/speedup/{r}rep/"
                  f"{'parload' if p else 'serial'}",
                  secs / 20 * 1e6, f"speedup_vs_serial1={base / secs:.2f}x")
+
+    # donation A/B: same config with and without donate_argnums=0 — the
+    # in-place state update must not be slower than fresh allocations
+    it = iters["xla"]
+    on = results.get(("xla", 1, 2)) or _run("xla", 1, 2, donate=True,
+                                            iters=it)
+    off = _run("xla", 1, 2, donate=False, iters=it)
+    emit("table1/donation/on", on / 20 * 1e6, f"s_per_20it={on:.2f}")
+    emit("table1/donation/off", off / 20 * 1e6,
+         f"s_per_20it={off:.2f};donated_speedup={off / on:.2f}x")
 
 
 if __name__ == "__main__":

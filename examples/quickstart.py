@@ -33,7 +33,8 @@ state = init_param_avg_state(jax.random.PRNGKey(0),
                              lambda r: alexnet.init(r, cfg), opt, REPLICAS)
 step = jax.jit(make_param_avg_step(
     lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"]),
-    opt, sched, strategy="pairwise"))    # 2 replicas => exactly Fig. 2
+    opt, sched, strategy="pairwise"),    # 2 replicas => exactly Fig. 2
+    donate_argnums=0)                    # state updates in place
 
 # loader process analogue: prefetch + preprocess (mean-subtract, crop, flip)
 mean = synthetic.mean_image(

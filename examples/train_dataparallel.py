@@ -70,7 +70,8 @@ step = jax.jit(make_mesh_param_avg_step(
     lambda p, b: models.loss_fn(p, cfg, b), opt, sched, mesh=mesh,
     replica_axes=("data",), sync_every=args.sync_every),
     in_shardings=(sshard, None),
-    out_shardings=(sshard, NamedSharding(mesh, P())))
+    out_shardings=(sshard, NamedSharding(mesh, P())),
+    donate_argnums=0)                    # state updates in place
 
 loader = PrefetchLoader(
     synthetic.markov_lm(cfg.vocab_size, args.batch * R, args.seq_len,

@@ -55,10 +55,22 @@ class PrefetchLoader:
                 if self._stop.is_set():
                     return
                 staged = self._device_put(self._preprocess(batch))
-                self._q.put(staged)
-            self._q.put(_SENTINEL)
+                if not self._put(staged):
+                    return
+            self._put(_SENTINEL)
         except Exception as e:                      # surface in consumer
-            self._q.put(_ExcBox(e))
+            self._put(_ExcBox(e))
+
+    def _put(self, item) -> bool:
+        """Enqueue unless stopped; never blocks past close() (a plain
+        ``put`` on a full queue would deadlock the close/join)."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def __iter__(self):
         return self
@@ -74,6 +86,8 @@ class PrefetchLoader:
         return item
 
     def close(self):
+        """Stop and JOIN the worker — a loader per benchmark config would
+        otherwise leak a thread each (the old close never joined)."""
         self._stop.set()
         # drain so the worker can observe the stop flag
         try:
@@ -81,6 +95,9 @@ class PrefetchLoader:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
 
 
 _SENTINEL = object()

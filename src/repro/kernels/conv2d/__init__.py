@@ -1,1 +1,1 @@
-from repro.kernels.conv2d import ops, ref  # noqa: F401
+from repro.kernels.conv2d import ops, ref, tune  # noqa: F401

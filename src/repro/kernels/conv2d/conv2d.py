@@ -1,12 +1,31 @@
-"""Pallas TPU blocked matmul — the MXU half of the im2col convolution.
+"""Pallas TPU conv kernels — the MXU half of the paper's hot path.
 
-The paper's hot-spot is convolution, and its Table 1 compares conv backends
-(cuda-convnet vs cuDNN R1/R2).  The TPU-native adaptation is NOT a direct
-port of either CUDA kernel: on TPU, convolution is lowered to im2col patch
-extraction + a systolic-array matmul.  This kernel is that matmul — blocked
-(bm, bk) x (bk, bn) tiles staged through VMEM with an fp32 accumulator
-carried across the K grid axis, bias add + optional ReLU fused into the
-final tile write (mirroring cuDNN's fused epilogue).
+The paper's hot-spot is convolution, and its Table 1 compares conv
+backends (cuda-convnet vs cuDNN R1/R2).  The TPU-native adaptation has
+two Pallas programs:
+
+``matmul_bias``
+    Blocked (bm, bk) x (bk, bn) matmul staged through VMEM with an fp32
+    accumulator carried across the K grid axis, bias add + optional ReLU
+    fused into the final tile write (mirroring cuDNN's fused epilogue).
+    This is the GEMM stage of the *reference* two-stage im2col path.
+
+``conv2d_fused``
+    Implicit-GEMM convolution: the grid walks (batch, M-tile, N-tile)
+    output tiles and each program instance gathers its input window
+    slices directly from the VMEM-staged ``(H, W, C)`` operand — the
+    ``(B*OH*OW, K*K*C)`` im2col patch tensor never exists in HBM.  The
+    K*K reduction is unrolled in-kernel as static strided slices feeding
+    the MXU, so all three grid axes are parallel.
+
+Both are differentiable via ``jax.custom_vjp`` (Pallas calls have no
+automatic AD): ``matmul_bias`` back-propagates through two more Pallas
+matmuls; ``conv2d_fused`` lowers its backward to XLA's conv-transpose
+kernels via ``jax.linear_transpose`` (no recomputed forward).
+
+``interpret``/block sizes are resolved by ``tune.py``: ``interpret=None``
+auto-compiles on TPU and interprets elsewhere; ``bm/bk/bn=None`` come
+from the shape-keyed autotune cache.
 """
 from __future__ import annotations
 
@@ -17,10 +36,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.conv2d import tune
+
 # jax 0.4.x names it TPUCompilerParams; newer jax renames to CompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
+
+# ---------------------------------------------------------------------------
+# blocked matmul + fused bias/ReLU epilogue (im2col reference GEMM stage)
+# ---------------------------------------------------------------------------
 
 def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_scr, *, n_k: int,
                    relu: bool):
@@ -44,17 +69,18 @@ def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_scr, *, n_k: int,
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "relu",
                                              "interpret"))
-def matmul_bias(x, w, b, *, bm: int = 128, bk: int = 128, bn: int = 128,
-                relu: bool = False, interpret: bool = True):
-    """(M,K) @ (K,N) + b(N,) with fused epilogue.  Pads to block multiples."""
+def _matmul_bias_impl(x, w, b, bm, bk, bn, relu, interpret):
     m, k = x.shape
     _, n = w.shape
     mp = -(-m // bm) * bm
     kp = -(-k // bk) * bk
     np_ = -(-n // bn) * bn
-    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
-    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
-    bp = jnp.pad(b, (0, np_ - n))[None, :]
+    # pad only what is misaligned — aligned calls must not pay HBM copies
+    xp = x if (mp == m and kp == k) else jnp.pad(x, ((0, mp - m),
+                                                     (0, kp - k)))
+    wp = w if (kp == k and np_ == n) else jnp.pad(w, ((0, kp - k),
+                                                      (0, np_ - n)))
+    bp = (b if np_ == n else jnp.pad(b, (0, np_ - n)))[None, :]
 
     out = pl.pallas_call(
         functools.partial(_matmul_kernel, n_k=kp // bk, relu=relu),
@@ -69,4 +95,193 @@ def matmul_bias(x, w, b, *, bm: int = 128, bk: int = 128, bn: int = 128,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, wp, bp)
-    return out[:m, :n]
+    return out if (mp == m and np_ == n) else out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _matmul_bias_core(x, w, b, bm, bk, bn, relu, interpret):
+    return _matmul_bias_impl(x, w, b, bm, bk, bn, relu, interpret)
+
+
+def _matmul_bias_fwd(x, w, b, bm, bk, bn, relu, interpret):
+    y = _matmul_bias_impl(x, w, b, bm, bk, bn, relu, interpret)
+    return y, (x, w, b, y)
+
+
+def _matmul_bias_bwd(bm, bk, bn, relu, interpret, res, dy):
+    x, w, b, y = res
+    if relu:
+        dy = dy * (y > 0).astype(dy.dtype)
+    db = dy.sum(0).astype(b.dtype)
+    # dx = dy @ w.T, dw = x.T @ dy — same MXU kernel, permuted blockings
+    zk = jnp.zeros((x.shape[1],), dy.dtype)
+    zn = jnp.zeros((dy.shape[1],), dy.dtype)
+    dx = _matmul_bias_impl(dy, w.T, zk, bm, bn, bk, False, interpret)
+    dw = _matmul_bias_impl(x.T, dy, zn, bk, bm, bn, False, interpret)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db
+
+
+_matmul_bias_core.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)
+
+
+def matmul_bias(x, w, b, *, bm: int = None, bk: int = None, bn: int = None,
+                relu: bool = False, interpret: bool = None):
+    """(M,K) @ (K,N) + b(N,) with fused bias/ReLU epilogue.
+
+    ``interpret=None`` auto-resolves (compiled on TPU); ``bm/bk/bn=None``
+    come from the autotune cache.  Differentiable.
+    """
+    interpret = tune.resolve_interpret(interpret)
+    if bm is None or bk is None or bn is None:
+        m, k = x.shape
+        n = w.shape[1]
+        tbm, tbk, tbn = tune.matmul_blocks(m, k, n, x.dtype,
+                                           interpret=interpret)
+        bm, bk, bn = bm or tbm, bk or tbk, bn or tbn
+    return _matmul_bias_core(x, w, b, bm, bk, bn, relu, interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused implicit-GEMM convolution
+# ---------------------------------------------------------------------------
+
+def _conv_fused_kernel(x_ref, w_ref, b_ref, o_ref, *, kernel: int,
+                       stride: int, oh: int, ow: int, m_pad: int,
+                       relu: bool):
+    """One (batch b, M-tile i, N-tile j) output tile.
+
+    x_ref (1, Hp, Wp, C) — the whole padded image, staged in VMEM;
+    w_ref (K*K*C, bn); b_ref (1, bn); o_ref (1, bm, bn).
+
+    Patch rows are gathered on the fly: for each static kernel offset
+    (kh, kw) the strided window slice of the image IS the (M, C) slab of
+    the im2col matrix belonging to that offset, so the reduction is
+    K*K unrolled (bm, C) @ (C, bn) MXU dots — implicit GEMM.
+    """
+    i = pl.program_id(1)
+    xv = x_ref[0]
+    c = xv.shape[-1]
+    bm, bn = o_ref.shape[1], o_ref.shape[2]
+    span_h = (oh - 1) * stride + 1
+    span_w = (ow - 1) * stride + 1
+    acc = jnp.zeros((bm, bn), jnp.float32)
+    for kh in range(kernel):
+        for kw in range(kernel):
+            xs = xv[kh:kh + span_h:stride, kw:kw + span_w:stride, :]
+            xs = xs.reshape(oh * ow, c)
+            if m_pad != oh * ow:
+                xs = jnp.pad(xs, ((0, m_pad - oh * ow), (0, 0)))
+            blk = jax.lax.dynamic_slice_in_dim(xs, i * bm, bm, 0)
+            q = kh * kernel + kw
+            acc += jax.lax.dot(
+                blk.astype(jnp.float32),
+                w_ref[q * c:(q + 1) * c, :].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = acc + b_ref[...].astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "oh", "ow",
+                                             "bm", "bn", "relu", "interpret"))
+def _conv_fused_impl(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
+                     interpret):
+    b_, hp, wp, cin = x.shape
+    cout = w.shape[-1]
+    m = oh * ow
+    m_pad = -(-m // bm) * bm
+    n_pad = -(-cout // bn) * bn
+    wmat = w.reshape(kernel * kernel * cin, cout)
+    if n_pad != cout:
+        wmat = jnp.pad(wmat, ((0, 0), (0, n_pad - cout)))
+        bias = jnp.pad(bias, (0, n_pad - cout))
+    bmat = bias[None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_conv_fused_kernel, kernel=kernel, stride=stride,
+                          oh=oh, ow=ow, m_pad=m_pad, relu=relu),
+        grid=(b_, m_pad // bm, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda b, i, j: (b, 0, 0, 0)),
+            pl.BlockSpec((kernel * kernel * cin, bn),
+                         lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_, m_pad, n_pad), x.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(x, wmat, bmat)
+    out = out if (m_pad == m and n_pad == cout) else out[:, :m, :cout]
+    return out.reshape(b_, oh, ow, cout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _conv_fused_core(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
+                     interpret):
+    return _conv_fused_impl(x, w, bias, kernel, stride, oh, ow, bm, bn,
+                            relu, interpret)
+
+
+def _conv_fused_fwd(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
+                    interpret):
+    y = _conv_fused_impl(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
+                         interpret)
+    return y, (x, w, bias, y)
+
+
+def _conv_fused_bwd(kernel, stride, oh, ow, bm, bn, relu, interpret, res,
+                    dy):
+    x, w, bias, y = res
+    if relu:
+        dy = dy * (y > 0).astype(dy.dtype)
+    db = dy.sum((0, 1, 2)).astype(bias.dtype)
+    # conv is bilinear: each partial is the transpose of a linear map, so
+    # XLA's conv-grad kernels fall out of linear_transpose with no
+    # recomputed forward (x was padded by the caller; padding=VALID here)
+    dyf = dy.astype(jnp.float32)
+
+    def conv_x(x_):
+        return jax.lax.conv_general_dilated(
+            x_, w.astype(jnp.float32), (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    def conv_w(w_):
+        return jax.lax.conv_general_dilated(
+            x.astype(jnp.float32), w_, (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    dx, = jax.linear_transpose(conv_x, x.astype(jnp.float32))(dyf)
+    dw, = jax.linear_transpose(conv_w, w.astype(jnp.float32))(dyf)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db
+
+
+_conv_fused_core.defvjp(_conv_fused_fwd, _conv_fused_bwd)
+
+
+def conv2d_fused(x, w, *, stride: int, padding: int, bias=None,
+                 relu: bool = False, bm: int = None, bn: int = None,
+                 interpret: bool = None):
+    """Implicit-GEMM conv: x (B,H,W,Cin), w (K,K,Cin,Cout) -> (B,OH,OW,Cout).
+
+    The im2col patch tensor never materializes in HBM — each grid program
+    gathers its windows from the (B,H,W,C) operand.  Differentiable.
+    """
+    interpret = tune.resolve_interpret(interpret)
+    k, _, cin, cout = w.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
+                        (0, 0)))
+    b_, hp, wp, _ = x.shape
+    oh = (hp - k) // stride + 1
+    ow = (wp - k) // stride + 1
+    if bm is None or bn is None:
+        tbm, tbn = tune.conv_blocks(b_, oh, ow, k, cin, cout, stride,
+                                    x.dtype, interpret=interpret)
+        bm, bn = bm or tbm, bn or tbn
+    if bias is None:
+        bias = jnp.zeros((cout,), x.dtype)
+    return _conv_fused_core(x, w, bias, k, stride, oh, ow, bm, bn, relu,
+                            interpret)

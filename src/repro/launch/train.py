@@ -108,7 +108,11 @@ def main():
     ap.add_argument("--schedule", default="constant")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--attn-impl", default="auto")
-    ap.add_argument("--conv-backend", default="xla")
+    ap.add_argument("--conv-backend", default="xla",
+                    choices=["xla", "pallas", "pallas_im2col_ref"],
+                    help="pallas: fused implicit-GEMM kernel (compiled on "
+                    "TPU, interpreter elsewhere); pallas_im2col_ref: "
+                    "two-stage XLA-im2col + Pallas GEMM parity path")
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -145,9 +149,12 @@ def main():
         # mesh-native engine: shard_map over ('data',), one replica per
         # device, exchange lowers to real collectives (docs/architecture.md)
         mesh = make_replica_mesh(n_rep)
+        # donate the TrainState: params/opt-state update in place instead
+        # of allocating a fresh copy of the full state every step
         step_fn = jax.jit(make_mesh_param_avg_step(
             loss, opt, sched, mesh=mesh, strategy=args.strategy,
-            replica_axes=("data",), sync_every=args.sync_every))
+            replica_axes=("data",), sync_every=args.sync_every),
+            donate_argnums=0)
         state = jax.device_put(state, replica_sharding(
             state, mesh, replica_axes=("data",)))
         put = lambda b: jax.device_put(  # noqa: E731
@@ -155,7 +162,8 @@ def main():
     else:
         step_fn = jax.jit(make_param_avg_step(loss, opt, sched,
                                               strategy=args.strategy,
-                                              sync_every=args.sync_every))
+                                              sync_every=args.sync_every),
+                          donate_argnums=0)
         if n_dev > 1:
             mesh = jax.make_mesh((n_rep, n_dev // n_rep), ("data", "model"))
             state = jax.device_put(state, replica_sharding(

@@ -6,9 +6,15 @@ layers (LRN after conv1/2, 3x3 stride-2 max-pool after conv1/2/5), two
 
 The convolution backend is pluggable, mirroring the paper's cuda-convnet vs
 cuDNN comparison (§2, Table 1):
-  ``xla``           lax.conv_general_dilated (the library backend)
-  ``pallas_im2col`` Pallas TPU kernel, im2col tiles fed to the MXU
-Layout is NHWC (TPU-native) rather than the paper's cuda-convnet C01B.
+  ``xla``               lax.conv_general_dilated (the library backend)
+  ``pallas``            fused implicit-GEMM Pallas kernel — patch gather
+                        inside the kernel, bias+ReLU epilogue fused, no
+                        im2col tensor in HBM (docs/kernels.md)
+  ``pallas_im2col_ref`` two-stage XLA im2col + Pallas GEMM, kept for
+                        parity testing the fused kernel
+``interpret=None`` auto-resolves per backend (kernels/conv2d/tune.py);
+block sizes come from the autotune cache.  Layout is NHWC (TPU-native)
+rather than the paper's cuda-convnet C01B.
 """
 from __future__ import annotations
 
@@ -18,20 +24,27 @@ import jax.numpy as jnp
 from repro.models.layers import softmax_xent
 
 
-def conv2d(x, w, b, stride: int, padding: int, backend: str = "xla"):
-    """x (B,H,W,C_in), w (K,K,C_in,C_out)."""
-    if backend == "pallas_im2col":
+def conv2d(x, w, b, stride: int, padding: int, backend: str = "xla", *,
+           relu: bool = False, interpret: bool = None):
+    """x (B,H,W,C_in), w (K,K,C_in,C_out).  The pallas backends fuse the
+    bias add (+ optional ReLU) into the kernel epilogue."""
+    if backend == "pallas":
         from repro.kernels.conv2d import ops as conv_ops
-        y = conv_ops.conv2d_im2col(x, w, stride=stride, padding=padding)
-    elif backend == "xla":
+        return conv_ops.conv2d_fused(x, w, stride=stride, padding=padding,
+                                     bias=b, relu=relu, interpret=interpret)
+    if backend in ("pallas_im2col_ref", "pallas_im2col"):
+        from repro.kernels.conv2d import ops as conv_ops
+        return conv_ops.conv2d_im2col(x, w, stride=stride, padding=padding,
+                                      bias=b, relu=relu, interpret=interpret)
+    if backend == "xla":
         y = jax.lax.conv_general_dilated(
             x, w, window_strides=(stride, stride),
             padding=[(padding, padding), (padding, padding)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
             preferred_element_type=jnp.float32).astype(x.dtype)
-    else:
-        raise ValueError(f"unknown conv backend {backend!r}")
-    return y + b.astype(y.dtype)
+        y = y + b.astype(y.dtype)
+        return jax.nn.relu(y) if relu else y
+    raise ValueError(f"unknown conv backend {backend!r}")
 
 
 def lrn(x, n: int = 5, alpha: float = 1e-4, beta: float = 0.75, k: float = 2.0):
@@ -79,12 +92,12 @@ def init(rng, cfg):
 
 
 def forward(params, cfg, images, *, train: bool = False, dropout_rng=None,
-            conv_backend: str = "xla"):
+            conv_backend: str = "xla", conv_interpret: bool = None):
     """images (B,H,W,C) -> logits (B, n_classes) float32."""
     h = images
     for cp, cs in zip(params["convs"], cfg.convs):
-        h = conv2d(h, cp["w"], cp["b"], cs.stride, cs.padding, conv_backend)
-        h = jax.nn.relu(h)
+        h = conv2d(h, cp["w"], cp["b"], cs.stride, cs.padding, conv_backend,
+                   relu=True, interpret=conv_interpret)
         if cs.lrn:
             h = lrn(h)
         if cs.pool:
@@ -105,7 +118,8 @@ def forward(params, cfg, images, *, train: bool = False, dropout_rng=None,
 
 
 def loss_fn(params, cfg, images, labels, *, train=False, dropout_rng=None,
-            conv_backend="xla"):
+            conv_backend="xla", conv_interpret=None):
     logits = forward(params, cfg, images, train=train,
-                     dropout_rng=dropout_rng, conv_backend=conv_backend)
+                     dropout_rng=dropout_rng, conv_backend=conv_backend,
+                     conv_interpret=conv_interpret)
     return softmax_xent(logits[:, None, :], labels[:, None])

@@ -53,6 +53,27 @@ def test_overlap_hides_load_latency():
     assert t_overlap < t_serial * 0.82, (t_overlap, t_serial)
 
 
+def test_close_joins_worker_thread():
+    """close() must JOIN the worker — the seed leaked one thread per
+    loader (a real problem for benchmark sweeps building many loaders),
+    and a worker blocked on a full queue must still exit."""
+    ld = PrefetchLoader(counter_source(100, delay=0.001), prefetch=2)
+    next(ld)
+    worker = ld._thread
+    assert worker is not None and worker.is_alive()
+    ld.close()
+    assert ld._thread is None
+    worker.join(timeout=2.0)
+    assert not worker.is_alive()
+
+
+def test_close_idempotent_and_after_exhaustion():
+    ld = PrefetchLoader(counter_source(2), prefetch=2)
+    assert len(list(ld)) == 2
+    ld.close()
+    ld.close()
+
+
 def test_worker_exception_propagates():
     def bad():
         yield {"x": np.zeros(2)}
