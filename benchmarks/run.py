@@ -10,6 +10,7 @@ future PRs have a trajectory baseline.  Mapping to the paper:
   exchange_strategies Fig. 2  (exchange+average schedules)
   kernel_backends     Table 1's conv-backend axis (+ other Pallas kernels)
   parity_training     §3 accuracy-parity claim (param-avg vs grad-avg)
+  session_throughput  Table 1 through the session layer (train_loop JSONL)
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import traceback
 
 from benchmarks import (common, exchange_strategies, kernel_backends,
                         loading_overlap, local_sgd_ablation, parity_training,
-                        table1_throughput)
+                        session_throughput, table1_throughput)
 
 SUITES = {
     "table1_throughput": table1_throughput.main,
@@ -29,6 +30,7 @@ SUITES = {
     "kernel_backends": kernel_backends.main,
     "parity_training": parity_training.main,
     "local_sgd_ablation": local_sgd_ablation.main,
+    "session_throughput": session_throughput.main,
 }
 
 

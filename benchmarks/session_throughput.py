@@ -1,0 +1,54 @@
+"""Table 1 via the session layer: train a short AlexNet session through
+``repro.launch.train`` (checkpointing + eval enabled, i.e. the REAL loop a
+user runs, not a stripped inner loop) and report the throughput summary the
+session emits as JSONL (docs/training.md).
+
+Rows: images/sec and step-time percentiles per replica count — the paper's
+Table 1 axes, measured end-to-end including loader, eval and checkpoint
+overhead.  Runs in subprocesses so the forced device count never leaks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+from benchmarks.common import REPO, emit
+
+STEPS = int(os.environ.get("REPRO_BENCH_SESSION_STEPS", "12"))
+
+
+def run_session(devices: int) -> dict:
+    with tempfile.TemporaryDirectory() as td:
+        metrics = os.path.join(td, "metrics.jsonl")
+        env = dict(os.environ)
+        env["REPRO_DEVICES"] = str(devices)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--arch", "alexnet",
+             "--smoke", "--steps", str(STEPS), "--batch", "16",
+             "--ckpt-dir", os.path.join(td, "ck"), "--ckpt-every",
+             str(STEPS // 2), "--eval-every", str(STEPS // 2),
+             "--metrics-out", metrics, "--log-every", str(STEPS)],
+            env=env, capture_output=True, text=True, timeout=560)
+        if r.returncode != 0:
+            raise RuntimeError(f"session failed:\n{r.stderr[-2000:]}")
+        with open(metrics) as f:
+            rows = [json.loads(line) for line in f if line.strip()]
+    summaries = [x for x in rows if x.get("kind") == "summary"]
+    assert summaries, rows
+    return summaries[-1]
+
+
+def main():
+    for devices in (1, 2):
+        s = run_session(devices)
+        emit(f"session/replicas{devices}/step", s["step_ms_p50"] * 1e3,
+             f"images_per_sec={s.get('images_per_sec')} "
+             f"p90_ms={s['step_ms_p90']} p99_ms={s['step_ms_p99']}")
+
+
+if __name__ == "__main__":
+    main()

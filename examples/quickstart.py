@@ -48,12 +48,15 @@ loader = PrefetchLoader(
                              REPLICAS)))
 
 t0 = time.time()
-for i, batch in zip(range(STEPS), loader):
-    state, loss = step(state, batch)
-    if (i + 1) % 20 == 0:
-        print(f"step {i + 1:3d}  loss {float(loss):.4f}  "
-              f"({(time.time() - t0) / (i + 1):.3f} s/step)")
-loader.close()
+try:
+    # try/finally: a mid-loop exception must not leak the loader thread
+    for i, batch in zip(range(STEPS), loader):
+        state, loss = step(state, batch)
+        if (i + 1) % 20 == 0:
+            print(f"step {i + 1:3d}  loss {float(loss):.4f}  "
+                  f"({(time.time() - t0) / (i + 1):.3f} s/step)")
+finally:
+    loader.close()
 
 spread = float(replica_spread(state.params))
 print(f"\nreplica spread after training: {spread:.2e}  "

@@ -87,14 +87,17 @@ loader = PrefetchLoader(
 
 t0 = time.time()
 first = None
-for i, batch in zip(range(args.steps), loader):
-    state, loss = step(state, batch)
-    if i == 0:
-        first = float(loss)
-    if (i + 1) % max(args.steps // 10, 1) == 0:
-        print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
-              f"{(time.time() - t0) / (i + 1):.2f}s/step", flush=True)
-loader.close()
+try:
+    # try/finally: a mid-loop exception must not leak the loader thread
+    for i, batch in zip(range(args.steps), loader):
+        state, loss = step(state, batch)
+        if i == 0:
+            first = float(loss)
+        if (i + 1) % max(args.steps // 10, 1) == 0:
+            print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
+                  f"{(time.time() - t0) / (i + 1):.2f}s/step", flush=True)
+finally:
+    loader.close()
 final = float(loss)
 print(f"\nloss {first:.3f} -> {final:.3f}; "
       f"replica spread {float(replica_spread(state.params)):.2e}")

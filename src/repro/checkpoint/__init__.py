@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import (latest_step, load_meta, restore,
+                                         save, step_dir)

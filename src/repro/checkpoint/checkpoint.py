@@ -6,12 +6,32 @@ dtype exactly.  Layout:
 
     <dir>/step_<N>/manifest.json
     <dir>/step_<N>/arrays.npz     (key = flattened pytree path)
+
+Checkpoints are written atomically (into ``step_<N>.tmp``, renamed into
+place) so a run killed mid-save never leaves a directory that
+``latest_step`` would try to resume from; ``latest_step`` additionally
+verifies completeness (manifest parses, arrays present) and skips corrupt
+directories.
+
+``restore`` is sharding-aware: pass ``sharding=`` a pytree of
+``jax.sharding.Sharding`` (same structure as ``like``, e.g. from
+``sharding.specs.replica_sharding``) and every leaf is ``device_put`` onto
+the live mesh layout — a resumed TrainState lands on exactly the devices a
+fresh run would use, for both the mesh and reference engines.  Without it,
+leaves land on the default device (the seed behavior, which silently
+dropped sharding).
+
+The manifest carries an optional ``meta`` dict (JSON) for host-side session
+state — loader position, LR-plateau controller state, RNG seeds — so a
+training *session* (repro.train_loop) can resume deterministically, not
+just the device arrays.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
 from typing import Any
 
 import jax
@@ -29,9 +49,17 @@ def _flatten(tree) -> dict:
     return out
 
 
-def save(directory: str, step: int, tree: Any) -> str:
-    d = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(d, exist_ok=True)
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def save(directory: str, step: int, tree: Any, meta: dict = None) -> str:
+    """Write ``tree`` (+ optional JSON-serializable ``meta``) atomically."""
+    final = step_dir(directory, step)
+    d = final + ".tmp"
+    if os.path.isdir(d):
+        shutil.rmtree(d)
+    os.makedirs(d)
     flat = _flatten(tree)
     manifest, buffers = {}, {}
     for key, leaf in flat.items():
@@ -39,33 +67,68 @@ def save(directory: str, step: int, tree: Any) -> str:
         manifest[key] = {"dtype": str(leaf.dtype), "shape": list(arr.shape)}
         buffers[key] = np.frombuffer(arr.tobytes(), np.uint8)
     with open(os.path.join(d, "manifest.json"), "w") as f:
-        json.dump({"step": step, "arrays": manifest}, f)
+        json.dump({"step": step, "arrays": manifest, "meta": meta}, f)
     np.savez(os.path.join(d, "arrays.npz"), **buffers)
-    return d
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.rename(d, final)
+    return final
 
 
-def restore(directory: str, step: int, like: Any) -> Any:
-    d = os.path.join(directory, f"step_{step:08d}")
+def restore(directory: str, step: int, like: Any, *,
+            sharding: Any = None) -> Any:
+    """Rebuild the pytree saved at ``step``.
+
+    ``like`` supplies structure (values ignored; ShapeDtypeStructs work).
+    ``sharding``, when given, is a pytree of ``jax.sharding.Sharding`` with
+    the same structure; each restored leaf is ``device_put`` to its
+    sharding so it lands on the live mesh layout instead of the default
+    device.
+    """
+    d = step_dir(directory, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)["arrays"]
     data = np.load(os.path.join(d, "arrays.npz"))
     flat_like = _flatten(like)
+    flat_shard = _flatten(sharding) if sharding is not None else {}
     restored = {}
     for key in flat_like:
         meta = manifest[key]
         buf = data[key].tobytes()
         np_dtype = jnp.dtype(meta["dtype"])       # ml_dtypes handles bf16
         arr = np.frombuffer(buf, dtype=np_dtype).reshape(meta["shape"])
-        restored[key] = jnp.asarray(arr)
+        if key in flat_shard and flat_shard[key] is not None:
+            restored[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            restored[key] = jnp.asarray(arr)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
-    keys = list(_flatten(like).keys())
+    keys = list(flat_like.keys())
     return jax.tree_util.tree_unflatten(treedef,
                                         [restored[k] for k in keys])
 
 
+def load_meta(directory: str, step: int) -> dict | None:
+    """The ``meta`` dict stored with ``save`` (None when absent)."""
+    with open(os.path.join(step_dir(directory, step), "manifest.json")) as f:
+        return json.load(f).get("meta")
+
+
+def _complete(d: str) -> bool:
+    """A checkpoint dir is resumable iff manifest parses and arrays exist."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            json.load(f)
+    except (OSError, ValueError):
+        return False
+    return os.path.isfile(os.path.join(d, "arrays.npz"))
+
+
 def latest_step(directory: str) -> int | None:
+    """Largest step with a COMPLETE checkpoint (gaps fine; ``.tmp`` dirs
+    from interrupted saves and corrupt/partial dirs are skipped)."""
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for name in os.listdir(directory)
-             if (m := re.match(r"step_(\d+)$", name))]
+             if (m := re.match(r"step_(\d+)$", name))
+             and _complete(os.path.join(directory, name))]
     return max(steps) if steps else None

@@ -40,16 +40,36 @@ class AlexNetConfig:
     dtype: str = "float32"
     citation: str = "Krizhevsky et al. 2012; Ding et al. ICLR 2015 (this paper)"
 
+    def feature_hw(self, image_size: int = None) -> int:
+        """Spatial size after the conv stack.  Raises ValueError when
+        ``image_size`` is too small for the architecture (a conv or pool
+        window would not fit) — the check behind ``--image-size``
+        validation in launch/train.py."""
+        size = self.image_size if image_size is None else image_size
+        hw = size
+        for i, cs in enumerate(self.convs):
+            hw = (hw + 2 * cs.padding - cs.kernel) // cs.stride + 1
+            if hw < 1:
+                raise ValueError(
+                    f"image size {size} invalid for {self.name}: conv{i + 1} "
+                    f"(k={cs.kernel}, s={cs.stride}, p={cs.padding}) would "
+                    f"see a {hw}-wide feature map")
+            if cs.pool:
+                hw = (hw - 3) // 2 + 1
+                if hw < 1:
+                    raise ValueError(
+                        f"image size {size} invalid for {self.name}: the "
+                        f"3x3/2 pool after conv{i + 1} would see an empty "
+                        "feature map")
+        return hw
+
     def n_params(self) -> int:
-        c_in, hw = self.in_channels, self.image_size
+        c_in = self.in_channels
         total = 0
         for cs in self.convs:
             total += cs.kernel * cs.kernel * c_in * cs.out_channels + cs.out_channels
-            hw = (hw + 2 * cs.padding - cs.kernel) // cs.stride + 1
-            if cs.pool:
-                hw = (hw - 3) // 2 + 1
             c_in = cs.out_channels
-        flat = hw * hw * c_in
+        flat = self.feature_hw() ** 2 * c_in
         total += flat * self.fc_dim + self.fc_dim
         total += self.fc_dim * self.fc_dim + self.fc_dim
         total += self.fc_dim * self.n_classes + self.n_classes

@@ -245,6 +245,29 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
     return step
 
 
+def make_eval_step(metric_fn: Callable, *, replica_axis: bool = True):
+    """Jitted validation step: ``metric_fn(params, batch) -> dict`` of
+    scalar metrics (loss + top-1 error for AlexNet, loss + perplexity for
+    the LM zoo — see ``repro.train_loop.eval``).
+
+    ``replica_axis=True`` (param-avg engines) evaluates the AVERAGED model
+    — the mean over the leading replica axis, i.e. the ensemble the paper
+    reports validation error for.  With ``sync_every=1`` replicas are
+    already identical and the mean is a no-op numerically; under local SGD
+    it is the natural "current consensus" model.  Batches carry NO replica
+    axis: eval is a property of the model, not of the parallel layout.
+    """
+
+    def eval_step(params, batch):
+        if replica_axis:
+            params = jax.tree.map(
+                lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(
+                    x.dtype), params)
+        return metric_fn(params, batch)
+
+    return eval_step
+
+
 def make_grad_avg_step(loss_fn: Callable, optimizer: Optimizer,
                        schedule: Callable):
     """Modern baseline: loss is a mean over the global batch, so XLA

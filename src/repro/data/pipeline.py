@@ -43,6 +43,7 @@ class PrefetchLoader:
         self._preprocess = preprocess or (lambda x: x)
         self._device_put = device_put or jax.device_put
         self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._done = False           # sentinel seen: stay exhausted
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         if prefetch > 0:
@@ -76,10 +77,30 @@ class PrefetchLoader:
         return self
 
     def __next__(self):
+        if self._stop.is_set():
+            # after close() the queue is drained and the worker dead — a
+            # bare q.get() would block forever (the seed's hang)
+            raise RuntimeError("PrefetchLoader is closed")
         if self._prefetch == 0:
             return self._device_put(self._preprocess(next(self._source)))
-        item = self._q.get()
+        if self._done:
+            raise StopIteration      # sentinel already consumed once
+        while True:
+            # timed get so a close() racing a blocked consumer unblocks it
+            try:
+                item = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise RuntimeError("PrefetchLoader is closed") from None
+                t = self._thread       # snapshot: close() may null the field
+                if t is not None and not t.is_alive() and self._q.empty():
+                    # worker died without a sentinel (its exception was
+                    # already re-raised once) — don't spin forever
+                    raise RuntimeError(
+                        "PrefetchLoader worker exited") from None
         if item is _SENTINEL:
+            self._done = True
             raise StopIteration
         if isinstance(item, _ExcBox):
             raise item.exc

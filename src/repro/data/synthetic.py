@@ -18,11 +18,17 @@ MAX_DENSE_STATES = 4096
 
 
 def markov_lm(vocab: int, batch: int, seq_len: int, seed: int = 0,
-              sharpness: float = 8.0) -> Iterator[dict]:
+              sharpness: float = 8.0,
+              sample_seed: int = None) -> Iterator[dict]:
     """For vocab > MAX_DENSE_STATES, the chain runs over K superstates and
     each token is drawn uniformly inside its superstate's block — a dense
     VxV table at LM vocabs would need tens of GB (50304^2 doubles = 20 GB,
-    the OOM that killed the first 100M run)."""
+    the OOM that killed the first 100M run).
+
+    ``sample_seed`` draws a different sample path over the SAME transition
+    table (the table comes from ``seed`` alone) — this is how the eval
+    loop gets a held-out stream of the same language the model trains on.
+    """
     rng = np.random.default_rng(seed)
     k = min(vocab, MAX_DENSE_STATES)
     block = vocab // k
@@ -30,6 +36,8 @@ def markov_lm(vocab: int, batch: int, seq_len: int, seed: int = 0,
     probs = np.exp(logits - logits.max(-1, keepdims=True))
     probs /= probs.sum(-1, keepdims=True)
     cum = np.cumsum(probs, axis=-1)
+    if sample_seed is not None:       # same table, independent sample path
+        rng = np.random.default_rng(sample_seed)
     while True:
         states = np.empty((batch, seq_len), np.int32)
         states[:, 0] = rng.integers(0, k, size=batch)

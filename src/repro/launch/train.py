@@ -1,14 +1,30 @@
-"""Training driver: real steps on host devices.
+"""Training driver: resumable sessions on this host's devices.
+
+Builds the model / loss / data streams for an arch, picks the exchange
+engine, and hands the loop to ``repro.train_loop.TrainSession`` — which
+owns checkpoint/resume, the validation + plateau-LR loop, and Table-1
+throughput metrics (docs/training.md).
 
 Runs the paper's parameter-averaging data parallelism end-to-end on this
 host's devices (set REPRO_DEVICES=N to fan out over N host devices — this
 driver sets XLA_FLAGS itself when the variable is present, BEFORE importing
 jax, so it must stay the first import in the process).
 
+NOTE: without --smoke, --arch alexnet now means the FULL 227px net (the
+seed silently swapped in the smoke config whenever --image-size < 128);
+pass --smoke for CPU-sized runs, --image-size to override either config.
+
 Examples:
     REPRO_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
         --arch olmo-1b --smoke --steps 50 --replicas 4
-    PYTHONPATH=src python -m repro.launch.train --arch alexnet --steps 100
+    PYTHONPATH=src python -m repro.launch.train --arch alexnet --smoke \
+        --steps 100
+    # checkpoint every 10 steps, then pick up where a killed run stopped:
+    PYTHONPATH=src python -m repro.launch.train --arch alexnet --smoke \
+        --steps 100 --ckpt-dir /tmp/ck --ckpt-every 10 --resume
+    # the paper's LR rule: eval every 20 steps, /10 when error plateaus:
+    PYTHONPATH=src python -m repro.launch.train --arch alexnet --smoke \
+        --steps 200 --schedule plateau --eval-every 20
 """
 import os
 
@@ -19,31 +35,43 @@ if os.environ.get("REPRO_DEVICES"):
 
 # ruff: noqa: E402
 import argparse
-import time
+import dataclasses
 
 import jax
 import numpy as np
 
-from repro import checkpoint, models
+from repro import models
 from repro.configs import ALEXNET, ALEXNET_SMOKE, get_config, reduced
-from repro.core import (init_param_avg_state, make_mesh_param_avg_step,
-                        make_param_avg_step, reshape_for_replicas,
-                        replica_spread)
+from repro.core import (init_param_avg_state, make_eval_step,
+                        make_mesh_param_avg_step, make_param_avg_step,
+                        replica_spread, reshape_for_replicas)
 from repro.launch.mesh import make_replica_mesh
 from repro.sharding.specs import replica_sharding
-from repro.data import PrefetchLoader, synthetic
+from repro.data import synthetic
 from repro.models import alexnet as alexnet_mod
 from repro.optim import schedules
 from repro.optim.optimizers import get_optimizer
+from repro.train_loop import (EVAL_SEED_OFFSET, TrainSession, alexnet_metrics,
+                              lm_metrics)
 
 
-def build_lm(args):
+@dataclasses.dataclass
+class Build:
+    """Everything arch-specific the session needs."""
+    cfg: object
+    init: callable
+    loss: callable                    # loss(params, batch) -> scalar
+    make_stream: callable             # () -> fresh host-batch iterator
+    make_eval_batches: callable       # () -> fresh held-out iterator
+    eval_metric_fn: callable          # (params, batch) -> {name: scalar}
+    plateau_metric: str               # the metric the LR controller tracks
+
+
+def build_lm(args) -> Build:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg, n_layers=args.layers or 2,
                       d_model=args.d_model or 256)
-    source = synthetic.markov_lm(cfg.vocab_size, args.batch, args.seq_len,
-                                 seed=args.seed)
 
     def add_extras(b):
         out = {"tokens": b["tokens"], "labels": b["labels"]}
@@ -59,30 +87,74 @@ def build_lm(args):
             out["image_mask"] = mask
         return out
 
+    def make_stream():
+        return map(add_extras, synthetic.markov_lm(
+            cfg.vocab_size, args.batch, args.seq_len, seed=args.seed))
+
+    def make_eval_batches():
+        # same Markov chain (table from args.seed), held-out sample path
+        return map(add_extras, synthetic.markov_lm(
+            cfg.vocab_size, args.batch, args.seq_len, seed=args.seed,
+            sample_seed=args.seed + EVAL_SEED_OFFSET))
+
     def loss(params, batch):
         return models.loss_fn(params, cfg, batch, attn_impl=args.attn_impl)
 
-    init = lambda r: models.init(r, cfg)  # noqa: E731
-    return cfg, init, loss, map(add_extras, source)
+    return Build(cfg, lambda r: models.init(r, cfg), loss, make_stream,
+                 make_eval_batches, lm_metrics(cfg, attn_impl=args.attn_impl),
+                 plateau_metric="loss")
 
 
-def build_alexnet(args):
-    cfg = ALEXNET_SMOKE if (args.smoke or args.image_size < 128) else ALEXNET
-    source = synthetic.blob_images(cfg.n_classes, args.batch,
-                                   cfg.image_size + 8, seed=args.seed)
+def build_alexnet(args, error) -> Build:
+    cfg = ALEXNET_SMOKE if args.smoke else ALEXNET
+    if args.image_size is not None:
+        try:
+            cfg.feature_hw(args.image_size)   # conv/pool windows must fit
+        except ValueError as e:
+            error(str(e))
+        cfg = dataclasses.replace(cfg, image_size=args.image_size)
+    from repro.data.preprocess import make_image_preprocess
     mean = synthetic.mean_image(
         synthetic.blob_images(cfg.n_classes, args.batch, cfg.image_size + 8,
                               seed=args.seed + 1), 2)
-    from repro.data.preprocess import make_image_preprocess
-    prep = make_image_preprocess(mean, cfg.image_size, seed=args.seed)
+
+    def make_stream():
+        # fresh preprocess per stream: its RNG advances once per batch, so
+        # resume's fast-forward replays crops/flips exactly
+        prep = make_image_preprocess(mean, cfg.image_size, seed=args.seed)
+        return map(prep, synthetic.blob_images(
+            cfg.n_classes, args.batch, cfg.image_size + 8, seed=args.seed))
+
+    def make_eval_batches():
+        es = args.seed + EVAL_SEED_OFFSET
+        prep = make_image_preprocess(mean, cfg.image_size, seed=es)
+        return map(prep, synthetic.blob_images(
+            cfg.n_classes, args.batch, cfg.image_size + 8, seed=es))
 
     def loss(params, batch):
         return alexnet_mod.loss_fn(params, cfg, batch["images"],
                                    batch["labels"],
                                    conv_backend=args.conv_backend)
 
-    init = lambda r: alexnet_mod.init(r, cfg)  # noqa: E731
-    return cfg, init, loss, map(prep, source)
+    return Build(cfg, lambda r: alexnet_mod.init(r, cfg), loss, make_stream,
+                 make_eval_batches,
+                 alexnet_metrics(cfg, conv_backend=args.conv_backend),
+                 plateau_metric="top1_err")
+
+
+def make_controller(args):
+    if args.schedule == "constant":
+        return schedules.StaticController(schedules.constant(args.lr))
+    if args.schedule == "wsd":
+        return schedules.StaticController(
+            schedules.wsd(args.lr, args.steps // 10,
+                          int(args.steps * 0.7), args.steps // 5))
+    if args.schedule == "cosine":
+        return schedules.StaticController(
+            schedules.cosine(args.lr, args.steps // 10, args.steps))
+    return schedules.plateau_decay(
+        args.lr, factor=args.plateau_factor, patience=args.plateau_patience,
+        threshold=args.plateau_threshold)
 
 
 def main():
@@ -94,7 +166,10 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--d-model", type=int, default=None)
-    ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--image-size", type=int, default=None,
+                    help="override the AlexNet config's image size (errors "
+                    "if the conv stack cannot consume it; default: the "
+                    "config's own size — 227 full, 64 smoke)")
     ap.add_argument("--replicas", type=int, default=None)
     ap.add_argument("--strategy", default="all_reduce")
     ap.add_argument("--engine", default="auto",
@@ -105,8 +180,14 @@ def main():
                     "auto: mesh when replicas == devices > 1")
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--optimizer", default="sgd_momentum")
-    ap.add_argument("--schedule", default="constant")
+    ap.add_argument("--schedule", default="constant",
+                    choices=["constant", "wsd", "cosine", "plateau"],
+                    help="plateau = the paper's rule: divide LR by 10 when "
+                    "the validation metric plateaus (needs --eval-every)")
     ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--plateau-factor", type=float, default=0.1)
+    ap.add_argument("--plateau-patience", type=int, default=2)
+    ap.add_argument("--plateau-threshold", type=float, default=1e-3)
     ap.add_argument("--attn-impl", default="auto")
     ap.add_argument("--conv-backend", default="xla",
                     choices=["xla", "pallas", "pallas_im2col_ref"],
@@ -117,87 +198,119 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest complete checkpoint in "
+                    "--ckpt-dir and continue bit-exactly (fresh start if "
+                    "the directory has none)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="validation pass every N steps (0 = off)")
+    ap.add_argument("--eval-batches", type=int, default=2)
+    ap.add_argument("--metrics-out", default=None,
+                    help="JSONL trace path (train/eval/summary records, "
+                    "docs/training.md); implies per-step host sync")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    if args.schedule == "plateau" and args.eval_every <= 0:
+        ap.error("--schedule plateau needs --eval-every > 0 (the plateau "
+                 "rule is driven by validation metrics)")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir")
 
     n_dev = jax.device_count()
     n_rep = args.replicas or n_dev
     assert args.batch % n_rep == 0, (args.batch, n_rep)
 
     if args.arch == "alexnet":
-        cfg, init, loss, source = build_alexnet(args)
+        build = build_alexnet(args, ap.error)
     else:
-        cfg, init, loss, source = build_lm(args)
+        build = build_lm(args)
 
     opt = get_optimizer(args.optimizer)
-    if args.schedule == "constant":
-        sched = schedules.constant(args.lr)
-    elif args.schedule == "wsd":
-        sched = schedules.wsd(args.lr, args.steps // 10,
-                              int(args.steps * 0.7), args.steps // 5)
-    else:
-        sched = schedules.cosine(args.lr, args.steps // 10, args.steps)
+    controller = make_controller(args)
 
     engine = args.engine
     if engine == "auto":
         engine = "mesh" if (n_dev > 1 and n_rep == n_dev) else "reference"
 
     rng = jax.random.PRNGKey(args.seed)
-    state = init_param_avg_state(rng, init, opt, n_rep)
+    state = init_param_avg_state(rng, build.init, opt, n_rep)
 
+    sharding = None
     if engine == "mesh":
         # mesh-native engine: shard_map over ('data',), one replica per
         # device, exchange lowers to real collectives (docs/architecture.md)
         mesh = make_replica_mesh(n_rep)
-        # donate the TrainState: params/opt-state update in place instead
-        # of allocating a fresh copy of the full state every step
-        step_fn = jax.jit(make_mesh_param_avg_step(
-            loss, opt, sched, mesh=mesh, strategy=args.strategy,
-            replica_axes=("data",), sync_every=args.sync_every),
-            donate_argnums=0)
-        state = jax.device_put(state, replica_sharding(
-            state, mesh, replica_axes=("data",)))
+        sharding = replica_sharding(state, mesh, replica_axes=("data",))
+        state = jax.device_put(state, sharding)
         put = lambda b: jax.device_put(  # noqa: E731
             b, replica_sharding(b, mesh, replica_axes=("data",)))
+
+        def build_step(sched):
+            # donate the TrainState: params/opt-state update in place
+            # instead of allocating a fresh copy of the state every step
+            return jax.jit(make_mesh_param_avg_step(
+                build.loss, opt, sched, mesh=mesh, strategy=args.strategy,
+                replica_axes=("data",), sync_every=args.sync_every),
+                donate_argnums=0)
     else:
-        step_fn = jax.jit(make_param_avg_step(loss, opt, sched,
-                                              strategy=args.strategy,
-                                              sync_every=args.sync_every),
-                          donate_argnums=0)
+        out_shardings = None
         if n_dev > 1:
+            from jax.sharding import NamedSharding, PartitionSpec as P
             mesh = jax.make_mesh((n_rep, n_dev // n_rep), ("data", "model"))
-            state = jax.device_put(state, replica_sharding(
-                state, mesh, replica_axes=("data",)))
+            sharding = replica_sharding(state, mesh, replica_axes=("data",))
+            state = jax.device_put(state, sharding)
             put = lambda b: jax.device_put(  # noqa: E731
                 b, replica_sharding(b, mesh, replica_axes=("data",)))
+            # pin the state's layout as a loop invariant: left to GSPMD,
+            # the output sharding of a step can drift from the layout a
+            # fresh device_put (or a sharding-aware restore) produces,
+            # compiling a second executable whose reduction order differs
+            # in the last float bits — which would break bit-exact resume
+            out_shardings = (sharding, NamedSharding(mesh, P()))
         else:
             put = jax.device_put
 
-    loader = PrefetchLoader(
-        map(lambda b: reshape_for_replicas(b, n_rep), source),
-        prefetch=args.prefetch, device_put=put)
+        def build_step(sched):
+            kw = {} if out_shardings is None else \
+                {"out_shardings": out_shardings}
+            return jax.jit(make_param_avg_step(build.loss, opt, sched,
+                                               strategy=args.strategy,
+                                               sync_every=args.sync_every),
+                           donate_argnums=0, **kw)
 
-    print(f"arch={getattr(cfg, 'name', args.arch)} replicas={n_rep} "
+    session = TrainSession(
+        state=state, build_step=build_step,
+        make_stream=lambda: map(
+            lambda b: reshape_for_replicas(b, n_rep), build.make_stream()),
+        controller=controller, steps=args.steps, device_put=put,
+        sharding=sharding,
+        eval_step=make_eval_step(build.eval_metric_fn)
+        if args.eval_every else None,
+        make_eval_batches=build.make_eval_batches,
+        eval_every=args.eval_every, eval_batches=args.eval_batches,
+        plateau_metric=build.plateau_metric,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume, prefetch=args.prefetch,
+        log_every=args.log_every, images_per_step=args.batch,
+        metrics_path=args.metrics_out)
+
+    print(f"arch={getattr(build.cfg, 'name', args.arch)} replicas={n_rep} "
           f"devices={n_dev} engine={engine} strategy={args.strategy} "
-          f"sync_every={args.sync_every}")
-    losses = []
-    t0 = time.time()
-    for i in range(args.steps):
-        batch = next(loader)
-        state, loss_val = step_fn(state, batch)
-        if (i + 1) % args.log_every == 0 or i == 0:
-            lv = float(loss_val)
-            losses.append(lv)
-            print(f"step {i + 1:5d} loss {lv:.4f} "
-                  f"({(time.time() - t0) / (i + 1):.3f}s/step)", flush=True)
-        if args.ckpt_dir and args.ckpt_every and \
-                (i + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt_dir, i + 1, state)
-    spread = float(replica_spread(state.params))
-    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
-          f"final loss {losses[-1] if losses else float('nan'):.4f}; "
-          f"replica spread {spread:.2e}")
-    loader.close()
+          f"sync_every={args.sync_every}"
+          + (f" resume_from={args.ckpt_dir}" if args.resume else ""))
+    result = session.run()
+    spread = float(replica_spread(result.state.params))
+    summ = result.summary
+    through = (f"; images/sec {summ['images_per_sec']} "
+               f"p50 {summ.get('step_ms_p50')}ms "
+               f"p99 {summ.get('step_ms_p99')}ms"
+               if "images_per_sec" in summ else "")
+    print(f"done: steps {result.start_step} -> {result.final_step}; "
+          f"final loss "
+          f"{result.losses[-1][1] if result.losses else float('nan'):.4f}; "
+          f"replica spread {spread:.2e}" + through
+          + (f"; lr drops at {result.lr_drops}" if result.lr_drops else ""))
 
 
 if __name__ == "__main__":

@@ -2,10 +2,23 @@
 
 ``step_decay`` is the paper's AlexNet schedule (divide by 10 when validation
 error plateaus — realized as fixed-epoch steps as in the Caffe reference).
-``wsd`` is MiniCPM's warmup-stable-decay (arXiv:2404.06395 §4), included
-because minicpm-2b is an assigned architecture.
+``plateau_decay`` realizes the rule as written: a HOST-side controller fed
+by the validation loop that divides the LR by ``factor`` when the metric
+stops improving (repro.train_loop re-jits the step with the new constant —
+a handful of recompiles per run, exactly the paper's restart-with-lower-LR
+workflow).  ``wsd`` is MiniCPM's warmup-stable-decay (arXiv:2404.06395 §4),
+included because minicpm-2b is an assigned architecture.
+
+Compiled schedules are plain callables ``step -> lr``.  The session layer
+works with *controllers* (``as_controller``), which add the host-side
+protocol: ``schedule()`` returns the compiled callable for the current
+segment, ``update(metric)`` reports whether the LR just changed (step must
+be re-jitted), and ``state_dict``/``load_state_dict`` round-trip through
+the checkpoint manifest so a resumed session makes the same decisions.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 
@@ -49,3 +62,116 @@ def wsd(lr: float, warmup: int, stable: int, decay: int,
 def get_schedule(name: str, **kw):
     return {"constant": constant, "step_decay": step_decay, "cosine": cosine,
             "wsd": wsd}[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Host-side controllers (validation-driven schedules)
+# ---------------------------------------------------------------------------
+
+
+class StaticController:
+    """Wraps a compiled ``step -> lr`` schedule in the controller protocol:
+    ``update`` never requests a re-jit and there is no state to persist."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def schedule(self):
+        return self._fn
+
+    def update(self, metric: float) -> bool:
+        return False
+
+    def state_dict(self) -> dict:
+        return {}
+
+    def load_state_dict(self, d: dict) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class PlateauController:
+    """The paper's AlexNet rule, literally: divide the LR by ``1/factor``
+    when the validation metric plateaus (no relative improvement of at
+    least ``threshold`` for ``patience`` consecutive ``update`` calls).
+
+    Stateful and host-side by design — the decision depends on observed
+    validation metrics, which XLA cannot see.  The session feeds every
+    eval result through ``update``; a ``True`` return means the LR just
+    dropped and the train step must be rebuilt with ``schedule()`` (the
+    new LR is a compile-time constant, so each segment runs at full
+    compiled speed).  ``state_dict`` captures every decision input, so a
+    resumed session replays identically.
+    """
+
+    lr: float
+    factor: float = 0.1
+    patience: int = 2
+    threshold: float = 1e-3
+    min_lr: float = 0.0
+    mode: str = "min"                 # "min": lower metric is better
+    # --- mutable decision state (persisted in the checkpoint manifest) ---
+    best: float = None
+    num_bad: int = 0
+    n_drops: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("min", "max"):
+            raise ValueError(f"mode must be min|max, got {self.mode!r}")
+        if not 0 < self.factor < 1:
+            raise ValueError(f"factor must be in (0,1), got {self.factor}")
+
+    def schedule(self):
+        cur = self.lr
+        return lambda step: jnp.asarray(cur, jnp.float32)
+
+    def _improved(self, metric: float) -> bool:
+        if self.best is None:
+            return True
+        # relative margin on |best| (a plain best*(1-t) would invert the
+        # comparison for negative metrics, e.g. log-likelihoods)
+        margin = self.threshold * abs(self.best)
+        if self.mode == "min":
+            return metric < self.best - margin
+        return metric > self.best + margin
+
+    def update(self, metric: float) -> bool:
+        """Feed one validation metric; True iff the LR just dropped."""
+        metric = float(metric)
+        if self._improved(metric):
+            self.best = metric
+            self.num_bad = 0
+            return False
+        self.num_bad += 1
+        if self.num_bad < self.patience or self.lr <= self.min_lr:
+            return False
+        self.lr = max(self.lr * self.factor, self.min_lr)
+        self.num_bad = 0
+        self.n_drops += 1
+        return True
+
+    def state_dict(self) -> dict:
+        return {"lr": self.lr, "best": self.best, "num_bad": self.num_bad,
+                "n_drops": self.n_drops}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.lr = d["lr"]
+        self.best = d["best"]
+        self.num_bad = d["num_bad"]
+        self.n_drops = d["n_drops"]
+
+
+def plateau_decay(lr: float, factor: float = 0.1, patience: int = 2,
+                  threshold: float = 1e-3, min_lr: float = 0.0,
+                  mode: str = "min") -> PlateauController:
+    """Controller realizing "divide by 10 when validation error plateaus"."""
+    return PlateauController(lr, factor, patience, threshold, min_lr, mode)
+
+
+def as_controller(sched) -> "StaticController | PlateauController":
+    """Normalize a compiled schedule / controller to the controller API."""
+    if hasattr(sched, "schedule") and hasattr(sched, "update"):
+        return sched
+    if callable(sched):
+        return StaticController(sched)
+    raise TypeError(f"not a schedule or controller: {sched!r}")

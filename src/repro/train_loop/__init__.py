@@ -1,0 +1,6 @@
+"""Resumable training sessions: deterministic resume, validation-driven
+plateau LR decay, and Table-1 throughput metrics (see session.py)."""
+from repro.train_loop.eval import (EVAL_SEED_OFFSET, alexnet_metrics,
+                                   lm_metrics, run_eval, take)
+from repro.train_loop.metrics import MetricsWriter, percentile, read_jsonl
+from repro.train_loop.session import SessionResult, TrainSession

@@ -1,0 +1,66 @@
+"""Validation metrics + held-out streams for the session's eval loop.
+
+The paper reports Table 2 as top-1/top-5 *validation error* over days of
+training and drops the LR when that error plateaus; this module supplies
+the metric functions ``core.make_eval_step`` jits and the held-out
+synthetic streams they run on.
+
+Eval streams are STATELESS across the session: each eval pass rebuilds a
+freshly-seeded stream and takes its first ``n`` batches, so validation is
+a pure function of the parameters.  That is what makes resume trivially
+deterministic — there is no eval-stream position to checkpoint.  The eval
+seed is offset from the train seed so the two streams never overlap draws
+(held-out in the only sense that exists for an infinite synthetic source).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+EVAL_SEED_OFFSET = 100_003        # train seed + this = eval stream seed
+
+
+def alexnet_metrics(cfg, *, conv_backend: str = "xla") -> Callable:
+    """(params, batch{images,labels}) -> {loss, top1_err} (both f32)."""
+    from repro.models import alexnet
+    from repro.models.layers import softmax_xent
+
+    def metric_fn(params, batch):
+        logits = alexnet.forward(params, cfg, batch["images"],
+                                 conv_backend=conv_backend)
+        loss = softmax_xent(logits[:, None, :], batch["labels"][:, None])
+        top1 = jnp.mean(
+            (jnp.argmax(logits, axis=-1) == batch["labels"]).astype(
+                jnp.float32))
+        return {"loss": loss, "top1_err": 1.0 - top1}
+
+    return metric_fn
+
+
+def lm_metrics(cfg, *, attn_impl: str = "auto") -> Callable:
+    """(params, batch) -> {loss, perplexity} for the LM zoo."""
+    from repro import models
+
+    def metric_fn(params, batch):
+        loss = models.loss_fn(params, cfg, batch, attn_impl=attn_impl)
+        return {"loss": loss, "perplexity": jnp.exp(loss)}
+
+    return metric_fn
+
+
+def take(stream, n: int) -> list:
+    """Materialize the first ``n`` host batches of an iterator."""
+    it = iter(stream)
+    return [next(it) for _ in range(n)]
+
+
+def run_eval(eval_step, params, batches, device_put) -> dict:
+    """Average ``eval_step`` metrics over host ``batches``; returns plain
+    floats (the host-side plateau controller consumes these)."""
+    acc: dict = {}
+    for b in batches:
+        m = eval_step(params, device_put(b))
+        for k, v in m.items():
+            acc[k] = acc.get(k, 0.0) + float(v)
+    return {k: v / len(batches) for k, v in acc.items()}

@@ -1,0 +1,27 @@
+"""Shared subprocess isolation for multi-device tests: force the XLA host
+device count in a CHILD process so it never leaks into the main test
+process (the dry-run isolation rule).  Importable from any tests/ subdir
+(the rootdir conftest puts tests/ on sys.path, same as tests/_hyp.py)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_isolated(cmd_tail, devices: int, timeout=560, check: bool = True):
+    """Run ``python <cmd_tail...>`` with ``devices`` forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["REPRO_DEVICES"] = str(devices)       # for entrypoints that re-set
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable] + list(cmd_tail), env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if check:
+        assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r
+
+
+def run_child(code: str, devices: int = 8, timeout=560) -> str:
+    """Run a ``python -c`` snippet; asserts success, returns stdout."""
+    return run_isolated(["-c", code], devices, timeout).stdout

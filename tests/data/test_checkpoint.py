@@ -1,7 +1,13 @@
-"""Checkpoint roundtrip across dtypes and pytree shapes."""
+"""Checkpoint roundtrip across dtypes, pytree shapes, shardings and
+corrupt/partial directories (ISSUE-3: restore must land on the live mesh
+layout; latest_step must never hand back a half-written checkpoint)."""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _subproc import run_child
 
 from repro import checkpoint
 
@@ -28,6 +34,119 @@ def test_latest_step(tmp_path):
     checkpoint.save(str(tmp_path), 10, tree)
     checkpoint.save(str(tmp_path), 30, tree)
     assert checkpoint.latest_step(str(tmp_path)) == 30
+
+
+def test_latest_step_skips_gaps_and_corrupt_dirs(tmp_path):
+    tree = {"x": jnp.ones(2)}
+    checkpoint.save(str(tmp_path), 10, tree)
+    checkpoint.save(str(tmp_path), 30, tree)        # gap: no step 20
+    # half-written dir (killed before arrays.npz landed)
+    partial = tmp_path / "step_00000040"
+    partial.mkdir()
+    (partial / "manifest.json").write_text('{"step": 40, "arrays": {}}')
+    # corrupt manifest
+    corrupt = tmp_path / "step_00000050"
+    corrupt.mkdir()
+    (corrupt / "manifest.json").write_text("{not json")
+    (corrupt / "arrays.npz").write_bytes(b"")
+    # interrupted atomic save (tmp suffix never renamed into place)
+    (tmp_path / "step_00000060.tmp").mkdir()
+    # junk that matches nothing
+    (tmp_path / "step_junk").mkdir()
+    assert checkpoint.latest_step(str(tmp_path)) == 30
+    # a later COMPLETE checkpoint wins again
+    checkpoint.save(str(tmp_path), 70, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 70
+
+
+def test_save_is_atomic_and_overwrites(tmp_path):
+    tree = {"x": jnp.ones(3)}
+    d = checkpoint.save(str(tmp_path), 5, tree)
+    assert not os.path.isdir(d + ".tmp")            # tmp renamed away
+    checkpoint.save(str(tmp_path), 5, {"x": 2 * jnp.ones(3)})   # re-save
+    out = checkpoint.restore(str(tmp_path), 5, {"x": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(out["x"]), 2 * np.ones(3))
+
+
+def test_meta_roundtrip(tmp_path):
+    meta = {"controller": {"lr": 0.01, "best": 0.5, "num_bad": 1,
+                           "n_drops": 0}, "batches_consumed": 7}
+    checkpoint.save(str(tmp_path), 7, {"x": jnp.ones(2)}, meta=meta)
+    assert checkpoint.load_meta(str(tmp_path), 7) == meta
+    # seed-style saves without meta read back as None
+    checkpoint.save(str(tmp_path), 8, {"x": jnp.ones(2)})
+    assert checkpoint.load_meta(str(tmp_path), 8) is None
+
+
+def test_restore_without_manifest_meta_key(tmp_path):
+    """Manifests written by the seed (no 'meta' key) must still restore."""
+    checkpoint.save(str(tmp_path), 3, {"x": jnp.arange(4.0)})
+    mpath = tmp_path / "step_00000003" / "manifest.json"
+    m = json.loads(mpath.read_text())
+    del m["meta"]
+    mpath.write_text(json.dumps(m))
+    out = checkpoint.restore(str(tmp_path), 3, {"x": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(4.0))
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+
+
+_SHARDED_ROUNDTRIP = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import checkpoint
+from repro.core import init_param_avg_state
+from repro.launch.mesh import make_replica_mesh
+from repro.optim.optimizers import sgd_momentum
+from repro.models import alexnet
+from repro.configs import ALEXNET_SMOKE
+from repro.sharding.specs import replica_sharding
+
+R = jax.device_count()
+mesh = make_replica_mesh(R)
+# bf16 params: the uint8 raw-bytes container must round-trip them exactly
+import dataclasses
+cfg = dataclasses.replace(ALEXNET_SMOKE, dtype="bfloat16")
+state = init_param_avg_state(jax.random.PRNGKey(0),
+                             lambda r: alexnet.init(r, cfg),
+                             sgd_momentum(state_dtype=jnp.bfloat16), R)
+shard = replica_sharding(state, mesh, replica_axes=("data",))
+state = jax.device_put(state, shard)
+checkpoint.save("{d}", 4, state)
+
+like = jax.tree.map(jnp.zeros_like, state)
+out = checkpoint.restore("{d}", 4, like, sharding=shard)
+flat_in, _ = jax.tree_util.tree_flatten(state)
+flat_out, _ = jax.tree_util.tree_flatten(out)
+flat_sh, _ = jax.tree_util.tree_flatten(shard,
+    is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+assert len(flat_in) == len(flat_out) == len(flat_sh)
+for a, b, s in zip(flat_in, flat_out, flat_sh):
+    assert b.sharding == s, (b.sharding, s)          # live mesh layout
+    assert b.sharding == a.sharding, (b.sharding, a.sharding)
+    assert a.dtype == b.dtype, (a.dtype, b.dtype)
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+# the seed behavior (no sharding arg) lands on the default device
+plain = checkpoint.restore("{d}", 4, like)
+leaf = jax.tree_util.tree_flatten(plain)[0][0]
+assert leaf.sharding != flat_sh[0] or R == 1
+print("OK")
+"""
+
+
+def _sharded_roundtrip(tmp_path, devices):
+    out = run_child(_SHARDED_ROUNDTRIP.replace("{d}", str(tmp_path)),
+                    devices=devices)
+    assert "OK" in out
+
+
+def test_sharded_bf16_roundtrip_2dev(tmp_path):
+    """Restore must land every leaf on the same Sharding a fresh run uses
+    (2 devices; bf16 params + bf16 momentum)."""
+    _sharded_roundtrip(tmp_path, 2)
+
+
+def test_sharded_bf16_roundtrip_4dev(tmp_path):
+    _sharded_roundtrip(tmp_path, 4)
 
 
 def test_train_state_roundtrip(tmp_path):

@@ -74,6 +74,58 @@ def test_close_idempotent_and_after_exhaustion():
     ld.close()
 
 
+def test_next_after_close_raises_instead_of_hanging():
+    """The seed blocked forever in q.get() here: queue drained by close(),
+    worker dead, nothing ever arriving.  Must raise instead."""
+    ld = PrefetchLoader(counter_source(50), prefetch=2)
+    next(ld)
+    ld.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        next(ld)
+    with pytest.raises(RuntimeError, match="closed"):   # and stays raised
+        next(ld)
+
+
+def test_next_after_close_sync_mode():
+    ld = PrefetchLoader(counter_source(5), prefetch=0)
+    next(ld)
+    ld.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        next(ld)
+
+
+def test_close_unblocks_waiting_consumer():
+    """close() from another thread must wake a consumer already blocked in
+    __next__ on an empty queue (slow producer)."""
+    import threading
+    ld = PrefetchLoader(counter_source(3, delay=30.0), prefetch=2)
+    err = []
+
+    def consume():
+        try:
+            next(ld)
+        except RuntimeError as e:
+            err.append(e)
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.3)               # let it block on the empty queue
+    ld.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and err, "consumer stayed blocked past close()"
+
+
+def test_exhausted_loader_keeps_raising_stopiteration():
+    """Second next() after the sentinel used to hang (sentinel consumed
+    once, queue then empty forever)."""
+    ld = PrefetchLoader(counter_source(1), prefetch=2)
+    next(ld)
+    for _ in range(3):
+        with pytest.raises(StopIteration):
+            next(ld)
+    ld.close()
+
+
 def test_worker_exception_propagates():
     def bad():
         yield {"x": np.zeros(2)}
@@ -95,6 +147,36 @@ def test_crop_within_bounds_and_shape(h, crop, seed):
     out = random_crop_flip(imgs, crop, np.random.default_rng(seed))
     assert out.shape == (3, crop, crop, 2)
     assert np.isfinite(out).all()
+
+
+def test_crop_flip_impl_parity():
+    """loop and gather kernels must be bit-identical (same RNG draws, same
+    output) — the benchmark in loading_overlap.py compares their speed."""
+    rng = np.random.default_rng(7)
+    imgs = rng.normal(size=(16, 40, 40, 3)).astype(np.float32)
+    for flip in (True, False):
+        a = random_crop_flip(imgs, 32, np.random.default_rng(3), flip=flip,
+                             impl="loop")
+        b = random_crop_flip(imgs, 32, np.random.default_rng(3), flip=flip,
+                             impl="gather")
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype == np.float32
+
+
+def test_crop_flip_impls_consume_rng_identically():
+    """A stream switching impls mid-run must keep the same draw sequence
+    (all draws happen before dispatch)."""
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    imgs = np.random.default_rng(0).normal(size=(4, 12, 12, 1))
+    random_crop_flip(imgs, 8, r1, impl="loop")
+    random_crop_flip(imgs, 8, r2, impl="gather")
+    assert r1.integers(0, 1 << 30) == r2.integers(0, 1 << 30)
+
+
+def test_crop_flip_unknown_impl():
+    with pytest.raises(ValueError, match="unknown crop impl"):
+        random_crop_flip(np.zeros((1, 8, 8, 1)), 4,
+                         np.random.default_rng(0), impl="simd")
 
 
 def test_flip_is_involution():

@@ -1,20 +1,6 @@
 """Multi-device behaviour, run in subprocesses so the forced device count
 never leaks into the main test process (per the dry-run isolation rule)."""
-import os
-import subprocess
-import sys
-
-REPO = os.path.join(os.path.dirname(__file__), "..", "..")
-
-
-def run_child(code: str, devices: int = 8, timeout=560):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run([sys.executable, "-c", code], env=env,
-                       capture_output=True, text=True, timeout=timeout)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
+from _subproc import run_child
 
 
 def test_param_avg_step_on_mesh():

@@ -1,0 +1,143 @@
+"""Plateau-LR controller: unit decisions + an in-process session driving a
+real LR drop through the validation loop (ISSUE-3 acceptance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (init_param_avg_state, make_eval_step,
+                        make_param_avg_step)
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+from repro.train_loop import TrainSession
+
+
+# ---------------------------------------------------------------- unit ----
+def test_plateau_drops_after_patience():
+    c = schedules.plateau_decay(1.0, factor=0.1, patience=2, threshold=0.01)
+    assert not c.update(10.0)           # first observation = best
+    assert not c.update(10.0)           # bad 1 (no 1% improvement)
+    assert c.update(10.0)               # bad 2 -> drop
+    assert abs(c.lr - 0.1) < 1e-12 and c.n_drops == 1
+    assert not c.update(1.0)            # big improvement resets
+    assert c.best == 1.0 and c.num_bad == 0
+
+
+def test_plateau_improvement_resets_patience():
+    c = schedules.plateau_decay(1.0, patience=2, threshold=0.01)
+    c.update(10.0)
+    assert not c.update(10.0)           # bad 1
+    assert not c.update(9.0)            # 10% improvement resets
+    assert not c.update(9.0)            # bad 1 again
+    assert c.update(9.0)                # bad 2 -> drop
+    assert abs(c.lr - 0.1) < 1e-12
+
+
+def test_plateau_min_lr_floor():
+    c = schedules.plateau_decay(1.0, factor=0.1, patience=1, min_lr=0.05)
+    c.update(1.0)
+    assert c.update(1.0) and abs(c.lr - 0.1) < 1e-12
+    assert c.update(1.0) and c.lr == 0.05       # clamped
+    assert not c.update(1.0)                     # at the floor: no drop
+    assert c.lr == 0.05
+
+
+def test_plateau_negative_metrics():
+    """The relative margin must not invert for negative metrics (a plain
+    best*(1-threshold) would count strictly-worse values as improved)."""
+    c = schedules.plateau_decay(1.0, patience=2, threshold=1e-3)
+    c.update(-2.0)
+    assert not c.update(-1.999)          # worse, within margin: bad eval 1
+    assert c.best == -2.0                # best must NOT creep toward zero
+    assert c.update(-1.999)              # bad eval 2 -> drop
+    assert abs(c.lr - 0.1) < 1e-12
+    assert not c.update(-2.5)            # genuinely better: improvement
+    assert c.best == -2.5
+
+
+def test_plateau_mode_max():
+    c = schedules.plateau_decay(1.0, patience=1, mode="max", threshold=0.01)
+    c.update(0.5)                        # accuracy-style metric
+    assert not c.update(0.6)             # improving
+    assert c.update(0.6)                 # stalled -> drop
+    assert abs(c.lr - 0.1) < 1e-12
+
+
+def test_plateau_state_dict_roundtrip_replays_decisions():
+    a = schedules.plateau_decay(1.0, patience=2, threshold=0.01)
+    metrics = [5.0, 5.0, 4.9999, 5.0, 5.0, 5.0, 5.0]
+    mid = 3
+    for m in metrics[:mid]:
+        a.update(m)
+    b = schedules.plateau_decay(1.0, patience=2, threshold=0.01)
+    b.load_state_dict(a.state_dict())            # "resume" b at the split
+    trace_a = [a.update(m) for m in metrics[mid:]]
+    trace_b = [b.update(m) for m in metrics[mid:]]
+    assert trace_a == trace_b
+    assert a.state_dict() == b.state_dict()
+
+
+def test_as_controller_wraps_plain_schedules():
+    c = schedules.as_controller(schedules.constant(0.5))
+    assert float(c.schedule()(0)) == 0.5
+    assert c.update(1.0) is False and c.state_dict() == {}
+    p = schedules.plateau_decay(0.1)
+    assert schedules.as_controller(p) is p
+
+
+# --------------------------------------------------------- integration ----
+def test_session_validation_loop_drives_lr_drop(tmp_path):
+    """A full in-process session on a tiny quadratic model: the validation
+    loop must feed the controller and rebuild the train step with the
+    dropped LR (asserted from the recorded per-step LRs)."""
+    opt = sgd_momentum(weight_decay=0.0)
+
+    def init(rng):
+        return {"w": jnp.ones((4,), jnp.float32)}
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    state = init_param_avg_state(jax.random.PRNGKey(0), init, opt, 1)
+    controller = schedules.plateau_decay(0.05, factor=0.1, patience=1,
+                                         threshold=0.5)
+
+    def make_stream():
+        rng = np.random.default_rng(0)
+        def gen():
+            while True:
+                x = rng.normal(size=(1, 8, 4)).astype(np.float32)
+                yield {"x": x, "y": (x @ np.arange(4.0,
+                                                   dtype=np.float32))}
+        return gen()
+
+    def make_eval_batches():
+        rng = np.random.default_rng(99)
+        def gen():
+            while True:
+                x = rng.normal(size=(8, 4)).astype(np.float32)
+                yield {"x": x, "y": (x @ np.arange(4.0,
+                                                   dtype=np.float32))}
+        return gen()
+
+    def metric_fn(params, batch):
+        return {"loss": jnp.mean((batch["x"] @ params["w"]
+                                  - batch["y"]) ** 2)}
+
+    session = TrainSession(
+        state=state,
+        build_step=lambda sched: jax.jit(
+            make_param_avg_step(loss, opt, sched), donate_argnums=0),
+        make_stream=make_stream, controller=controller, steps=8,
+        eval_step=make_eval_step(metric_fn),
+        make_eval_batches=make_eval_batches, eval_every=2, eval_batches=1,
+        plateau_metric="loss",
+        metrics_path=str(tmp_path / "m.jsonl"), log_every=100)
+    result = session.run()
+
+    assert result.lr_drops, "validation loop never dropped the LR"
+    from repro.train_loop import read_jsonl
+    lrs = [r["lr"] for r in read_jsonl(str(tmp_path / "m.jsonl"), "train")]
+    assert abs(lrs[0] - 0.05) < 1e-8            # pre-drop segment
+    assert min(lrs) < 0.05 * 0.11               # post-drop segment (/10)
+    evals = read_jsonl(str(tmp_path / "m.jsonl"), "eval")
+    assert len(evals) == 4 and any(e["lr_dropped"] for e in evals)
