@@ -1,17 +1,65 @@
 """Paper Table 1's conv-backend axis (cuda-convnet vs cuDNN R1/R2), on TPU
 terms: XLA direct conv vs the Pallas im2col+MXU kernel (interpret mode on
-CPU — correctness-equivalent, timing indicative only), plus the other two
-Pallas kernels vs their oracles."""
+CPU — correctness-equivalent, timing indicative only), plus the other
+Pallas kernels vs their oracles, plus the LM-zoo backend sweep: full
+training steps (fwd+bwd+update) per arch under ``KernelPolicy`` xla vs
+pallas — the end-to-end form of the registry's promise that every model
+family now trains on the Pallas path.  ``REPRO_BENCH_FAST=1`` trims the
+LM sweep to one arch."""
 from __future__ import annotations
+
+import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro.kernels.common import KernelPolicy
 from repro.kernels.conv2d import ops as conv_ops, ref as conv_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.rwkv6 import ref as wkv_ref
 from repro.kernels.rwkv6.rwkv6 import wkv_pallas
+
+# one arch per kernel family the policy switches: dense->flash,
+# ssm->wkv6, hybrid->rglru(+local attention)
+LM_ARCHS = ("olmo-1b", "rwkv6-7b", "recurrentgemma-9b")
+
+
+def lm_backend_sweep():
+    from repro import models
+    from repro.configs import ARCHS, reduced
+    from repro.core import (init_param_avg_state, make_param_avg_step,
+                            reshape_for_replicas)
+    from repro.optim import schedules
+    from repro.optim.optimizers import sgd_momentum
+
+    archs = LM_ARCHS[:1] if os.environ.get("REPRO_BENCH_FAST") == "1" \
+        else LM_ARCHS
+    rng = jax.random.PRNGKey(0)
+    for arch in archs:
+        base = reduced(ARCHS[arch], n_layers=1, d_model=128)
+        batch = reshape_for_replicas({
+            "tokens": jax.random.randint(rng, (2, 64), 0, base.vocab_size),
+            "labels": jax.random.randint(rng, (2, 64), 0, base.vocab_size),
+        }, 1)
+        for backend in ("xla", "pallas"):
+            cfg = dataclasses.replace(
+                base, kernels=KernelPolicy(backend=backend))
+            opt = sgd_momentum()
+            state = init_param_avg_state(
+                rng, lambda r: models.init(r, cfg), opt, 1)
+            step = jax.jit(make_param_avg_step(
+                lambda p, b: models.loss_fn(p, cfg, b), opt,
+                schedules.constant(1e-2)))
+
+            def run(state=state, batch=batch, step=step):
+                new_state, loss = step(state, batch)
+                return loss
+            emit(f"lm/{arch}/{backend}", time_fn(run, warmup=1, iters=3),
+                 f"train step end-to-end; policy backend={backend}"
+                 + (" (interpret)" if backend == "pallas"
+                    and jax.default_backend() != "tpu" else ""))
 
 
 def main():
@@ -57,6 +105,9 @@ def main():
     f_pl = jax.jit(lambda *a: wkv_pallas(*a, chunk=64, interpret=True))
     emit("wkv6/pallas_chunked", time_fn(f_pl, r, kk, vv, ww, u),
          "backend=pallas(interpret)")
+
+    # LM zoo: whole training steps, xla vs pallas KernelPolicy
+    lm_backend_sweep()
 
 
 if __name__ == "__main__":

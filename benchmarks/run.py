@@ -8,7 +8,9 @@ future PRs have a trajectory baseline.  Mapping to the paper:
   table1_throughput   Table 1 (replicas x parallel-loading grid)
   loading_overlap     Fig. 1  (double-buffered loading)
   exchange_strategies Fig. 2  (exchange+average schedules)
-  kernel_backends     Table 1's conv-backend axis (+ other Pallas kernels)
+  kernel_backends     Table 1's conv-backend axis (+ other Pallas kernels,
+                      + the LM-zoo KernelPolicy xla-vs-pallas train-step
+                      sweep — lm/<arch>/<backend> rows)
   parity_training     §3 accuracy-parity claim (param-avg vs grad-avg)
   session_throughput  Table 1 through the session layer (train_loop JSONL)
 """

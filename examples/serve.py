@@ -46,7 +46,7 @@ total = PROMPT + GEN
 
 t0 = time.time()
 logits, _, cache = transformer.forward(
-    params, cfg, prompts, attn_impl="xla", return_cache=True,
+    params, cfg, prompts, return_cache=True,
     cache=transformer.init_decode_cache(cfg, BATCH, total))
 print(f"prefill {PROMPT} tokens x{BATCH}: {time.time() - t0:.3f}s "
       f"(cache capacity {cache['blocks'][0]['k'].shape[2]} = window)")

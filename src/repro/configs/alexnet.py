@@ -10,6 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from repro.kernels.common import KernelPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class ConvSpec:
@@ -37,6 +39,9 @@ class AlexNetConfig:
     )
     fc_dim: int = 4096
     dropout: float = 0.5
+    # same KernelPolicy the LM zoo carries: conv2d resolves xla|pallas|
+    # pallas_im2col_ref through it when the forward gets no explicit backend
+    kernels: KernelPolicy = KernelPolicy()
     dtype: str = "float32"
     citation: str = "Krizhevsky et al. 2012; Ding et al. ICLR 2015 (this paper)"
 

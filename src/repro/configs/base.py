@@ -10,6 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.kernels.common import KernelPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -68,6 +70,12 @@ class ModelConfig:
     # TP all-reduces into reduce-scatter/all-gather pairs (half the bytes)
     # and sharding norm compute.
     seq_shard: bool = False
+    # kernel backend selection (repro.kernels.common.KernelPolicy): global
+    # xla|pallas|auto default + per-op overrides; carried on the config so
+    # every layer resolves the same way without kwarg threading.  Override
+    # per run with dataclasses.replace(cfg, kernels=...) — the launchers'
+    # --kernel-backend / --attn-impl flags do exactly that.
+    kernels: KernelPolicy = KernelPolicy()
     dtype: str = "bfloat16"
     citation: str = ""
     notes: str = ""

@@ -58,6 +58,12 @@ def init_grad_avg_state(rng, init_fn, optimizer: Optimizer) -> TrainState:
 def _make_loss_and_grad(loss_fn: Callable, microbatch: int):
     """Shared by both engines.  loss_fn(params, batch) -> scalar.
 
+    ``loss_fn`` must be differentiable END TO END for whatever kernel
+    backend its config's ``KernelPolicy`` selects — every Pallas kernel
+    (conv2d, flash_attention, rglru, rwkv6) carries a ``jax.custom_vjp``
+    precisely so ``jax.value_and_grad`` here works identically on the
+    ``xla`` and ``pallas`` policies (no kernel kwargs reach this layer).
+
     ``microbatch`` > 1 accumulates gradients over that many slices of the
     per-replica batch (fp32 accumulator) — bounds activation memory at the
     cost of re-reading params per slice.

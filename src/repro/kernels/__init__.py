@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel families behind one shared infrastructure layer.
+
+``repro.kernels.common`` provides backend resolution (interpret vs
+compiled), the process-level autotune cache, the ``KernelOp`` registry,
+and the ``KernelPolicy`` selector the model layer consumes.  The kernel
+packages (conv2d, flash_attention, rglru, rwkv6) register themselves on
+import; ``common.ops()`` imports them lazily, so config-only consumers
+of ``KernelPolicy`` never pay the pallas import chain.
+"""
+from repro.kernels.common import (KernelOp, KernelPolicy,  # noqa: F401
+                                  policy_of, resolve_interpret)

@@ -125,18 +125,21 @@ _matmul_bias_core.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)
 
 
 def matmul_bias(x, w, b, *, bm: int = None, bk: int = None, bn: int = None,
-                relu: bool = False, interpret: bool = None):
+                relu: bool = False, interpret: bool = None,
+                autotune: bool = None):
     """(M,K) @ (K,N) + b(N,) with fused bias/ReLU epilogue.
 
     ``interpret=None`` auto-resolves (compiled on TPU); ``bm/bk/bn=None``
-    come from the autotune cache.  Differentiable.
+    come from the autotune cache (``autotune`` overrides measurement).
+    Differentiable.
     """
     interpret = tune.resolve_interpret(interpret)
     if bm is None or bk is None or bn is None:
         m, k = x.shape
         n = w.shape[1]
         tbm, tbk, tbn = tune.matmul_blocks(m, k, n, x.dtype,
-                                           interpret=interpret)
+                                           interpret=interpret,
+                                           autotune=autotune)
         bm, bk, bn = bm or tbm, bk or tbk, bn or tbn
     return _matmul_bias_core(x, w, b, bm, bk, bn, relu, interpret)
 
@@ -263,7 +266,7 @@ _conv_fused_core.defvjp(_conv_fused_fwd, _conv_fused_bwd)
 
 def conv2d_fused(x, w, *, stride: int, padding: int, bias=None,
                  relu: bool = False, bm: int = None, bn: int = None,
-                 interpret: bool = None):
+                 interpret: bool = None, autotune: bool = None):
     """Implicit-GEMM conv: x (B,H,W,Cin), w (K,K,Cin,Cout) -> (B,OH,OW,Cout).
 
     The im2col patch tensor never materializes in HBM — each grid program
@@ -279,7 +282,8 @@ def conv2d_fused(x, w, *, stride: int, padding: int, bias=None,
     ow = (wp - k) // stride + 1
     if bm is None or bn is None:
         tbm, tbn = tune.conv_blocks(b_, oh, ow, k, cin, cout, stride,
-                                    x.dtype, interpret=interpret)
+                                    x.dtype, interpret=interpret,
+                                    autotune=autotune)
         bm, bn = bm or tbm, bn or tbn
     if bias is None:
         bias = jnp.zeros((cout,), x.dtype)

@@ -20,6 +20,8 @@ from collections import OrderedDict
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
+from repro.kernels.conv2d import ref as conv_ref
 from repro.kernels.conv2d.conv2d import conv2d_fused, matmul_bias  # noqa: F401
 
 # id(w) -> (weakref-or-None, reordered) for concrete weight arrays; bounded
@@ -60,7 +62,8 @@ def im2col(x, kernel: int, stride: int, padding: int):
 
 
 def conv2d_im2col(x, w, *, stride: int, padding: int, bias=None,
-                  relu: bool = False, interpret: bool = None):
+                  relu: bool = False, interpret: bool = None,
+                  autotune: bool = None):
     """Two-stage reference: XLA im2col + Pallas GEMM.  x (B,H,W,Cin),
     w (K,K,Cin,Cout)."""
     k, _, cin, cout = w.shape
@@ -69,5 +72,24 @@ def conv2d_im2col(x, w, *, stride: int, padding: int, bias=None,
     wmat = reorder_weights(w)
     bvec = jnp.zeros((cout,), x.dtype) if bias is None else bias
     y = matmul_bias(patches.reshape(b * oh * ow, feat), wmat, bvec,
-                    relu=relu, interpret=interpret)
+                    relu=relu, interpret=interpret, autotune=autotune)
     return y.reshape(b, oh, ow, cout)
+
+
+def _example(seed: int = 0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(2, 13, 13, 5)).astype(np.float32)
+    w = (rng.normal(size=(3, 3, 5, 11)) * 0.2).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+common.register(common.KernelOp(
+    name="conv2d",
+    pallas=lambda x, w: conv2d_fused(x, w, stride=2, padding=1),
+    ref=lambda x, w: conv_ref.conv2d_ref(x, w, 2, 1),
+    example=_example,
+    tuner=None,          # conv_blocks/matmul_blocks in tune.py (shape-rich)
+    tol=2e-4,
+    grad_argnums=(0, 1),
+))

@@ -1,130 +1,63 @@
-"""Backend resolution + block-size autotuning for the conv2d kernels.
+"""Block-size autotuning for the conv2d kernels.
 
-Two jobs, both previously hardcoded at call sites:
+The shared machinery (``resolve_interpret``, the process-level autotune
+cache, measurement helpers) lives in ``repro.kernels.common`` — this
+module was its first client and now only contributes the conv-specific
+tuners.  ``resolve_interpret`` / ``autotune`` / ``clear_cache`` /
+``cache_info`` are re-exported for back-compat with PR-2-era callers.
 
-1. ``resolve_interpret``: the Pallas kernels ran with ``interpret=True``
-   unconditionally — i.e. the "fast path" was always the Python
-   interpreter.  Now ``interpret=None`` means "compile when the backend
-   can" (TPU), falling back to interpret mode on CPU/GPU hosts.  Override
-   with ``REPRO_PALLAS_INTERPRET=0|1`` for debugging.
-
-2. ``matmul_blocks`` / ``conv_blocks``: ``(bm, bk, bn)`` were fixed at
-   128³ regardless of problem shape.  Now block sizes come from a small
-   shape-keyed autotune cache: for each distinct problem shape the
-   candidate blockings are measured once (compiled backends only — timing
-   the interpreter is meaningless) and the winner is memoised for the
-   rest of the process.  Tiny problems get clipped blocks instead of
-   padding everything up to 128.  ``REPRO_CONV_AUTOTUNE=0`` disables
-   measurement and always returns the heuristic default.
-
-The cache is process-local by design: block choice depends on the
-hardware the process is on, and a step function traces each conv shape
-exactly once, so one measurement per shape amortises to zero.
+``matmul_blocks`` / ``conv_blocks``: ``(bm, bk, bn)`` were fixed at 128³
+regardless of problem shape.  Block sizes come from the shared
+shape-keyed autotune cache: for each distinct problem shape the
+candidate blockings are measured once (compiled backends only — timing
+the interpreter is meaningless) and the winner is memoised for the rest
+of the process.  Tiny problems get clipped blocks instead of padding
+everything up to 128.  ``REPRO_CONV_AUTOTUNE=0`` (or the global
+``REPRO_PALLAS_AUTOTUNE=0``) disables measurement and always returns the
+heuristic default.
 """
 from __future__ import annotations
 
 import os
-import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Tuple
 
-import jax
+from repro.kernels import common
+from repro.kernels.common import (LANE, autotune_enabled, cache_info,
+                                  clear_cache, pow2_clip, resolve_interpret,
+                                  time_call)
 
-# shape-keyed winner cache: key -> blocks tuple
-_CACHE: Dict[tuple, tuple] = {}
-# how many measured autotune sweeps ran (introspection / tests)
-_STATS = {"measured": 0, "hits": 0}
+# re-export (PR-2 name): the cache entry point — NOT the ``autotune=``
+# override parameter the block tuners take below
+autotune = common.autotune
 
-_SUBLANE = 8          # TPU fp32 sublane count — block floor
-_LANE = 128           # TPU lane count — preferred alignment
+__all__ = ["resolve_interpret", "autotune", "clear_cache", "cache_info",
+           "matmul_blocks", "conv_blocks"]
 
-
-def resolve_interpret(interpret=None) -> bool:
-    """Resolve the tri-state ``interpret`` flag.
-
-    None  -> auto: compile on TPU, interpret elsewhere (the pinned
-             kernels are Mosaic/TPU programs; CPU runs them through the
-             Pallas interpreter for correctness work).
-    bool  -> honoured as given (tests force both modes).
-    Env   -> REPRO_PALLAS_INTERPRET=0|1 overrides auto-detection only.
-    """
-    if interpret is not None:
-        return bool(interpret)
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+_pow2_clip = pow2_clip           # back-compat aliases (PR-2 private names)
+_time_call = time_call
+_LANE = LANE
 
 
-def _pow2_clip(dim: int, cap: int) -> int:
-    """Smallest power of two >= dim, clipped to [_SUBLANE, cap]."""
-    p = 1 << max(dim - 1, 0).bit_length()
-    return max(min(p, cap), _SUBLANE)
+def _autotune_enabled(interpret: bool, override: bool = None) -> bool:
+    # a policy override beats the env switches; legacy env wins otherwise
+    if override is None and os.environ.get("REPRO_CONV_AUTOTUNE") == "0":
+        return False
+    return autotune_enabled(interpret, override)
 
 
-def clear_cache() -> None:
-    _CACHE.clear()
-    _STATS["measured"] = _STATS["hits"] = 0
-
-
-def cache_info() -> dict:
-    return {"entries": len(_CACHE), **_STATS}
-
-
-def autotune(key: tuple, candidates: Sequence[tuple],
-             measure: Optional[Callable[[tuple], float]]) -> tuple:
-    """Return the cached winner for ``key``, measuring once on a miss.
-
-    ``measure(candidate) -> seconds``; exceptions disqualify a candidate
-    (e.g. a blocking the compiler rejects) rather than failing the tune.
-    A single candidate is cached without measuring (``measure`` may be
-    None then).
-    """
-    if key in _CACHE:
-        _STATS["hits"] += 1
-        return _CACHE[key]
-    best, best_t = candidates[0], float("inf")
-    if len(candidates) > 1:
-        _STATS["measured"] += 1
-        for cand in candidates:
-            try:
-                t = measure(cand)
-            except Exception:
-                continue
-            if t < best_t:
-                best, best_t = cand, t
-    _CACHE[key] = best
-    return best
-
-
-def _time_call(fn, *args, iters: int = 3) -> float:
-    jax.block_until_ready(fn(*args))          # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
-
-
-def _autotune_enabled(interpret: bool) -> bool:
-    # interpreter timings reflect Python overhead, not the MXU — skip
-    return (not interpret
-            and os.environ.get("REPRO_CONV_AUTOTUNE", "1") != "0")
-
-
-def matmul_blocks(m: int, k: int, n: int, dtype, *,
-                  interpret: bool) -> Tuple[int, int, int]:
+def matmul_blocks(m: int, k: int, n: int, dtype, *, interpret: bool,
+                  autotune: bool = None) -> Tuple[int, int, int]:
     """(bm, bk, bn) for the blocked matmul; autotuned on compiled backends."""
-    default = (_pow2_clip(m, _LANE), _pow2_clip(k, _LANE),
-               _pow2_clip(n, _LANE))
+    default = (pow2_clip(m, LANE), pow2_clip(k, LANE), pow2_clip(n, LANE))
     key = ("matmul", m, k, n, str(dtype))
-    if not _autotune_enabled(interpret):
-        return autotune(key, [default], None)
+    if not _autotune_enabled(interpret, autotune):
+        return common.autotune(key, [default], None)
 
     cands = {default}
     for bm in (128, 256, 512):
         for bn in (128, 256):
             if bm <= 2 * m and bn <= 2 * n:
-                cands.add((bm, _pow2_clip(min(k, _LANE), _LANE), bn))
+                cands.add((bm, pow2_clip(min(k, LANE), LANE), bn))
     import numpy as np
     from repro.kernels.conv2d import conv2d as _k
     x = np.random.default_rng(0).normal(size=(m, k)).astype(dtype)
@@ -133,10 +66,10 @@ def matmul_blocks(m: int, k: int, n: int, dtype, *,
 
     def measure(c):
         bm, bk, bn = c
-        return _time_call(
+        return time_call(
             lambda: _k.matmul_bias(x, w, b, bm=bm, bk=bk, bn=bn,
                                    interpret=False))
-    return autotune(key, sorted(cands), measure)
+    return common.autotune(key, sorted(cands), measure)
 
 
 # fused conv tiles M = OH*OW; a larger cap than the matmul's 128 keeps
@@ -146,14 +79,15 @@ _CONV_BM_CAP = 512
 
 
 def conv_blocks(b: int, oh: int, ow: int, kernel: int, cin: int, cout: int,
-                stride: int, dtype, *, interpret: bool) -> Tuple[int, int]:
+                stride: int, dtype, *, interpret: bool,
+                autotune: bool = None) -> Tuple[int, int]:
     """(bm, bn) for the fused implicit-GEMM conv (reduction is unrolled
     in-kernel, so there is no bk)."""
     m = oh * ow
-    default = (_pow2_clip(m, _CONV_BM_CAP), _pow2_clip(cout, _LANE))
+    default = (pow2_clip(m, _CONV_BM_CAP), pow2_clip(cout, LANE))
     key = ("conv", b, oh, ow, kernel, cin, cout, stride, str(dtype))
-    if not _autotune_enabled(interpret):
-        return autotune(key, [default], None)
+    if not _autotune_enabled(interpret, autotune):
+        return common.autotune(key, [default], None)
 
     cands = {default}
     for bm in (128, 256, 512):
@@ -169,7 +103,7 @@ def conv_blocks(b: int, oh: int, ow: int, kernel: int, cin: int, cout: int,
 
     def measure(c):
         bm, bn = c
-        return _time_call(
+        return time_call(
             lambda: _ops.conv2d_fused(x, wt, stride=stride, padding=0,
                                       bm=bm, bn=bn, interpret=False))
-    return autotune(key, sorted(cands), measure)
+    return common.autotune(key, sorted(cands), measure)

@@ -1,22 +1,53 @@
 """Public flash-attention op in model layout (B,S,Hkv,G,hd)."""
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 
-from repro.kernels.flash_attention.flash_attention import \
-    flash_attention_folded
+from repro.kernels import common
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_folded, flash_blocks)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, scale=1.0,
-                    bq: int = 128, bk: int = 128, interpret: bool = True):
-    """q (B,S,Hkv,G,hd); k,v (B,S,Hkv,hd).  Returns (B,S,Hkv,G,hd)."""
+                    bq: int = None, bk: int = None, interpret: bool = None,
+                    autotune: bool = None):
+    """q (B,S,Hkv,G,hd); k,v (B,S,Hkv,hd).  Returns (B,S,Hkv,G,hd).
+
+    Differentiable (``jax.custom_vjp`` recompute backward — see
+    flash_attention.py); ``interpret``/``bq``/``bk`` resolve through the
+    shared kernel infrastructure when None.
+    """
     b, s, hkv, g, hd = q.shape
     hq = hkv * g
     qf = q.transpose(0, 2, 3, 1, 4).reshape(b * hq, s, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
-    bq_ = min(bq, s)
-    bk_ = min(bk, s)
     o = flash_attention_folded(qf, kf, vf, n_q_heads=hq, n_kv_heads=hkv,
                                causal=causal, window=window, scale=scale,
-                               bq=bq_, bk=bk_, interpret=interpret)
+                               bq=bq, bk=bk, interpret=interpret,
+                               autotune=autotune)
     return o.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
+
+
+def _example(seed: int = 0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, s, hkv, g, hd = 1, 96, 2, 2, 32          # odd-length + GQA on purpose
+    q = jax.random.normal(ks[0], (b, s, hkv, g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    return q, k, v
+
+
+common.register(common.KernelOp(
+    name="flash_attention",
+    pallas=lambda q, k, v: flash_attention(q, k, v, causal=True, window=64,
+                                           scale=q.shape[-1] ** -0.5),
+    ref=lambda q, k, v: ref.attention_ref(q, k, v, causal=True, window=64,
+                                          scale=q.shape[-1] ** -0.5),
+    example=_example,
+    tuner=flash_blocks,
+    tol=2e-4,
+    grad_argnums=(0, 1, 2),
+))

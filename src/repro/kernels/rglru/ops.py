@@ -5,12 +5,14 @@ import functools
 
 import jax
 
+from repro.kernels import common
 from repro.kernels.rglru import ref
-from repro.kernels.rglru.rglru import rglru_pallas
+from repro.kernels.rglru.rglru import rglru_blocks, rglru_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
-def rglru_scan(a, b, h0=None, *, impl: str = "chunked", chunk: int = 64):
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "interpret"))
+def rglru_scan(a, b, h0=None, *, impl: str = "chunked", chunk: int = 64,
+               interpret: bool = None):
     """h_t = a_t h_{t-1} + b_t.  Returns (h (B,T,D), h_final)."""
     if impl == "sequential":
         return ref.rglru_sequential(a, b, h0)
@@ -18,7 +20,28 @@ def rglru_scan(a, b, h0=None, *, impl: str = "chunked", chunk: int = 64):
         return ref.rglru_chunked(a, b, h0, chunk=chunk)
     if impl == "pallas":
         if h0 is not None:
-            raise NotImplementedError("pallas path starts from zero state")
-        h = rglru_pallas(a, b, chunk=chunk, interpret=True)
+            raise NotImplementedError(
+                "pallas path starts from zero state; fold h0 into b "
+                "(b[:, 0] += a[:, 0] * h0) as models/rglru.py does")
+        h = rglru_pallas(a, b, chunk=chunk, interpret=interpret)
         return h, h[:, -1].astype("float32")
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def _example(seed: int = 0):
+    import jax.numpy as jnp
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 100, 24)) * 0.5 + 2.0)
+    b = jax.random.normal(ks[1], (2, 100, 24))
+    return a.astype(jnp.float32), b
+
+
+common.register(common.KernelOp(
+    name="rglru",
+    pallas=lambda a, b: rglru_pallas(a, b, chunk=32),
+    ref=lambda a, b: ref.rglru_sequential(a, b)[0],
+    example=_example,
+    tuner=rglru_blocks,
+    tol=2e-4,
+    grad_argnums=(0, 1),
+))

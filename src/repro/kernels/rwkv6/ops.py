@@ -1,10 +1,12 @@
 """Public WKV6 op: jit'd wrapper dispatching between implementations.
 
 ``impl``:
-  ``chunked``    — pure-jnp chunked-parallel (default; lowers on any backend,
+  ``chunked``    — pure-jnp chunked-parallel (lowers on any backend,
                    used by the dry-run and CPU training)
   ``sequential`` — the scan oracle (decode path / small shapes)
-  ``pallas``     — the TPU kernel (interpret-mode on CPU hosts)
+  ``pallas``     — the TPU kernel (differentiable; interpret mode
+                   resolves through the shared kernel infrastructure —
+                   REPRO_PALLAS_INTERPRET applies here too)
 """
 from __future__ import annotations
 
@@ -12,12 +14,15 @@ import functools
 
 import jax
 
+from repro.kernels import common
 from repro.kernels.rwkv6 import ref
-from repro.kernels.rwkv6.rwkv6 import wkv_pallas
+from repro.kernels.rwkv6.rwkv6 import rwkv_blocks, wkv_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
-def wkv(r, k, v, w, u, s0=None, *, impl: str = "chunked", chunk: int = 64):
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "interpret",
+                                             "autotune"))
+def wkv(r, k, v, w, u, s0=None, *, impl: str = "chunked", chunk: int = 64,
+        interpret: bool = None, autotune: bool = None):
     """Returns (y, final_state).  See ref.wkv_sequential for semantics."""
     if impl == "sequential":
         return ref.wkv_sequential(r, k, v, w, u, s0)
@@ -26,11 +31,32 @@ def wkv(r, k, v, w, u, s0=None, *, impl: str = "chunked", chunk: int = 64):
     if impl == "pallas":
         if s0 is not None:
             raise NotImplementedError("pallas path starts from zero state")
-        y = wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
-        # final state from the chunked oracle (cheap relative to the seq pass)
-        _, s_fin = ref.wkv_chunked(r, k, v, w, u, chunk=chunk)
-        return y, s_fin
+        # the kernel emits its final VMEM state directly — no second
+        # recurrence pass for the prefill/return_cache path
+        return wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret,
+                          autotune=autotune, return_state=True)
     raise ValueError(f"unknown impl {impl!r}")
 
 
 wkv_decode = ref.wkv_decode
+
+
+def _example(seed: int = 0):
+    import jax.numpy as jnp
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, t, h, kk = 1, 100, 2, 16                # odd length on purpose
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, kk)) for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, t, h, kk)) * 0.5))
+    u = jax.random.normal(ks[4], (h, kk)) * 0.5
+    return r, k, v, w, u
+
+
+common.register(common.KernelOp(
+    name="rwkv6",
+    pallas=lambda r, k, v, w, u: wkv_pallas(r, k, v, w, u, chunk=32),
+    ref=lambda r, k, v, w, u: ref.wkv_sequential(r, k, v, w, u)[0],
+    example=_example,
+    tuner=rwkv_blocks,
+    tol=2e-4,
+    grad_argnums=(0, 1, 2, 3, 4),
+))

@@ -107,6 +107,12 @@ def build_lowered(cfg, shape, mesh, mode, replica_axes, fsdp, n_rep,
                   attn_impl="qloop", strategy="all_reduce",
                   microbatch: int = 1, momentum_dtype: str = "float32"):
     """Lower one step function; returns the jax Lowered object."""
+    # the attention impl rides on the config's KernelPolicy now; qloop is
+    # the dry-run default (static KV slices -> near-exact HLO flops)
+    from repro.kernels.common import policy_of
+    cfg = dataclasses.replace(
+        cfg, kernels=dataclasses.replace(policy_of(cfg),
+                                         attention=attn_impl))
     if mode == "train":
         state_sh = abstract_train_state(cfg, n_rep, momentum_dtype)
         state_shard = state_sharding(state_sh, cfg, mesh,
@@ -122,8 +128,7 @@ def build_lowered(cfg, shape, mesh, mode, replica_axes, fsdp, n_rep,
         # (no partial-auto mode in the pinned jax) — same Exchanger API as
         # the mesh engine, axis-0 execution.
         step = make_param_avg_step(
-            lambda p, b: models.loss_fn(p, cfg, b, attn_impl=attn_impl,
-                                        remat=True),
+            lambda p, b: models.loss_fn(p, cfg, b, remat=True),
             opt, schedules.constant(1e-2), strategy=as_exchanger(strategy),
             microbatch=microbatch)
         jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
@@ -139,8 +144,7 @@ def build_lowered(cfg, shape, mesh, mode, replica_axes, fsdp, n_rep,
         b_shard = batch_sharding(bstructs, mesh)
 
         def fn(params, batch):
-            logits, _ = models.logits_fn(params, cfg, batch,
-                                         attn_impl=attn_impl)
+            logits, _ = models.logits_fn(params, cfg, batch)
             return logits
 
         jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))

@@ -45,6 +45,7 @@ from repro.configs import ALEXNET, ALEXNET_SMOKE, get_config, reduced
 from repro.core import (init_param_avg_state, make_eval_step,
                         make_mesh_param_avg_step, make_param_avg_step,
                         replica_spread, reshape_for_replicas)
+from repro.kernels.common import KernelPolicy
 from repro.launch.mesh import make_replica_mesh
 from repro.sharding.specs import replica_sharding
 from repro.data import synthetic
@@ -67,11 +68,22 @@ class Build:
     plateau_metric: str               # the metric the LR controller tracks
 
 
+def make_policy(args) -> KernelPolicy:
+    """One KernelPolicy from the CLI: ``--kernel-backend`` is the global
+    default, ``--attn-impl`` / ``--conv-backend`` stay as per-op
+    overrides.  The policy rides on the config — nothing downstream
+    takes kernel kwargs anymore."""
+    return KernelPolicy(backend=args.kernel_backend,
+                        attention=args.attn_impl,
+                        conv2d=args.conv_backend)
+
+
 def build_lm(args) -> Build:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg, n_layers=args.layers or 2,
                       d_model=args.d_model or 256)
+    cfg = dataclasses.replace(cfg, kernels=make_policy(args))
 
     def add_extras(b):
         out = {"tokens": b["tokens"], "labels": b["labels"]}
@@ -98,15 +110,16 @@ def build_lm(args) -> Build:
             sample_seed=args.seed + EVAL_SEED_OFFSET))
 
     def loss(params, batch):
-        return models.loss_fn(params, cfg, batch, attn_impl=args.attn_impl)
+        return models.loss_fn(params, cfg, batch)
 
     return Build(cfg, lambda r: models.init(r, cfg), loss, make_stream,
-                 make_eval_batches, lm_metrics(cfg, attn_impl=args.attn_impl),
+                 make_eval_batches, lm_metrics(cfg),
                  plateau_metric="loss")
 
 
 def build_alexnet(args, error) -> Build:
     cfg = ALEXNET_SMOKE if args.smoke else ALEXNET
+    cfg = dataclasses.replace(cfg, kernels=make_policy(args))
     if args.image_size is not None:
         try:
             cfg.feature_hw(args.image_size)   # conv/pool windows must fit
@@ -133,12 +146,10 @@ def build_alexnet(args, error) -> Build:
 
     def loss(params, batch):
         return alexnet_mod.loss_fn(params, cfg, batch["images"],
-                                   batch["labels"],
-                                   conv_backend=args.conv_backend)
+                                   batch["labels"])
 
     return Build(cfg, lambda r: alexnet_mod.init(r, cfg), loss, make_stream,
-                 make_eval_batches,
-                 alexnet_metrics(cfg, conv_backend=args.conv_backend),
+                 make_eval_batches, alexnet_metrics(cfg),
                  plateau_metric="top1_err")
 
 
@@ -188,12 +199,23 @@ def main():
     ap.add_argument("--plateau-factor", type=float, default=0.1)
     ap.add_argument("--plateau-patience", type=int, default=2)
     ap.add_argument("--plateau-threshold", type=float, default=1e-3)
-    ap.add_argument("--attn-impl", default="auto")
-    ap.add_argument("--conv-backend", default="xla",
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="global kernel policy for EVERY op family "
+                    "(attention/rglru/rwkv6/conv2d): pallas = the "
+                    "compiled kernels everywhere (interpreter on CPU "
+                    "hosts — correctness-equivalent), xla = library "
+                    "paths, auto = pallas exactly where it compiles")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "xla", "chunked", "qloop", "flash"],
+                    help="per-op override of --kernel-backend for "
+                    "attention")
+    ap.add_argument("--conv-backend", default=None,
                     choices=["xla", "pallas", "pallas_im2col_ref"],
-                    help="pallas: fused implicit-GEMM kernel (compiled on "
-                    "TPU, interpreter elsewhere); pallas_im2col_ref: "
-                    "two-stage XLA-im2col + Pallas GEMM parity path")
+                    help="per-op override of --kernel-backend for conv: "
+                    "pallas = fused implicit-GEMM kernel; "
+                    "pallas_im2col_ref = two-stage XLA-im2col + Pallas "
+                    "GEMM parity path")
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -293,11 +315,14 @@ def main():
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume, prefetch=args.prefetch,
         log_every=args.log_every, images_per_step=args.batch,
-        metrics_path=args.metrics_out)
+        metrics_path=args.metrics_out,
+        run_meta={"kernels": make_policy(args).describe(),
+                  "engine": engine, "strategy": args.strategy})
 
     print(f"arch={getattr(build.cfg, 'name', args.arch)} replicas={n_rep} "
           f"devices={n_dev} engine={engine} strategy={args.strategy} "
-          f"sync_every={args.sync_every}"
+          f"sync_every={args.sync_every} "
+          f"kernels={make_policy(args).describe()}"
           + (f" resume_from={args.ckpt_dir}" if args.resume else ""))
     result = session.run()
     spread = float(replica_spread(result.state.params))

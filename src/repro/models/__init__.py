@@ -18,23 +18,28 @@ def init(rng, cfg):
     return transformer.init(rng, cfg)
 
 
-def logits_fn(params, cfg, batch, attn_impl="auto", remat=False):
-    """batch: dict of arrays per model_inputs.  Returns (logits, aux)."""
+def logits_fn(params, cfg, batch, remat=False):
+    """batch: dict of arrays per model_inputs.  Returns (logits, aux).
+
+    Kernel selection (attention impl, recurrence backends, ...) rides on
+    ``cfg.kernels`` (a ``repro.kernels.common.KernelPolicy``) — the old
+    ``attn_impl=`` kwarg threading is gone; use
+    ``dataclasses.replace(cfg, kernels=KernelPolicy(...))`` instead.
+    """
     if cfg.family == "encdec":
         return encdec.forward(params, cfg, batch["frames"], batch["tokens"],
-                              attn_impl=attn_impl, remat=remat)
+                              remat=remat)
     if cfg.family == "vlm":
         return transformer.forward(params, cfg, batch["tokens"],
                                    image_embeds=batch["image_embeds"],
                                    image_mask=batch["image_mask"],
-                                   attn_impl=attn_impl, remat=remat)
-    return transformer.forward(params, cfg, batch["tokens"],
-                               attn_impl=attn_impl, remat=remat)
+                                   remat=remat)
+    return transformer.forward(params, cfg, batch["tokens"], remat=remat)
 
 
-def loss_fn(params, cfg, batch, attn_impl="auto", remat=False):
+def loss_fn(params, cfg, batch, remat=False):
     """Next-token cross entropy (+ MoE aux)."""
-    logits, aux = logits_fn(params, cfg, batch, attn_impl, remat=remat)
+    logits, aux = logits_fn(params, cfg, batch, remat=remat)
     labels = batch["labels"]
     return softmax_xent(logits[:, :-1], labels[:, 1:]) + aux
 

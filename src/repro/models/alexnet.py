@@ -21,21 +21,36 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import policy_of, resolve_interpret
 from repro.models.layers import softmax_xent
 
 
+def resolve_conv_backend(cfg) -> str:
+    """Conv backend from the config's KernelPolicy: explicit selector wins
+    (``pallas_im2col_ref`` included); ``auto`` compiles the fused Pallas
+    kernel where it can and keeps lax.conv elsewhere."""
+    pol = policy_of(cfg)
+    sel = pol.conv2d or pol.backend
+    if sel == "auto":
+        return "pallas" if not resolve_interpret(pol.interpret) else "xla"
+    return sel
+
+
 def conv2d(x, w, b, stride: int, padding: int, backend: str = "xla", *,
-           relu: bool = False, interpret: bool = None):
+           relu: bool = False, interpret: bool = None,
+           autotune: bool = None):
     """x (B,H,W,C_in), w (K,K,C_in,C_out).  The pallas backends fuse the
     bias add (+ optional ReLU) into the kernel epilogue."""
     if backend == "pallas":
         from repro.kernels.conv2d import ops as conv_ops
         return conv_ops.conv2d_fused(x, w, stride=stride, padding=padding,
-                                     bias=b, relu=relu, interpret=interpret)
+                                     bias=b, relu=relu, interpret=interpret,
+                                     autotune=autotune)
     if backend in ("pallas_im2col_ref", "pallas_im2col"):
         from repro.kernels.conv2d import ops as conv_ops
         return conv_ops.conv2d_im2col(x, w, stride=stride, padding=padding,
-                                      bias=b, relu=relu, interpret=interpret)
+                                      bias=b, relu=relu, interpret=interpret,
+                                      autotune=autotune)
     if backend == "xla":
         y = jax.lax.conv_general_dilated(
             x, w, window_strides=(stride, stride),
@@ -92,12 +107,20 @@ def init(rng, cfg):
 
 
 def forward(params, cfg, images, *, train: bool = False, dropout_rng=None,
-            conv_backend: str = "xla", conv_interpret: bool = None):
-    """images (B,H,W,C) -> logits (B, n_classes) float32."""
+            conv_backend: str = None, conv_interpret: bool = None):
+    """images (B,H,W,C) -> logits (B, n_classes) float32.
+
+    ``conv_backend=None`` resolves through ``cfg.kernels`` (KernelPolicy);
+    an explicit argument wins (parity tests force specific backends)."""
+    if conv_backend is None:
+        conv_backend = resolve_conv_backend(cfg)
+    if conv_interpret is None:
+        conv_interpret = policy_of(cfg).interpret
     h = images
     for cp, cs in zip(params["convs"], cfg.convs):
         h = conv2d(h, cp["w"], cp["b"], cs.stride, cs.padding, conv_backend,
-                   relu=True, interpret=conv_interpret)
+                   relu=True, interpret=conv_interpret,
+                   autotune=policy_of(cfg).autotune)
         if cs.lrn:
             h = lrn(h)
         if cs.pool:
@@ -118,7 +141,7 @@ def forward(params, cfg, images, *, train: bool = False, dropout_rng=None,
 
 
 def loss_fn(params, cfg, images, labels, *, train=False, dropout_rng=None,
-            conv_backend="xla", conv_interpret=None):
+            conv_backend=None, conv_interpret=None):
     logits = forward(params, cfg, images, train=train,
                      dropout_rng=dropout_rng, conv_backend=conv_backend,
                      conv_interpret=conv_interpret)

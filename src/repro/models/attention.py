@@ -1,11 +1,23 @@
 """Attention: GQA/MQA, causal + sliding-window, KV cache with ring buffer.
 
-Three full-sequence implementations, selectable per call:
+Four full-sequence implementations, selected by the config's
+``KernelPolicy`` (``cfg.kernels``) or per call via ``impl=``:
   ``xla``      — masked-softmax einsum (materializes S×S scores; small S only)
   ``chunked``  — flash-style online-softmax scan over KV blocks (default for
                  long sequences; bounded memory, pure jnp, differentiable)
-  ``flash``    — Pallas TPU kernel (``repro.kernels.flash_attention``);
-                 interpret-mode on CPU hosts
+  ``qloop``    — static query-chunk loop (near-exact HLO flops; the dry-run's
+                 lowering)
+  ``flash``    — Pallas TPU kernel (``repro.kernels.flash_attention``),
+                 forward AND backward (custom_vjp); interpret-mode on CPU
+
+``impl=None`` resolves through the policy: an explicit per-op selector
+wins; ``auto`` picks ``flash`` whenever the policy's backend resolves to
+the Pallas path (global ``--kernel-backend pallas``, or ``auto`` on a
+host where Pallas compiles) and the call shape supports it, else the
+chunked/xla length heuristic.  Unsupported combinations (flash with
+cross-attention memory, a query offset, or mismatched q/kv lengths;
+``window`` with cross-attention on any impl) raise instead of silently
+computing something else.
 
 Decode uses a ring-buffer cache of capacity ``min(seq_len, window)`` so SWA
 archs keep an O(window) working set at 512k positions.  Keys are stored
@@ -16,9 +28,44 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import policy_of
 from repro.models.layers import apply_rope, dense_init, rope_freqs
 
 NEG_INF = -1e30
+
+IMPLS = ("xla", "chunked", "qloop", "flash")
+
+
+def resolve_impl(cfg, *, sq: int, sk: int, cross: bool = False,
+                 q_offset=0, impl: str = None) -> str:
+    """Resolve the attention implementation for one call site.
+
+    Precedence: explicit ``impl`` > ``cfg.kernels.attention`` > ``auto``.
+    ``auto`` resolves to ``flash`` when the policy wants the Pallas path
+    and the shape supports it — the policy/backend can now reach the
+    kernel that used to be dead code behind an explicit kwarg.
+    """
+    pol = policy_of(cfg)
+    sel = impl if impl is not None else (pol.attention or "auto")
+    static_offset = isinstance(q_offset, int) and q_offset == 0
+    flash_ok = not cross and static_offset and sq == sk
+    if sel in ("flash", "pallas"):
+        # explicit request for an impl that cannot honor the call → raise
+        if not flash_ok:
+            why = ("cross-attention memory" if cross else
+                   "a traced/nonzero q_offset (positions live outside the "
+                   "kernel's row indices)" if not static_offset else
+                   f"sq={sq} != sk={sk}")
+            raise ValueError(f"attention impl 'flash' does not support {why}")
+        return "flash"
+    if sel == "auto":
+        if flash_ok and pol.wants_pallas("attention"):
+            return "flash"
+        return "chunked" if max(sq, sk) > 2048 else "xla"
+    if sel not in IMPLS:
+        raise ValueError(f"unknown attention impl {sel!r}; known: "
+                         f"{IMPLS + ('auto',)}")
+    return sel
 
 
 def attn_init(rng, cfg, dtype):
@@ -154,11 +201,20 @@ def _sdpa_qloop(q, k, v, window, causal, scale, max_score_bytes=2 ** 28):
 
 
 def full_attention(params, cfg, x, *, xc=None, causal=True, rope=True,
-                   window=None, impl="auto", q_offset=0):
-    """Full-sequence attention.  x (B,S,d); xc = cross-attention memory."""
+                   window=None, impl=None, q_offset=0):
+    """Full-sequence attention.  x (B,S,d); xc = cross-attention memory.
+
+    ``impl=None`` resolves through ``cfg.kernels`` (see ``resolve_impl``).
+    """
     b, s, _ = x.shape
+    if window is not None and xc is not None:
+        raise ValueError("sliding-window masks are positional and do not "
+                         "apply to cross-attention memory; got window="
+                         f"{window} with xc")
     q, k, v = _qkv(params, cfg, x, xc)
     sk = k.shape[1]
+    impl = resolve_impl(cfg, sq=s, sk=sk, cross=xc is not None,
+                        q_offset=q_offset, impl=impl)
     q_pos = jnp.arange(s) + q_offset
     k_pos = jnp.arange(sk) + (0 if xc is None else 0)
     if rope and xc is None:
@@ -167,8 +223,6 @@ def full_attention(params, cfg, x, *, xc=None, causal=True, rope=True,
         k = apply_rope(k, k_pos, inv)
     qg = _group(q, cfg.n_kv_heads)
     scale = cfg.head_dim ** -0.5
-    if impl == "auto":
-        impl = "chunked" if max(s, sk) > 2048 else "xla"
     if impl == "xla":
         mask = _mask(q_pos, k_pos, window, causal)
         o = _sdpa_xla(qg, k, v, mask, scale)
@@ -176,12 +230,12 @@ def full_attention(params, cfg, x, *, xc=None, causal=True, rope=True,
         o = _sdpa_qloop(qg, k, v, window, causal, scale)
     elif impl == "chunked":
         o = _sdpa_chunked(qg, k, v, q_pos, k_pos, window, causal, scale)
-    elif impl == "flash":
+    else:                                              # flash (resolved)
         from repro.kernels.flash_attention import ops as flash_ops
+        pol = policy_of(cfg)
         o = flash_ops.flash_attention(qg, k, v, causal=causal, window=window,
-                                      scale=scale)
-    else:
-        raise ValueError(f"unknown attention impl {impl!r}")
+                                      scale=scale, interpret=pol.interpret,
+                                      autotune=pol.autotune)
     o = o.reshape(b, s, cfg.n_heads, cfg.head_dim)
     return _out(params, cfg, o)
 

@@ -49,12 +49,11 @@ def init(rng, cfg):
     }
 
 
-def encode(params, cfg, frames, attn_impl="auto", remat=False):
+def encode(params, cfg, frames, remat=False):
     """frames (B, T_enc, d_model) stub embeddings -> encoder memory."""
     def block(h, bp):
         x = norm_apply(bp["norm1"], cfg, h)
-        h = h + attn.full_attention(bp["attn"], cfg, x, causal=False,
-                                    impl=attn_impl)
+        h = h + attn.full_attention(bp["attn"], cfg, x, causal=False)
         x = norm_apply(bp["norm2"], cfg, h)
         return h + mlp_apply(bp["ffn"], cfg, x), None
 
@@ -64,24 +63,23 @@ def encode(params, cfg, frames, attn_impl="auto", remat=False):
     return norm_apply(params["enc_norm"], cfg, h)
 
 
-def _dec_block_seq(bp, cfg, h, memory, attn_impl):
+def _dec_block_seq(bp, cfg, h, memory):
     x = norm_apply(bp["norm1"], cfg, h)
-    h = h + attn.full_attention(bp["self_attn"], cfg, x, causal=True,
-                                impl=attn_impl)
+    h = h + attn.full_attention(bp["self_attn"], cfg, x, causal=True)
     x = norm_apply(bp["norm_x"], cfg, h)
     h = h + attn.full_attention(bp["cross_attn"], cfg, x, xc=memory,
-                                causal=False, rope=False, impl=attn_impl)
+                                causal=False, rope=False)
     x = norm_apply(bp["norm2"], cfg, h)
     return h + mlp_apply(bp["ffn"], cfg, x)
 
 
-def forward(params, cfg, frames, dec_tokens, attn_impl="auto", remat=False):
+def forward(params, cfg, frames, dec_tokens, remat=False):
     """Returns (logits (B,S,V) f32, aux=0)."""
-    memory = encode(params, cfg, frames, attn_impl, remat=remat)
+    memory = encode(params, cfg, frames, remat=remat)
     h = embed_apply(params["embed"], cfg, dec_tokens)
 
     def block(h, bp):
-        return _dec_block_seq(bp, cfg, h, memory, attn_impl), None
+        return _dec_block_seq(bp, cfg, h, memory), None
 
     if remat:
         block = jax.checkpoint(block)

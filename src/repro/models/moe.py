@@ -23,6 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import policy_of
 from repro.models.layers import dense_init, matmul, mlp_apply, mlp_init
 
 
@@ -57,8 +58,44 @@ def _buffer_constraint(x, bspec):
     return jax.lax.with_sharding_constraint(x, spec)
 
 
+def _expert_ffn_pallas(p, cfg, x):
+    """x (E, C, d) -> (E, C, d) via per-expert Pallas GEMMs.
+
+    Explicit opt-in through ``KernelPolicy(matmul="pallas")`` — one
+    ``matmul_bias`` kernel call per expert weight (differentiable via its
+    custom_vjp), so the whole MoE FFN can ride the same compiled GEMM the
+    conv pipeline uses.  GSPMD buffer-sharding hints do not apply inside
+    the manual kernels, so ``buffer_sharding`` is ignored on this path.
+    """
+    from repro.kernels.conv2d.conv2d import matmul_bias
+    pol = policy_of(cfg)
+    interpret = pol.interpret
+    e = x.shape[0]
+    f = p["w_in"].shape[-1]
+    d = p["w_out"].shape[-1]
+    zf = jnp.zeros((f,), x.dtype)
+    zd = jnp.zeros((d,), x.dtype)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+    outs = []
+    for ei in range(e):
+        h = matmul_bias(x[ei], p["w_in"][ei].astype(x.dtype), zf,
+                        interpret=interpret, autotune=pol.autotune)
+        if gated:
+            g = matmul_bias(x[ei], p["w_gate"][ei].astype(x.dtype), zf,
+                            interpret=interpret, autotune=pol.autotune)
+            h = h * act(g)
+        else:
+            h = jax.nn.gelu(h)
+        outs.append(matmul_bias(h, p["w_out"][ei].astype(x.dtype), zd,
+                                interpret=interpret, autotune=pol.autotune))
+    return jnp.stack(outs)
+
+
 def _expert_ffn(p, cfg, x, bspec=None):
     """x (E, C, d) -> (E, C, d) via batched expert matmuls."""
+    if policy_of(cfg).wants_pallas("matmul"):
+        return _expert_ffn_pallas(p, cfg, x)
     h = jnp.einsum("ecd,edf->ecf", x, p["w_in"].astype(x.dtype),
                    preferred_element_type=jnp.float32).astype(x.dtype)
     if cfg.mlp == "swiglu":

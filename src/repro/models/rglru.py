@@ -10,15 +10,33 @@ RG-LRU per channel:
     log a_t = -c * softplus(Lambda) * r_t    (c = 8)
     h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
 
-The sequence form uses ``jax.lax.associative_scan`` on the (a, b) pairs —
-the TPU-native mapping of the paper-pool's linear-recurrence scan.
+The sequence form is selected by the config's ``KernelPolicy``: the XLA
+path uses ``jax.lax.associative_scan`` on the (a, b) pairs — the
+TPU-native mapping of the paper-pool's linear-recurrence scan — and the
+Pallas path runs the chunked VMEM-state kernel in
+``repro.kernels.rglru`` (differentiable via its transpose-scan
+custom_vjp).  A carried state folds into the first step's b term
+(``b_1 += a_1 h_0``) so both paths start from zero state.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import policy_of, resolve_interpret
 from repro.models.layers import dense_init, matmul
+
+
+def resolve_rglru_impl(cfg) -> str:
+    """``pallas`` or ``xla`` (associative_scan) from the KernelPolicy."""
+    pol = policy_of(cfg)
+    sel = pol.rglru or pol.backend
+    if sel == "auto":
+        sel = "pallas" if not resolve_interpret(pol.interpret) else "xla"
+    if sel not in ("xla", "pallas"):
+        raise ValueError(f"unknown rglru impl {sel!r}")
+    return sel
+
 
 CONV_WIDTH = 4
 N_DIAG_BLOCKS = 16
@@ -91,12 +109,18 @@ def rglru_seq(p, cfg, x, cache=None):
         # fold the carried state into the first step: b_1 += a_1 * h_0
         bt = bt.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
 
-    def combine(lt, rt):
-        al, bl = lt
-        ar, br = rt
-        return al * ar, ar * bl + br
+    if resolve_rglru_impl(cfg) == "pallas":
+        from repro.kernels.rglru.rglru import rglru_pallas
+        pol = policy_of(cfg)
+        h = rglru_pallas(a, bt, interpret=pol.interpret,
+                         autotune=pol.autotune)
+    else:
+        def combine(lt, rt):
+            al, bl = lt
+            ar, br = rt
+            return al * ar, ar * bl + br
 
-    _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
+        _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
     out = matmul((h.astype(x.dtype) * gate), p["wo"])
     new_cache = {"conv": conv_state.astype(x.dtype), "h": h[:, -1].astype(jnp.float32)}
     return out, new_cache

@@ -11,11 +11,32 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import policy_of, resolve_interpret
 from repro.kernels.rwkv6 import ops as wkv_ops
 from repro.models.layers import dense_init, matmul
 
 DDLERP_RANK = 32
 DECAY_RANK = 64
+
+
+def resolve_wkv_impl(cfg, *, has_state: bool = False) -> str:
+    """WKV impl from the config's KernelPolicy.
+
+    ``auto`` takes the Pallas kernel whenever it would compile; the
+    Pallas path starts from a zero state, so prefill-from-cache falls
+    back to the (equivalent) chunked XLA form.
+    """
+    pol = policy_of(cfg)
+    sel = pol.rwkv6 or pol.backend
+    if sel == "auto":
+        sel = "pallas" if not resolve_interpret(pol.interpret) else "chunked"
+    elif sel == "xla":
+        sel = "chunked"
+    if sel == "pallas" and has_state:
+        return "chunked"
+    if sel not in ("sequential", "chunked", "pallas"):
+        raise ValueError(f"unknown wkv impl {sel!r}")
+    return sel
 
 
 def rwkv_block_init(rng, cfg, dtype):
@@ -81,8 +102,13 @@ def _groupnorm_heads(x, scale, h, eps=64e-5):
     return y.astype(x.dtype)
 
 
-def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None, impl="chunked"):
-    """x (B,S,d).  Returns (out, (last_x, final_wkv_state))."""
+def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None):
+    """x (B,S,d).  Returns (out, (last_x, final_wkv_state)).
+
+    The WKV impl is selected by ``cfg.kernels`` (the old ``impl=`` kwarg
+    threading is gone — see docs/kernels.md for the migration note).
+    """
+    impl = resolve_wkv_impl(cfg, has_state=wkv_state is not None)
     tm = p["tm"]
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
@@ -95,8 +121,10 @@ def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None, impl="chunked"):
     k = matmul(xk, tm["wk"]).reshape(b, s, h, hd)
     v = matmul(xv, tm["wv"]).reshape(b, s, h, hd)
     g = jax.nn.silu(matmul(xg, tm["wg"]))
+    pol = policy_of(cfg)
     y, s_fin = wkv_ops.wkv(r, k, v, w, tm["u"].astype(jnp.float32),
-                           wkv_state, impl=impl, chunk=min(64, s))
+                           wkv_state, impl=impl, chunk=min(64, s),
+                           interpret=pol.interpret, autotune=pol.autotune)
     y = y.astype(x.dtype).reshape(b, s, d)
     y = _groupnorm_heads(y, tm["ln_x_scale"], h) * g
     return matmul(y, tm["wo"]), (x[:, -1], s_fin)

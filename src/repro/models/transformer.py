@@ -100,7 +100,7 @@ def _window(cfg, kind):
     return cfg.sliding_window
 
 
-def block_apply_seq(p, cfg, kind, h, *, attn_impl="auto", cache=None):
+def block_apply_seq(p, cfg, kind, h, *, cache=None):
     """Full-sequence block.  Returns (h, aux, new_cache).
 
     ``cache`` (optional) is this block's decode-cache; when given, carry
@@ -129,7 +129,7 @@ def block_apply_seq(p, cfg, kind, h, *, attn_impl="auto", cache=None):
         new_cache = {"mix": new_cache}
     else:
         y = attn.full_attention(p["attn"], cfg, x, causal=True,
-                                window=_window(cfg, kind), impl=attn_impl)
+                                window=_window(cfg, kind))
         if cache is not None:
             new_cache = attn.fill_cache(p["attn"], cfg, x, cache,
                                         window=_window(cfg, kind))
@@ -152,7 +152,7 @@ def _scatter_image(cfg, h, image_embeds, image_mask):
 
 
 def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
-            attn_impl="auto", return_cache=False, cache=None, remat=False):
+            return_cache=False, cache=None, remat=False):
     """tokens (B,S) -> (logits (B,S,V) float32, aux scalar[, cache]).
 
     ``remat=True`` checkpoints each scanned superblock (recompute in the
@@ -176,7 +176,7 @@ def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
             ncs = []
             for pi, kind in enumerate(pattern):
                 h, a, nc = block_apply_seq(bp[pi], cfg, kind, h,
-                                           attn_impl=attn_impl, cache=bc[pi])
+                                           cache=bc[pi])
                 aux = aux + a
                 ncs.append(nc)
             return (h, aux), (tuple(ncs) if return_cache else None)
@@ -201,8 +201,7 @@ def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
     new_rem = []
     for i, bp in enumerate(params["rem_blocks"]):
         bc = cache["rem_blocks"][i] if return_cache else None
-        h, a, nc = block_apply_seq(bp, cfg, pattern[i], h,
-                                   attn_impl=attn_impl, cache=bc)
+        h, a, nc = block_apply_seq(bp, cfg, pattern[i], h, cache=bc)
         aux = aux + a
         new_rem.append(nc)
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 EVAL_SEED_OFFSET = 100_003        # train seed + this = eval stream seed
 
 
-def alexnet_metrics(cfg, *, conv_backend: str = "xla") -> Callable:
+def alexnet_metrics(cfg, *, conv_backend: str = None) -> Callable:
     """(params, batch{images,labels}) -> {loss, top1_err} (both f32)."""
     from repro.models import alexnet
     from repro.models.layers import softmax_xent
@@ -38,12 +38,16 @@ def alexnet_metrics(cfg, *, conv_backend: str = "xla") -> Callable:
     return metric_fn
 
 
-def lm_metrics(cfg, *, attn_impl: str = "auto") -> Callable:
-    """(params, batch) -> {loss, perplexity} for the LM zoo."""
+def lm_metrics(cfg) -> Callable:
+    """(params, batch) -> {loss, perplexity} for the LM zoo.
+
+    Kernel selection rides on ``cfg.kernels`` — eval runs the same
+    backends the train step does (the old ``attn_impl=`` kwarg is gone).
+    """
     from repro import models
 
     def metric_fn(params, batch):
-        loss = models.loss_fn(params, cfg, batch, attn_impl=attn_impl)
+        loss = models.loss_fn(params, cfg, batch)
         return {"loss": loss, "perplexity": jnp.exp(loss)}
 
     return metric_fn

@@ -89,7 +89,8 @@ class TrainSession:
                  eval_batches: int = 2, plateau_metric: str = "loss",
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  resume: bool = False, prefetch: int = 2, log_every: int = 10,
-                 images_per_step: int = 0, metrics_path: Optional[str] = None):
+                 images_per_step: int = 0, metrics_path: Optional[str] = None,
+                 run_meta: Optional[dict] = None):
         self.state = state
         self.build_step = build_step
         self.make_stream = make_stream
@@ -111,6 +112,11 @@ class TrainSession:
         self.log_every = log_every
         self.images_per_step = images_per_step
         self.metrics_path = metrics_path
+        # run_meta rides in the checkpoint manifest: resume compares it so
+        # a run restarted under a different kernel policy/backend gets a
+        # loud warning — cross-backend numerics differ in the last bits,
+        # which silently breaks the bit-exact-resume guarantee
+        self.run_meta = run_meta or {}
         self._ff_batches = 0          # train batches to skip on resume
         self._eval_cache = None       # eval streams are freshly-seeded and
         # deterministic (train_loop.eval), so the batches are identical on
@@ -130,6 +136,21 @@ class TrainSession:
         meta = checkpoint.load_meta(self.ckpt_dir, step) or {}
         if "controller" in meta:
             self.controller.load_state_dict(meta["controller"])
+        # reuse the checkpoint's autotuned block sizes: re-measuring under
+        # timing noise could pick different winners, whose different fp
+        # reduction order would silently break bit-exact resume
+        from repro.kernels import common as _kernels_common
+        _kernels_common.load_cache_state(meta.get("autotune_cache"))
+        saved = meta.get("run_meta") or {}
+        drift = {k: (saved.get(k), v) for k, v in self.run_meta.items()
+                 if k in saved and saved.get(k) != v}
+        if drift:
+            print("WARNING: resuming under a different configuration than "
+                  "the checkpoint was written with — the continued loss "
+                  "trace will NOT be bit-exact: "
+                  + ", ".join(f"{k}: {a!r} -> {b!r}"
+                              for k, (a, b) in sorted(drift.items())),
+                  flush=True)
         # the manifest is authoritative for the stream position (== step
         # today, but decoupled so a future loop drawing !=1 batch/step
         # keeps resuming correctly)
@@ -137,11 +158,14 @@ class TrainSession:
         return step
 
     def _save(self, step: int):
+        from repro.kernels import common as _kernels_common
         checkpoint.save(
             self.ckpt_dir, step, self.state,
             meta={"controller": self.controller.state_dict(),
                   "batches_consumed": step,
-                  "plateau_metric": self.plateau_metric})
+                  "plateau_metric": self.plateau_metric,
+                  "run_meta": self.run_meta,
+                  "autotune_cache": _kernels_common.cache_state()})
 
     def _run_eval(self, step: int, writer, result: SessionResult) -> bool:
         """One validation pass; returns True iff the LR dropped."""

@@ -78,3 +78,14 @@ def test_matches_model_associative_scan():
         combine, (a.astype(jnp.float32), bb.astype(jnp.float32)), axis=1)
     h1, _ = ref.rglru_sequential(a, bb)
     np.testing.assert_allclose(h1, h3, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_growing_recurrence_exact():
+    """a > 1 (growing recurrence) must be computed exactly, not silently
+    clamped — the tril mask is applied inside the exp."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    a = jnp.exp(jax.random.normal(ks[0], (1, 64, 8)) * 0.1)  # around 1, both sides
+    bb = jax.random.normal(ks[1], (1, 64, 8))
+    h1, _ = ref.rglru_sequential(a, bb)
+    h2 = rglru_pallas(a, bb, chunk=16)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)

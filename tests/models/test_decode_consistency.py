@@ -10,7 +10,10 @@ import pytest
 
 from repro import models
 from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
 from repro.models import encdec, transformer
+
+XLA_ATTN = KernelPolicy(attention="xla")
 
 CASES = ["olmo-1b", "gemma-7b", "minitron-8b", "rwkv6-7b",
          "recurrentgemma-9b", "phi-3-vision-4.2b"]
@@ -33,10 +36,8 @@ def test_decode_equals_forward(arch, rng):
     params = models.init(rng, cfg)
     b, s = 2, 32
     toks = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
-    if cfg.family == "vlm":
-        full, _ = transformer.forward(params, cfg, toks, attn_impl="xla")
-    else:
-        full, _ = transformer.forward(params, cfg, toks, attn_impl="xla")
+    cfg = dataclasses.replace(cfg, kernels=XLA_ATTN)
+    full, _ = transformer.forward(params, cfg, toks)
     cache = transformer.init_decode_cache(cfg, b, s)
     dec, _ = _decode_all(cfg, params, toks, cache)
     np.testing.assert_allclose(dec, full, rtol=2e-4, atol=2e-4)
@@ -50,7 +51,8 @@ def test_moe_decode_equals_forward_nodrop(rng):
     params = models.init(rng, cfg)
     b, s = 2, 32
     toks = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
-    full, _ = transformer.forward(params, cfg, toks, attn_impl="xla")
+    cfg = dataclasses.replace(cfg, kernels=XLA_ATTN)
+    full, _ = transformer.forward(params, cfg, toks)
     cache = transformer.init_decode_cache(cfg, b, s)
     dec, _ = _decode_all(cfg, params, toks, cache)
     np.testing.assert_allclose(dec, full, rtol=2e-4, atol=2e-4)
@@ -63,7 +65,8 @@ def test_swa_ring_wraparound(rng):
     params = models.init(rng, cfg)
     b, s = 2, 48
     toks = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
-    full, _ = transformer.forward(params, cfg, toks, attn_impl="xla")
+    cfg = dataclasses.replace(cfg, kernels=XLA_ATTN)
+    full, _ = transformer.forward(params, cfg, toks)
     cache = transformer.init_decode_cache(cfg, b, s)
     assert cache["blocks"][0]["k"].shape[2] == 16   # capacity == window
     dec, _ = _decode_all(cfg, params, toks, cache)
@@ -76,9 +79,10 @@ def test_prefill_then_decode(rng):
     params = models.init(rng, cfg)
     b, s, extra = 2, 32, 8
     toks = jax.random.randint(rng, (b, s + extra), 0, cfg.vocab_size)
-    full, _ = transformer.forward(params, cfg, toks, attn_impl="xla")
+    cfg = dataclasses.replace(cfg, kernels=XLA_ATTN)
+    full, _ = transformer.forward(params, cfg, toks)
     _, _, cache = transformer.forward(params, cfg, toks[:, :s],
-                                      attn_impl="xla", return_cache=True)
+                                      return_cache=True)
     for t in range(s, s + extra):
         lg, cache = transformer.decode_step(params, cfg, cache,
                                             toks[:, t:t + 1], t)
@@ -90,9 +94,10 @@ def test_prefill_then_decode_rwkv(rng):
     params = models.init(rng, cfg)
     b, s, extra = 2, 64, 8
     toks = jax.random.randint(rng, (b, s + extra), 0, cfg.vocab_size)
-    full, _ = transformer.forward(params, cfg, toks, attn_impl="xla")
+    cfg = dataclasses.replace(cfg, kernels=XLA_ATTN)
+    full, _ = transformer.forward(params, cfg, toks)
     _, _, cache = transformer.forward(params, cfg, toks[:, :s],
-                                      attn_impl="xla", return_cache=True)
+                                      return_cache=True)
     for t in range(s, s + extra):
         lg, cache = transformer.decode_step(params, cfg, cache,
                                             toks[:, t:t + 1], t)

@@ -90,7 +90,10 @@ def test_greedy_decode_generates():
     params = models.init(jax.random.PRNGKey(0), cfg)
     b, s = 2, 16
     toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, 64)
-    _, _, cache = transformer.forward(params, cfg, toks, attn_impl="xla",
+    import dataclasses
+    from repro.kernels.common import KernelPolicy
+    cfg = dataclasses.replace(cfg, kernels=KernelPolicy(attention="xla"))
+    _, _, cache = transformer.forward(params, cfg, toks,
                                       return_cache=True,
                                       cache=transformer.init_decode_cache(
                                           cfg, b, s + 8))
