@@ -37,10 +37,15 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
+def emit(name: str, us: float, derived: str = "", **meta):
+    """Emit one CSV row; ``meta`` kwargs (arch=, slots=, backend=, ...) are
+    persisted on the JSON row so trajectories stay comparable across PRs
+    even when row names drift."""
     print(f"{name},{us:.1f},{derived}", flush=True)
-    _ROWS.append({"name": name, "us_per_call": round(us, 1),
-                  "derived": derived})
+    row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    if meta:
+        row["meta"] = meta
+    _ROWS.append(row)
 
 
 def recorded_rows() -> list:

@@ -13,6 +13,8 @@ future PRs have a trajectory baseline.  Mapping to the paper:
                       sweep — lm/<arch>/<backend> rows)
   parity_training     §3 accuracy-parity claim (param-avg vs grad-avg)
   session_throughput  Table 1 through the session layer (train_loop JSONL)
+  serving_latency     continuous-batching engine vs the static decode loop
+                      (tok/s, p50/p99 request latency, slots curve)
 """
 from __future__ import annotations
 
@@ -23,7 +25,8 @@ import traceback
 
 from benchmarks import (common, exchange_strategies, kernel_backends,
                         loading_overlap, local_sgd_ablation, parity_training,
-                        session_throughput, table1_throughput)
+                        serving_latency, session_throughput,
+                        table1_throughput)
 
 SUITES = {
     "table1_throughput": table1_throughput.main,
@@ -33,6 +36,7 @@ SUITES = {
     "parity_training": parity_training.main,
     "local_sgd_ablation": local_sgd_ablation.main,
     "session_throughput": session_throughput.main,
+    "serving_latency": serving_latency.main,
 }
 
 

@@ -1,0 +1,177 @@
+"""Serving benchmark: continuous batching vs the PR-4-era static loop.
+
+Workload: a heavy-tailed request mix (a few long generations among many
+short ones — the shape real traffic has) served at EQUAL batch width:
+
+  static_loop   the PR-4-era ``examples/serve.py`` pattern: take the next
+                ``slots`` requests, prefill them together, then run the
+                per-token decode loop until the LONGEST request in the
+                batch finishes (head-of-line blocking: finished rows keep
+                burning decode FLOPs), repeat.
+  engine        ``repro.serving.ServingEngine`` with ``slots`` decode
+                slots: finished rows retire immediately and queued
+                requests are admitted mid-flight, so every tick's batch
+                is full of USEFUL work.
+
+Throughput counts useful tokens only (tokens a request actually asked
+for).  Also measured: the int-``pos`` dispatch tax the old loop paid
+(one host->device transfer per token — on this jax it does NOT recompile,
+the staging is the cost), and the engine's throughput-vs-slots curve.
+Rows carry arch/slots/backend/devices metadata into BENCH_<date>.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.models import transformer
+from repro.serving import Request, ServingEngine
+
+ARCH = "olmo-1b"
+CAPACITY = 64
+PROMPT = 8
+
+
+def _cfg():
+    # big enough that the per-tick compute (not python dispatch) is what
+    # the schedulers are racing on
+    cfg = reduced(ARCHS[ARCH], n_layers=2, d_model=256)
+    return dataclasses.replace(cfg, kernels=KernelPolicy(attention="xla"))
+
+
+def _requests(n, rng):
+    """3:1 short:long mix — the heavy tail static batching trips over."""
+    reqs = []
+    for i in range(n):
+        long = i % 4 == 0
+        reqs.append(Request(
+            prompt=rng.integers(0, 512, size=PROMPT),
+            max_new_tokens=40 if long else 5))
+    return reqs
+
+
+@functools.lru_cache(maxsize=None)
+def _loop_fns(cfg):
+    """Compile the static loop's steps ONCE per config (a fresh closure
+    per run would put the compile inside the measured wall)."""
+    decode = jax.jit(
+        lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos))
+
+    def _greedy(p, c, t, pos):
+        lg, c = transformer.decode_step(p, cfg, c, t, pos)
+        return jnp.argmax(lg, -1).astype(jnp.int32), c
+
+    prefill_j = jax.jit(lambda p, toks: transformer.forward(
+        p, cfg, toks, return_cache=True,
+        cache=transformer.init_decode_cache(cfg, toks.shape[0], CAPACITY)))
+    return decode, jax.jit(_greedy), prefill_j
+
+
+def _static_loop(params, cfg, reqs, batch, *, jit_prefill: bool):
+    """The PR-4-era serving pattern: static batches, eager whole-batch
+    prefill, one jitted decode driven by a python loop with an int
+    ``pos``, every batch running until its LONGEST request finishes.
+    ``jit_prefill=True`` is the strengthened variant (compiled prefill,
+    device-scalar pos, argmax fused into the jitted step) that isolates
+    the SCHEDULING gap from the per-token dispatch overhead the old
+    example also paid."""
+    decode, decode_g, prefill_j = _loop_fns(cfg)
+    useful = 0
+    t0 = time.perf_counter()
+    for lo in range(0, len(reqs), batch):
+        group = reqs[lo:lo + batch]
+        toks = jnp.asarray(np.stack([r.prompt for r in group]))
+        if jit_prefill:
+            logits, _, cache = prefill_j(params, toks)
+        else:
+            logits, _, cache = transformer.forward(
+                params, cfg, toks, return_cache=True,
+                cache=transformer.init_decode_cache(cfg, len(group),
+                                                    CAPACITY))
+        cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        steps = max(r.max_new_tokens for r in group) - 1
+        for t in range(PROMPT, PROMPT + steps):
+            if jit_prefill:
+                cur, cache = decode_g(params, cache, cur, jnp.int32(t))
+            else:
+                lg, cache = decode(params, cache, cur, t)
+                cur = jnp.argmax(lg, -1).astype(jnp.int32)
+        jax.block_until_ready(cur)
+        useful += sum(r.max_new_tokens for r in group)
+    return useful, time.perf_counter() - t0
+
+
+def _engine_run(params, cfg, reqs, slots):
+    eng = ServingEngine(params, cfg, slots=slots, capacity=CAPACITY,
+                        buckets=(PROMPT,))
+    t0 = time.perf_counter()
+    results = eng.run(list(reqs))
+    wall = time.perf_counter() - t0
+    return results, sum(len(r.tokens) for r in results), wall
+
+
+def main():
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+    cfg = _cfg()
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 8 if fast else 16
+    slots = 4
+    meta = dict(arch=cfg.name, backend="xla",
+                devices=jax.device_count(), capacity=CAPACITY)
+    reqs = _requests(n_req, rng)
+
+    # warm every path (BOTH static variants use distinct jitted fns —
+    # compiles must not land inside a measured wall)
+    _static_loop(params, cfg, reqs[:slots], slots, jit_prefill=False)
+    _static_loop(params, cfg, reqs[:slots], slots, jit_prefill=True)
+    _engine_run(params, cfg, reqs[:slots], slots)
+
+    useful, wall = _static_loop(params, cfg, reqs, slots, jit_prefill=False)
+    base_tps = useful / wall
+    emit("serving/static_loop_pr4", wall / useful * 1e6,
+         f"tok/s={base_tps:.1f}", slots=slots, **meta)
+    useful_d, wall_d = _static_loop(params, cfg, reqs, slots,
+                                    jit_prefill=True)
+    strong_tps = useful_d / wall_d
+    emit("serving/static_loop_jit", wall_d / useful_d * 1e6,
+         f"tok/s={strong_tps:.1f}", slots=slots, **meta)
+
+    results, toks, ewall = _engine_run(params, cfg, reqs, slots)
+    eng_tps = toks / ewall
+    emit("serving/engine", ewall / toks * 1e6,
+         f"tok/s={eng_tps:.1f};speedup={eng_tps / base_tps:.2f}x;"
+         f"speedup_vs_jit={eng_tps / strong_tps:.2f}x",
+         slots=slots, **meta)
+    lats = sorted(r.latency for r in results)
+    emit("serving/latency_p50", lats[len(lats) // 2] * 1e6,
+         "per-request", slots=slots, **meta)
+    emit("serving/latency_p99",
+         lats[min(int(0.99 * len(lats)), len(lats) - 1)] * 1e6,
+         "per-request", slots=slots, **meta)
+
+    for s in ((2, 4) if fast else (1, 2, 4, 8)):
+        _engine_run(params, cfg, reqs[:2], s)       # warm this slot count
+        _, tk, w = _engine_run(params, cfg, _requests(n_req, rng), s)
+        emit(f"serving/engine_slots{s}", w / tk * 1e6,
+             f"tok/s={tk / w:.1f}", slots=s, **meta)
+
+    if eng_tps < 2 * base_tps:
+        print(f"# WARNING: engine speedup {eng_tps / base_tps:.2f}x < 2x "
+              "over the static loop", flush=True)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import write_bench_json
+    main()
+    write_bench_json(partial=True)

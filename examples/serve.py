@@ -1,9 +1,16 @@
-"""Serving example: batched prefill + greedy decode with a KV cache.
+"""Serving example: the DecodeState contract + the continuous-batching
+engine (docs/serving.md).
 
-Trains a small LM on Markov data briefly (so generation is non-trivial),
-then serves a batch of prompts: prefill fills the ring cache, decode_step
-extends one token at a time.  Also demonstrates the SWA ring buffer by
-serving a sliding-window variant.
+Trains a small SWA LM on Markov data briefly (so generation is
+non-trivial), then serves it two ways:
+
+1. the raw contract — ``models.prefill`` fills the ring cache (capacity
+   = sliding window) and ``models.decode_step`` extends it; positions
+   live in ``DecodeState.pos`` as DEVICE scalars, so the jitted step is
+   compiled exactly once (the old example passed a python int ``pos``,
+   re-staging the scalar host->device on every token);
+2. ``repro.serving.ServingEngine`` — a stream of variable-length
+   requests through fixed decode slots with bucketed prefill.
 
     PYTHONPATH=src python examples/serve.py
 """
@@ -12,15 +19,16 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import models
 from repro.configs import ARCHS, reduced
 from repro.core import (init_param_avg_state, make_param_avg_step,
                         reshape_for_replicas, unreplicate)
 from repro.data import synthetic
-from repro.models import transformer
 from repro.optim import schedules
 from repro.optim.optimizers import adamw
+from repro.serving import Request, ServingEngine
 
 VOCAB, PROMPT, GEN, BATCH = 64, 24, 16, 4
 
@@ -40,24 +48,23 @@ for i in range(30):
 params = unreplicate(state.params)
 print(f"trained 30 steps, loss {float(loss):.3f}")
 
-# --- serve -------------------------------------------------------------
+# --- 1. the raw DecodeState contract ----------------------------------
 prompts = jnp.asarray(next(src)["tokens"][:BATCH, :PROMPT])
 total = PROMPT + GEN
 
 t0 = time.time()
-logits, _, cache = transformer.forward(
-    params, cfg, prompts, return_cache=True,
-    cache=transformer.init_decode_cache(cfg, BATCH, total))
+logits, dstate = models.prefill(params, cfg, prompts, total)
+cap = dstate.cache["blocks"][0]["k"].shape[2]
 print(f"prefill {PROMPT} tokens x{BATCH}: {time.time() - t0:.3f}s "
-      f"(cache capacity {cache['blocks'][0]['k'].shape[2]} = window)")
+      f"(cache capacity {cap} = window; pos={dstate.pos.tolist()})")
 
-decode = jax.jit(
-    lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos))
+decode = jax.jit(lambda p, s, t: models.decode_step(p, cfg, s, t))
 cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
 generated = [cur]
 t0 = time.time()
-for t in range(PROMPT, total - 1):
-    lg, cache = decode(params, cache, cur, t)
+for _ in range(GEN - 1):
+    # positions ride in dstate.pos on device — one compile for the loop
+    lg, dstate = decode(params, dstate, cur)
     cur = jnp.argmax(lg, -1).astype(jnp.int32)
     generated.append(cur)
 gen = jnp.concatenate(generated, axis=1)
@@ -66,8 +73,24 @@ print(f"decoded {gen.shape[1]} tokens x{BATCH} in {dt:.3f}s "
       f"({BATCH * gen.shape[1] / dt:.0f} tok/s)")
 for b in range(BATCH):
     print(f"  prompt {prompts[b, -6:].tolist()} -> {gen[b].tolist()}")
+assert gen.shape == (BATCH, GEN)
 
-# sanity: greedy continuation of train-distribution prompts should often
-# follow the Markov chain's argmax transition
-assert gen.shape == (BATCH, GEN - 0)
+# --- 2. the continuous-batching engine --------------------------------
+rng = np.random.default_rng(0)
+stream = synthetic.markov_lm(VOCAB, 8, 64, seed=2)
+reqs = [Request(prompt=np.asarray(next(stream)["tokens"][0, :int(ln)]),
+                max_new_tokens=int(new))
+        for ln, new in zip(rng.integers(4, 24, size=8),
+                           rng.integers(4, GEN + 8, size=8))]
+engine = ServingEngine(params, cfg, slots=BATCH, capacity=64,
+                       buckets=(8, 16, 24))
+t0 = time.time()
+results = engine.run(reqs)
+dt = time.time() - t0
+toks = sum(len(r.tokens) for r in results)
+print(f"engine: {len(results)} requests / {toks} tokens in {dt:.3f}s "
+      f"({toks / dt:.0f} tok/s; {engine.decode_steps} ticks, "
+      f"{engine.prefill_compiles} prefill compiles)")
+for r in sorted(results, key=lambda r: r.rid):
+    print(f"  req {r.rid} (len {r.prompt_len:2d}) -> {r.tokens}")
 print("serve OK")

@@ -194,7 +194,8 @@ class KernelOp:
 
 
 _REGISTRY: Dict[str, KernelOp] = {}
-_OP_PACKAGES = ("conv2d", "flash_attention", "rglru", "rwkv6")
+_OP_PACKAGES = ("conv2d", "decode_attention", "flash_attention", "rglru",
+                "rwkv6")
 
 
 def register(op: KernelOp) -> KernelOp:
@@ -227,7 +228,7 @@ BACKENDS = ("auto", "xla", "pallas")
 # ops a global ``backend=pallas`` switches over, and the impl name the
 # model layer maps it to
 _PALLAS_IMPL = {"attention": "flash", "rglru": "pallas", "rwkv6": "pallas",
-                "conv2d": "pallas"}
+                "conv2d": "pallas", "decode_attention": "pallas"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,6 +243,8 @@ class KernelPolicy:
     """
     backend: str = "auto"                 # xla | pallas | auto
     attention: Optional[str] = None       # auto|xla|chunked|qloop|flash
+    # single-token flash-decode over the ring cache (serving hot path)
+    decode_attention: Optional[str] = None  # auto|xla|pallas
     rglru: Optional[str] = None           # auto|xla|pallas
     rwkv6: Optional[str] = None           # auto|sequential|chunked|pallas
     conv2d: Optional[str] = None          # auto|xla|pallas|pallas_im2col_ref

@@ -1,0 +1,1 @@
+from repro.kernels.decode_attention import ops, ref  # noqa: F401

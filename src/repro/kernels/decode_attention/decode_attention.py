@@ -1,0 +1,173 @@
+"""Pallas TPU flash-decode: one query token per sequence against a ring
+KV cache, with GQA group-sum and sliding-window masking.
+
+The decode hot loop is memory-bound — one (G, hd) query tile sweeps the
+(W, hd) cache — so unlike the training flash kernel there is no (S, S)
+anything and no backward pass: this op is deliberately custom-vjp-free
+(``jax.grad`` through it is a usage error; training uses
+``kernels.flash_attention``).
+
+Layout: q is folded to (B*Hkv, G, hd) with the G query heads of one KV
+head as MXU rows (padded to the fp32 sublane count); the cache folds to
+(B*Hkv, W, hd).  Grid is (B*Hkv, W/bk) with the KV axis ``arbitrary``
+(sequential) carrying the online-softmax stats in VMEM scratch.
+
+Per-row positions ride in as a scalar-prefetch argument
+(``pltpu.PrefetchScalarGridSpec``): each grid row reads its own ``pos``
+to build the ring-validity mask in-kernel — slot ``c`` holds absolute
+position ``pos - ((pos - c) mod W)``, valid iff >= 0 and inside the
+window.  Tiles that cannot contain a valid slot (the unwritten tail of a
+not-yet-full ring, or the zero-padded cache tail) skip their MXU work
+via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import SUBLANE, pow2_clip, resolve_interpret
+
+# jax 0.4.x names it TPUCompilerParams; newer jax renames to CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+NEG = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, bk: int, gp: int, window, scale: float,
+                   n_k: int, n_kv_heads: int, cap: int):
+    i = pl.program_id(0)                   # b * Hkv + kv-head
+    ki = pl.program_id(1)
+    p = pos_ref[i // n_kv_heads]           # this row's absolute position
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # a tile is visible iff it can hold a valid slot: the ring has been
+    # written up to slot p while p < cap (so tiles past p are untouched
+    # zeros), and every slot holds a live position once the ring wrapped
+    visible = (ki * bk < cap) & ((ki * bk <= p) | (p >= cap))
+
+    @pl.when(visible)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)                   # (gp, hd)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (gp, bk), 1)
+        slot_pos = p - jnp.mod(p - cols, cap)
+        mask = (cols < cap) & (slot_pos >= 0)
+        if window is not None:
+            mask &= slot_pos > p - window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_scr[...]                                # (gp, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=1,
+                                                  keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            pexp.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv_heads", "window", "scale",
+                                             "bk", "interpret", "cap"))
+def _decode_impl(q, k, v, pos, n_kv_heads, window, scale, bk, interpret,
+                 cap):
+    """Folded padded inputs: q (B*Hkv, gp, hd), k/v (B*Hkv, Wp, hd),
+    pos (B,) int32 -> o (B*Hkv, gp, hd)."""
+    bh, gp, hd = q.shape
+    wp = k.shape[1]
+    assert wp % bk == 0, (wp, bk)
+    n_k = wp // bk
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_k),
+        in_specs=[pl.BlockSpec((1, gp, hd), lambda i, ki, pos_ref: (i, 0, 0)),
+                  pl.BlockSpec((1, bk, hd), lambda i, ki, pos_ref: (i, ki, 0)),
+                  pl.BlockSpec((1, bk, hd), lambda i, ki, pos_ref: (i, ki, 0))],
+        out_specs=pl.BlockSpec((1, gp, hd), lambda i, ki, pos_ref: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((gp, 1), jnp.float32),
+                        pltpu.VMEM((gp, 1), jnp.float32),
+                        pltpu.VMEM((gp, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk, gp=gp, window=window,
+                          scale=scale, n_k=n_k, n_kv_heads=n_kv_heads,
+                          cap=cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, gp, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, q, k, v)
+
+
+def decode_blocks(cap: int, hd: int, dtype, *, interpret: bool,
+                  autotune: bool = None):
+    """(bk,) KV tile size, shared-autotuned on compiled backends."""
+    from repro.kernels import common
+    default = (pow2_clip(cap, 128),)
+    key = ("decode_attn", cap, hd, str(dtype))
+    if not common.autotune_enabled(interpret, autotune):
+        return common.autotune(key, [default], None)
+    cands = {default} | {(bk,) for bk in (64, 128, 256)
+                         if bk <= pow2_clip(cap, 256)}
+    import numpy as np
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(4, 2, 4, hd)).astype(dtype)
+    kv = rng.normal(size=(4, cap, 2, hd)).astype(dtype)
+    pos = np.full((4,), cap - 1, np.int32)
+
+    def measure(c):
+        return common.time_call(
+            lambda: decode_attention_pallas(
+                q, kv, kv, pos, scale=hd ** -0.5, bk=c[0], interpret=False))
+    return common.autotune(key, sorted(cands), measure)
+
+
+def decode_attention_pallas(q, k, v, pos, *, window=None, scale=1.0,
+                            bk: int = None, interpret: bool = None,
+                            autotune: bool = None):
+    """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd) ring cache; pos (B,) int32.
+
+    Returns (B,Hkv,G,hd).  NOT differentiable (inference fast path).
+    """
+    b, hkv, g, hd = q.shape
+    cap = k.shape[1]
+    interpret = resolve_interpret(interpret)
+    if bk is None:
+        (bk,) = decode_blocks(cap, hd, q.dtype, interpret=interpret,
+                              autotune=autotune)
+    bk = min(bk, pow2_clip(cap, bk))
+    gp = -(-g // SUBLANE) * SUBLANE
+    qf = q.reshape(b * hkv, g, hd)
+    if gp != g:
+        qf = jnp.pad(qf, ((0, 0), (0, gp - g), (0, 0)))
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, cap, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, cap, hd)
+    wp = -(-cap // bk) * bk
+    if wp != cap:
+        pad = ((0, 0), (0, wp - cap), (0, 0))
+        kf, vf = jnp.pad(kf, pad), jnp.pad(vf, pad)
+    o = _decode_impl(qf, kf, vf, jnp.asarray(pos, jnp.int32), hkv, window,
+                     scale, bk, interpret, cap)
+    return o[:, :g].reshape(b, hkv, g, hd)

@@ -1,0 +1,54 @@
+"""Public flash-decode op + registry entry.
+
+Single-token decode attention over the ring KV cache, in the model's
+(B, Hkv, G, hd) / (B, W, Hkv, hd) layout with per-row positions.  The
+Pallas path is selected by ``KernelPolicy`` exactly like every other
+kernel (``cfg.kernels.decode_attention`` or the global backend); the op
+is registered ``differentiable=False`` — decode is inference-only and
+the kernel deliberately carries no custom_vjp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.decode_attention import ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas, decode_blocks)
+
+
+def decode_attention(q, k, v, pos, *, window=None, scale=1.0,
+                     impl: str = "pallas", bk: int = None,
+                     interpret: bool = None, autotune: bool = None):
+    """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd); pos (B,) int32 -> (B,Hkv,G,hd)."""
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, pos, window=window,
+                                        scale=scale)
+    return decode_attention_pallas(q, k, v, pos, window=window, scale=scale,
+                                   bk=bk, interpret=interpret,
+                                   autotune=autotune)
+
+
+def _example(seed: int = 0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, w, hkv, g, hd = 2, 40, 2, 2, 32        # odd capacity (pad path) + GQA
+    q = jax.random.normal(ks[0], (b, hkv, g, hd))
+    k = jax.random.normal(ks[1], (b, w, hkv, hd))
+    v = jax.random.normal(ks[2], (b, w, hkv, hd))
+    # one row mid-fill, one row wrapped past capacity
+    pos = jnp.asarray([5, 97], jnp.int32)
+    return q, k, v, pos
+
+
+common.register(common.KernelOp(
+    name="decode_attention",
+    pallas=lambda q, k, v, pos: decode_attention_pallas(
+        q, k, v, pos, window=32, scale=q.shape[-1] ** -0.5),
+    ref=lambda q, k, v, pos: ref.decode_attention_ref(
+        q, k, v, pos, window=32, scale=q.shape[-1] ** -0.5),
+    example=_example,
+    tuner=decode_blocks,
+    tol=2e-4,
+    differentiable=False,
+))

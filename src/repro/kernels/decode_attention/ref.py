@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for single-token ring-cache decode attention.
+
+Mirrors the slot arithmetic in ``models.attention.decode_attention``: the
+ring cache of capacity W holds the last W absolute positions; slot ``i``
+holds position ``pos - ((pos - i) mod W)`` and is valid iff that position
+is >= 0 (and inside the sliding window when one is set).  ``pos`` is the
+absolute position of the token being decoded, PER ROW — the continuous-
+batching engine decodes slots at different depths in one call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def slot_positions(pos, cap: int):
+    """(B,) pos -> (B, W) absolute position held by each ring slot."""
+    idx = jnp.arange(cap)
+    return pos[:, None] - jnp.mod(pos[:, None] - idx[None, :], cap)
+
+
+def decode_attention_ref(q, k, v, pos, *, window=None, scale=1.0):
+    """q (B,Hkv,G,hd) one token per row; k,v (B,W,Hkv,hd) ring cache AFTER
+    the current token's K/V was written; pos (B,) int32.  Returns
+    (B,Hkv,G,hd) float32-accumulated attention output in q.dtype."""
+    cap = k.shape[1]
+    sp = slot_positions(pos, cap)                       # (B, W)
+    valid = sp >= 0
+    if window is not None:
+        valid &= sp > pos[:, None] - window
+    s = jnp.einsum("bhgk,bshk->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshk->bhgk", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

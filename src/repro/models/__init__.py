@@ -3,13 +3,39 @@
 ``model_inputs(cfg, shape)`` describes the input pytree for each
 (arch x shape) — the single source of truth shared by the data pipeline,
 the smoke tests and the dry-run's ShapeDtypeStruct specs.
+
+Decode follows the **DecodeState contract** (docs/serving.md): every
+family exposes
+
+  ``init_decode_state(cfg, batch, capacity)``  -> DecodeState
+  ``prefill(params, cfg, state, tokens, ...)`` -> (logits, DecodeState)
+  ``decode_step(params, cfg, state, tokens)``  -> (logits, DecodeState)
+
+where the state is a pytree of fixed shape: a ring KV cache for
+attention families (capacity ``min(capacity, sliding_window)`` per
+layer), constant-size recurrent state for rwkv/rglru, and precomputed
+cross K/V for encdec.  ``DecodeState.pos`` is PER ROW — rows of one
+batch may sit at different depths, which is what lets the serving
+engine decode heterogeneous slots in a single step.  Families without a
+decode path raise ``NotImplementedError`` instead of silently borrowing
+``transformer.decode_step``.
 """
 from __future__ import annotations
 
+import dataclasses
+import re
+from typing import Any
+
+import jax
 import jax.numpy as jnp
 
 from repro.models import alexnet, encdec, transformer
 from repro.models.layers import softmax_xent
+
+# families whose decode path is the transformer composer's (its block
+# kinds cover dense/moe attention, rwkv and rglru carry states natively)
+_TRANSFORMER_DECODE = ("dense", "moe", "ssm", "hybrid", "vlm")
+DECODE_FAMILIES = _TRANSFORMER_DECODE + ("encdec",)
 
 
 def init(rng, cfg):
@@ -44,16 +70,139 @@ def loss_fn(params, cfg, batch, remat=False):
     return softmax_xent(logits[:, :-1], labels[:, 1:]) + aux
 
 
+# ---------------------------------------------------------- DecodeState ----
+
+@dataclasses.dataclass
+class DecodeState:
+    """Per-family decode state + per-row positions.
+
+    ``cache`` is the family's state pytree (fixed shapes for the life of
+    the state); ``pos`` (B,) int32 counts tokens each row has consumed —
+    i.e. the absolute position the NEXT ``decode_step`` token will take.
+    """
+    cache: Any
+    pos: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    DecodeState,
+    lambda s: ((s.cache, s.pos), None),
+    lambda _, ch: DecodeState(cache=ch[0], pos=ch[1]))
+
+
+def _check_decode_family(cfg):
+    if cfg.family not in DECODE_FAMILIES:
+        raise NotImplementedError(
+            f"family {cfg.family!r} ({cfg.name}) has no decode path; "
+            f"implement the DecodeState contract (init_decode_state / "
+            f"prefill / decode_step — docs/serving.md) for it.  Families "
+            f"with decode: {sorted(DECODE_FAMILIES)}")
+
+
 def init_decode_cache(cfg, batch: int, seq_len: int, enc_len: int = 1024):
+    """Low-level cache builder (the DecodeState's ``cache`` pytree)."""
+    _check_decode_family(cfg)
     if cfg.family == "encdec":
         return encdec.init_decode_cache(cfg, batch, seq_len, enc_len)
     return transformer.init_decode_cache(cfg, batch, seq_len)
 
 
-def decode_step(params, cfg, cache, tokens, pos):
+def init_decode_state(cfg, batch: int, capacity: int,
+                      enc_len: int = 1024) -> DecodeState:
+    return DecodeState(cache=init_decode_cache(cfg, batch, capacity, enc_len),
+                       pos=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(params, cfg, tokens, capacity: int, *, length=None, frames=None,
+            image_embeds=None, image_mask=None):
+    """Prompt (B,S) -> (logits (B,S,V), ready-to-decode DecodeState).
+
+    ``length`` (scalar or (B,) int32) marks per-row true lengths of
+    right-padded prompts: the state comes out exactly as if each row had
+    been prefilled unpadded (ring writes, recurrent carries and ``pos``
+    all respect it) — this is what bounds the serving engine's prefill
+    compile count to its bucket count.
+    """
+    _check_decode_family(cfg)
+    b, s = tokens.shape
+    if cfg.family == "encdec":
+        if frames is None:
+            raise ValueError("encdec prefill needs frames= (encoder input)")
+        logits, cache = encdec.prefill(params, cfg, frames, tokens, capacity,
+                                       length=length)
+    else:
+        logits, cache = transformer.prefill(params, cfg, tokens, capacity,
+                                            length=length,
+                                            image_embeds=image_embeds,
+                                            image_mask=image_mask)
+    pos = jnp.broadcast_to(
+        jnp.asarray(s if length is None else length, jnp.int32), (b,))
+    return logits, DecodeState(cache=cache, pos=pos)
+
+
+def decode_step(params, cfg, state, tokens, pos=None):
+    """One decode step for every row.  tokens (B,1) int32.
+
+    New API: ``state`` is a DecodeState (leave ``pos=None``) — returns
+    (logits (B,1,V) f32, DecodeState) with each row's position advanced.
+    Low-level form: ``state`` is a bare cache pytree and ``pos`` is the
+    explicit scalar-or-(B,) position — returns (logits, new_cache); the
+    dry-run lowers this form directly against its sharding specs.
+    """
+    _check_decode_family(cfg)
+    if isinstance(state, DecodeState):
+        if pos is not None:
+            raise ValueError("pass positions via DecodeState.pos, not pos=")
+        logits, cache = _decode_cache_step(params, cfg, state.cache, tokens,
+                                           state.pos)
+        return logits, DecodeState(cache=cache, pos=state.pos + 1)
+    if pos is None:
+        raise ValueError("bare-cache decode_step needs an explicit pos")
+    return _decode_cache_step(params, cfg, state, tokens, pos)
+
+
+def _decode_cache_step(params, cfg, cache, tokens, pos):
     if cfg.family == "encdec":
         return encdec.decode_step(params, cfg, cache, tokens, pos)
     return transformer.decode_step(params, cfg, cache, tokens, pos)
+
+
+# slot surgery: the continuous-batching engine swaps one request's state
+# in/out of a fixed-slot DecodeState.  Scan-stacked cache leaves carry
+# their layer axis BEFORE batch.
+_STACKED_RE = re.compile(r"(^|/)(blocks|self|cross)/")
+
+
+def stacked_cache_path(path_str: str) -> bool:
+    """Whether a decode-cache leaf at this '/'-joined path carries a
+    leading scan-stacked layer axis (batch is then axis 1, not 0).
+
+    SINGLE SOURCE OF TRUTH for the cache layout rule: ``write_slots``
+    scatters on it and ``sharding.specs.cache_sharding`` places the
+    leading axis with it — if they ever disagreed, slot surgery would
+    silently mix requests' states across layers."""
+    return bool(_STACKED_RE.search(path_str)) and \
+        "rem_blocks" not in path_str
+
+
+def _leaf_batch_axis(path) -> int:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return 1 if stacked_cache_path("/".join(parts)) else 0
+
+
+def write_slots(state: DecodeState, sub: DecodeState, slots) -> DecodeState:
+    """Scatter ``sub`` (batch = len(slots)) into ``state`` at ``slots``."""
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def one(path, leaf, new):
+        if _leaf_batch_axis(path) == 1:
+            return leaf.at[:, slots].set(new.astype(leaf.dtype))
+        return leaf.at[slots].set(new.astype(leaf.dtype))
+
+    cache = jax.tree_util.tree_map_with_path(one, state.cache, sub.cache)
+    return DecodeState(cache=cache, pos=state.pos.at[slots].set(sub.pos))
 
 
 def model_inputs(cfg, batch: int, seq_len: int):
@@ -72,4 +221,6 @@ def model_inputs(cfg, batch: int, seq_len: int):
 
 
 __all__ = ["alexnet", "encdec", "transformer", "init", "logits_fn", "loss_fn",
-           "init_decode_cache", "decode_step", "model_inputs"]
+           "DecodeState", "DECODE_FAMILIES", "init_decode_cache",
+           "init_decode_state", "prefill", "decode_step", "write_slots",
+           "stacked_cache_path", "model_inputs"]

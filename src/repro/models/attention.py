@@ -270,56 +270,109 @@ def cross_decode(params, cfg, x, cross_cache):
     return _out(params, cfg, o)
 
 
-def fill_cache(params, cfg, x, cache, *, window=None, rope=True):
+def fill_cache(params, cfg, x, cache, *, window=None, rope=True,
+               length=None):
     """Fill a ring-buffer cache from a full prefix x (B,S,d).
 
     Writes the last ``cap`` positions' K/V into their ring slots
     (slot = position % cap), matching what S decode_attention steps would
     have produced.
+
+    ``length`` (scalar or (B,) int32) marks per-row true prefix lengths
+    for right-padded prompts: row b behaves as if only its first
+    ``length[b]`` positions existed — padded positions never reach the
+    ring, so a bucketed prefill is exactly a shorter prefill.
     """
     b, s, _ = x.shape
     cap = cache["k"].shape[1]
+    dt = cache["k"].dtype
     _, k, v = _qkv(params, cfg, x)
     if rope:
         inv = rope_freqs(cfg)
         k = apply_rope(k, jnp.arange(s), inv)
     take = min(cap, s)
-    positions = jnp.arange(s - take, s)
-    slots = positions % cap
-    k_new = cache["k"].at[:, slots].set(k[:, s - take:].astype(cache["k"].dtype))
-    v_new = cache["v"].at[:, slots].set(v[:, s - take:].astype(cache["v"].dtype))
-    return {"k": k_new, "v": v_new}
+    if length is None:
+        positions = jnp.arange(s - take, s)
+        slots = positions % cap
+        k_new = cache["k"].at[:, slots].set(k[:, s - take:].astype(dt))
+        v_new = cache["v"].at[:, slots].set(v[:, s - take:].astype(dt))
+        return {"k": k_new, "v": v_new}
+    # per-row: the last `take` positions RELATIVE to each row's length.
+    # `take` consecutive ints stay distinct mod cap, so the row scatter
+    # never collides; positions < 0 write their slot's previous value
+    # back (a no-op), keeping padded rows' rings untouched.
+    ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    positions = ln[:, None] - take + jnp.arange(take)[None, :]   # (B, take)
+    valid = positions >= 0
+    pclip = jnp.clip(positions, 0, s - 1)
+    rows = jnp.arange(b)[:, None]
+    slots = jnp.mod(positions, cap)
+    k_g = jnp.where(valid[..., None, None], k[rows, pclip].astype(dt),
+                    cache["k"][rows, slots])
+    v_g = jnp.where(valid[..., None, None], v[rows, pclip].astype(dt),
+                    cache["v"][rows, slots])
+    return {"k": cache["k"].at[rows, slots].set(k_g),
+            "v": cache["v"].at[rows, slots].set(v_g)}
 
 
-def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True):
-    """One-token decode.  x (B,1,d); cache {k,v} (B,W,Hkv,hd); pos scalar.
+def resolve_decode_impl(cfg) -> str:
+    """``pallas`` (flash-decode kernel) or ``xla`` from the KernelPolicy."""
+    pol = policy_of(cfg)
+    sel = pol.decode_attention or pol.backend
+    if sel == "auto":
+        from repro.kernels.common import resolve_interpret
+        sel = "pallas" if not resolve_interpret(pol.interpret) else "xla"
+    if sel not in ("xla", "pallas"):
+        raise ValueError(f"unknown decode_attention impl {sel!r}")
+    return sel
 
-    Writes the new K/V at slot ``pos % W`` (ring buffer), attends over valid
-    slots.  Returns (out (B,1,d), new_cache).
+
+def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
+                     impl=None):
+    """One-token decode.  x (B,1,d); cache {k,v} (B,W,Hkv,hd); pos is the
+    token's absolute position — a scalar, or (B,) int32 for rows decoding
+    at different depths (the continuous-batching engine's layout).
+
+    Writes each row's new K/V at slot ``pos % W`` (ring buffer), attends
+    over valid slots — through the policy-selected backend: the Pallas
+    flash-decode kernel (``kernels.decode_attention``) or the XLA einsum.
+    Returns (out (B,1,d), new_cache).
     """
+    b = x.shape[0]
     q, k_new, v_new = _qkv(params, cfg, x)
     cap = cache["k"].shape[1]
+    pv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     if rope:
         inv = rope_freqs(cfg)
-        ppos = jnp.full((1,), pos)
-        q = apply_rope(q, ppos, inv)
-        k_new = apply_rope(k_new, ppos, inv)
-    slot = pos % cap
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    # slot i holds absolute position pos - ((pos - i) mod W); valid iff >= 0
-    # (and automatically within the window, since the ring holds the last W).
-    idx = jnp.arange(cap)
-    slot_pos = pos - jnp.mod(pos - idx, cap)
-    valid = slot_pos >= 0
-    if window is not None and window < cap:
-        valid &= slot_pos > pos - window
+        q = apply_rope(q, pv[:, None], inv)
+        k_new = apply_rope(k_new, pv[:, None], inv)
+    slot = pv % cap
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     qg = _group(q, cfg.n_kv_heads)                    # (B,1,Hkv,G,hd)
-    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k,
-                   preferred_element_type=jnp.float32) * cfg.head_dim ** -0.5
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
-    o = jnp.einsum("bhgqs,bshk->bqhgk", p, v,
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    o = o.reshape(x.shape[0], 1, cfg.n_heads, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    impl = resolve_decode_impl(cfg) if impl is None else impl
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        pol = policy_of(cfg)
+        o = da_ops.decode_attention(qg[:, 0], k, v, pv, window=window,
+                                    scale=scale, interpret=pol.interpret,
+                                    autotune=pol.autotune)
+        o = o.astype(x.dtype)[:, None]                # (B,1,Hkv,G,hd)
+    else:
+        # slot i holds absolute position pos - ((pos - i) mod W); valid
+        # iff >= 0 (and inside the window when one is set)
+        idx = jnp.arange(cap)
+        slot_pos = pv[:, None] - jnp.mod(pv[:, None] - idx[None, :], cap)
+        valid = slot_pos >= 0
+        if window is not None and window < cap:
+            valid &= slot_pos > pv[:, None] - window
+        s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhgqs,bshk->bqhgk", p, v,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim)
     return _out(params, cfg, o), {"k": k, "v": v}

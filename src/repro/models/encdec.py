@@ -104,6 +104,38 @@ def init_decode_cache(cfg, batch: int, seq_len: int, enc_len: int):
             "cross": jax.tree.map(stack, cross)}
 
 
+def prefill(params, cfg, frames, tokens, capacity: int, *, length=None):
+    """Encode frames, run the decoder over the prompt, and fill the decode
+    cache: per-layer self-attention ring buffers (capacity ``capacity``)
+    plus the precomputed cross K/V.  Returns (logits (B,S,V), cache) —
+    the cache is exactly what ``init_decode_cache`` + S ``decode_step``
+    calls would have produced.  ``length`` supports right-padded prompts
+    (per-row true lengths), as in ``transformer.prefill``.
+    """
+    dt = _dtype(cfg)
+    b, s = tokens.shape
+    memory = encode(params, cfg, frames)
+    cross = build_cross_cache(params, cfg, memory)
+    cap = attn.cache_capacity(cfg, capacity)
+    h = embed_apply(params["embed"], cfg, tokens)
+
+    def block(h, bp):
+        x = norm_apply(bp["norm1"], cfg, h)
+        h = h + attn.full_attention(bp["self_attn"], cfg, x, causal=True)
+        sc = attn.fill_cache(bp["self_attn"], cfg, x,
+                             attn.init_cache(cfg, b, cap, dt), length=length)
+        x = norm_apply(bp["norm_x"], cfg, h)
+        h = h + attn.full_attention(bp["cross_attn"], cfg, x, xc=memory,
+                                    causal=False, rope=False)
+        x = norm_apply(bp["norm2"], cfg, h)
+        return h + mlp_apply(bp["ffn"], cfg, x), sc
+
+    h, self_c = scan_or_unroll(block, h, params["dec_blocks"])
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_apply(params["embed"], cfg, h)
+    return logits, {"self": self_c, "cross": cross}
+
+
 def build_cross_cache(params, cfg, memory):
     """Precompute per-layer cross-attention K/V from the encoder memory."""
     def one(bp):

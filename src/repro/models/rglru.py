@@ -97,8 +97,16 @@ def _conv1d_causal(p, x, state=None):
     return y + p["conv_b"].astype(x.dtype), new_state
 
 
-def rglru_seq(p, cfg, x, cache=None):
-    """x (B,S,d).  Returns (out (B,S,d), new_cache)."""
+def rglru_seq(p, cfg, x, cache=None, length=None):
+    """x (B,S,d).  Returns (out (B,S,d), new_cache).
+
+    ``length`` (scalar or (B,) int32; right-padded prefill): padded
+    positions are frozen out of the recurrence (a=1, b=0 makes the update
+    the identity), so ``new_cache`` is each row's state after exactly
+    ``length[b]`` real tokens; the conv history gathers the last
+    CONV_WIDTH-1 real inputs per row.
+    """
+    b, s, _ = x.shape
     xb = matmul(x, p["wx"])
     gate = jax.nn.gelu(matmul(x, p["wg"]))
     conv_state = None if cache is None else cache["conv"]
@@ -108,6 +116,12 @@ def rglru_seq(p, cfg, x, cache=None):
     if h0 is not None:
         # fold the carried state into the first step: b_1 += a_1 * h_0
         bt = bt.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    ln = None
+    if length is not None:
+        ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+        real = (jnp.arange(s)[None, :] < ln[:, None])[..., None]
+        a = jnp.where(real, a, 1.0)
+        bt = jnp.where(real, bt, 0.0)
 
     if resolve_rglru_impl(cfg) == "pallas":
         from repro.kernels.rglru.rglru import rglru_pallas
@@ -122,7 +136,20 @@ def rglru_seq(p, cfg, x, cache=None):
 
         _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
     out = matmul((h.astype(x.dtype) * gate), p["wo"])
-    new_cache = {"conv": conv_state.astype(x.dtype), "h": h[:, -1].astype(jnp.float32)}
+    if ln is None:
+        new_conv = conv_state
+    else:
+        # conv_state would hold the last CONV_WIDTH-1 PADDED inputs; pull
+        # each row's last real ones from the padded input stream instead:
+        # xp index t+CONV_WIDTH-1 holds input position t, so positions
+        # ln-3..ln-1 live at indices ln..ln+2
+        pad = (jnp.zeros((b, CONV_WIDTH - 1, xb.shape[-1]), xb.dtype)
+               if cache is None else cache["conv"].astype(xb.dtype))
+        xp = jnp.concatenate([pad, xb], axis=1)
+        idx = ln[:, None] + jnp.arange(CONV_WIDTH - 1)[None, :]
+        new_conv = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    new_cache = {"conv": new_conv.astype(x.dtype),
+                 "h": h[:, -1].astype(jnp.float32)}
     return out, new_cache
 
 

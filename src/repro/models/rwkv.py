@@ -102,11 +102,30 @@ def _groupnorm_heads(x, scale, h, eps=64e-5):
     return y.astype(x.dtype)
 
 
-def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None):
+def _length_mask(length, b, s):
+    """(B, S) bool: position t is a real (non-padded) token of row b."""
+    ln = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    return jnp.arange(s)[None, :] < ln[:, None], ln
+
+
+def _gather_last(x, ln):
+    """x (B,S,...) -> x[b, ln[b]-1] per row (the last REAL position)."""
+    idx = jnp.clip(ln - 1, 0, x.shape[1] - 1)
+    return x[jnp.arange(x.shape[0]), idx]
+
+
+def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None, length=None):
     """x (B,S,d).  Returns (out, (last_x, final_wkv_state)).
 
     The WKV impl is selected by ``cfg.kernels`` (the old ``impl=`` kwarg
     threading is gone — see docs/kernels.md for the migration note).
+
+    ``length`` (scalar or (B,) int32; right-padded prefill): padded
+    positions are frozen out of the recurrence by forcing decay w=1 and
+    k=0 there — the WKV state update ``S <- diag(w) S + kᵀv`` becomes the
+    identity, so ``s_fin`` is each row's state after exactly ``length[b]``
+    real tokens; ``last_x`` gathers the last real position.  Outputs at
+    real positions are untouched (they only see the past).
     """
     impl = resolve_wkv_impl(cfg, has_state=wkv_state is not None)
     tm = p["tm"]
@@ -121,13 +140,19 @@ def time_mix_seq(p, cfg, x, shift_state=None, wkv_state=None):
     k = matmul(xk, tm["wk"]).reshape(b, s, h, hd)
     v = matmul(xv, tm["wv"]).reshape(b, s, h, hd)
     g = jax.nn.silu(matmul(xg, tm["wg"]))
+    if length is not None:
+        real, ln = _length_mask(length, b, s)
+        m = real[..., None, None]
+        w = jnp.where(m, w, 1.0)
+        k = jnp.where(m, k, 0.0)
     pol = policy_of(cfg)
     y, s_fin = wkv_ops.wkv(r, k, v, w, tm["u"].astype(jnp.float32),
                            wkv_state, impl=impl, chunk=min(64, s),
                            interpret=pol.interpret, autotune=pol.autotune)
     y = y.astype(x.dtype).reshape(b, s, d)
     y = _groupnorm_heads(y, tm["ln_x_scale"], h) * g
-    return matmul(y, tm["wo"]), (x[:, -1], s_fin)
+    last_x = x[:, -1] if length is None else _gather_last(x, ln)
+    return matmul(y, tm["wo"]), (last_x, s_fin)
 
 
 def time_mix_decode(p, cfg, x, shift_state, wkv_state):
@@ -149,7 +174,7 @@ def time_mix_decode(p, cfg, x, shift_state, wkv_state):
     return matmul(y, tm["wo"]), (x, s_new)
 
 
-def channel_mix_seq(p, cfg, x, shift_state=None):
+def channel_mix_seq(p, cfg, x, shift_state=None, length=None):
     cm = p["cm"]
     b, s, d = x.shape
     prev = jnp.zeros((b, 1, d), x.dtype) if shift_state is None else shift_state[:, None]
@@ -159,7 +184,10 @@ def channel_mix_seq(p, cfg, x, shift_state=None):
     xr = x + xx * cm["mu_r"].astype(x.dtype)
     kk = jnp.square(jax.nn.relu(matmul(xk, cm["wk"])))
     out = jax.nn.sigmoid(matmul(xr, cm["wr"])) * matmul(kk, cm["wv"])
-    return out, x[:, -1]
+    if length is None:
+        return out, x[:, -1]
+    _, ln = _length_mask(length, b, s)
+    return out, _gather_last(x, ln)
 
 
 def channel_mix_decode(p, cfg, x, shift_state):

@@ -100,23 +100,29 @@ def _window(cfg, kind):
     return cfg.sliding_window
 
 
-def block_apply_seq(p, cfg, kind, h, *, cache=None):
+def block_apply_seq(p, cfg, kind, h, *, cache=None, length=None):
     """Full-sequence block.  Returns (h, aux, new_cache).
 
     ``cache`` (optional) is this block's decode-cache; when given, carry
     state (rwkv/rec) resumes from it and the returned new_cache reflects the
     processed sequence (attention blocks fill their ring buffer).
+
+    ``length`` (scalar or (B,) int32) marks per-row true prefix lengths of
+    a right-padded batch: the returned new_cache is the state each row
+    would have after exactly ``length[b]`` tokens (causality keeps the
+    sub-``length`` OUTPUTS exact without it; only cache extraction needs
+    the mask).
     """
     aux = jnp.zeros((), jnp.float32)
     if kind == "rwkv":
         y, (tm_shift, wkv) = rwkv_mod.time_mix_seq(
             p, cfg, norm_apply(p["norm1"], cfg, h),
             None if cache is None else cache["tm_shift"],
-            None if cache is None else cache["wkv"])
+            None if cache is None else cache["wkv"], length=length)
         h = h + y
         y, cm_shift = rwkv_mod.channel_mix_seq(
             p, cfg, norm_apply(p["norm2"], cfg, h),
-            None if cache is None else cache["cm_shift"])
+            None if cache is None else cache["cm_shift"], length=length)
         h = h + y
         new_cache = {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
         return h, aux, new_cache
@@ -125,14 +131,16 @@ def block_apply_seq(p, cfg, kind, h, *, cache=None):
     new_cache = None
     if kind == "rec":
         y, new_cache = rglru_mod.rglru_seq(
-            p["mix"], cfg, x, None if cache is None else cache["mix"])
+            p["mix"], cfg, x, None if cache is None else cache["mix"],
+            length=length)
         new_cache = {"mix": new_cache}
     else:
         y = attn.full_attention(p["attn"], cfg, x, causal=True,
                                 window=_window(cfg, kind))
         if cache is not None:
             new_cache = attn.fill_cache(p["attn"], cfg, x, cache,
-                                        window=_window(cfg, kind))
+                                        window=_window(cfg, kind),
+                                        length=length)
     h = h + y
     x = norm_apply(p["norm2"], cfg, h)
     if kind == "moe":
@@ -152,11 +160,13 @@ def _scatter_image(cfg, h, image_embeds, image_mask):
 
 
 def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
-            return_cache=False, cache=None, remat=False):
+            return_cache=False, cache=None, remat=False, length=None):
     """tokens (B,S) -> (logits (B,S,V) float32, aux scalar[, cache]).
 
     ``remat=True`` checkpoints each scanned superblock (recompute in the
     backward pass) — required to fit long-sequence training activations.
+    ``length`` (with return_cache) extracts per-row decode state at each
+    row's true prefix length — see ``block_apply_seq``.
     """
     pattern, np_, rem = _split(cfg)
     b, s = tokens.shape
@@ -176,7 +186,7 @@ def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
             ncs = []
             for pi, kind in enumerate(pattern):
                 h, a, nc = block_apply_seq(bp[pi], cfg, kind, h,
-                                           cache=bc[pi])
+                                           cache=bc[pi], length=length)
                 aux = aux + a
                 ncs.append(nc)
             return (h, aux), (tuple(ncs) if return_cache else None)
@@ -201,7 +211,8 @@ def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
     new_rem = []
     for i, bp in enumerate(params["rem_blocks"]):
         bc = cache["rem_blocks"][i] if return_cache else None
-        h, a, nc = block_apply_seq(bp, cfg, pattern[i], h, cache=bc)
+        h, a, nc = block_apply_seq(bp, cfg, pattern[i], h, cache=bc,
+                                   length=length)
         aux = aux + a
         new_rem.append(nc)
 
@@ -211,6 +222,23 @@ def forward(params, cfg, tokens, *, image_embeds=None, image_mask=None,
         return logits, aux, {"blocks": new_block_caches,
                              "rem_blocks": tuple(new_rem)}
     return logits, aux
+
+
+def prefill(params, cfg, tokens, capacity: int, *, length=None,
+            image_embeds=None, image_mask=None):
+    """Prompt -> (logits (B,S,V), filled decode cache of ``capacity``).
+
+    ``length`` supports right-padded bucketed prompts (per-row true
+    lengths); the cache rows come out exactly as if each row had been
+    prefilled unpadded at its own length.
+    """
+    b, s = tokens.shape
+    cache = init_decode_cache(cfg, b, capacity)
+    logits, _, cache = forward(params, cfg, tokens,
+                               image_embeds=image_embeds,
+                               image_mask=image_mask, return_cache=True,
+                               cache=cache, length=length)
+    return logits, cache
 
 
 # ---------------------------------------------------------------- decode ----

@@ -1,0 +1,11 @@
+"""Continuous-batching inference subsystem (docs/serving.md).
+
+``ServingEngine`` runs the whole model zoo through the unified
+``models.DecodeState`` contract: fixed decode slots, bucketed interleaved
+prefill, one compiled decode step per tick, greedy / temperature / top-k
+sampling, params + state sharded over the replica mesh."""
+from repro.serving.engine import (DEFAULT_BUCKETS, Request, Result,
+                                  ServingEngine)
+from repro.serving.sampling import sample
+
+__all__ = ["ServingEngine", "Request", "Result", "DEFAULT_BUCKETS", "sample"]

@@ -1,0 +1,331 @@
+"""Slot-based continuous-batching serving engine.
+
+The engine owns a fixed-shape ``models.DecodeState`` of ``slots`` rows on
+a (possibly multi-device) mesh and runs ONE compiled decode step per
+engine tick for all slots at once — every family in the zoo serves
+through the same ``prefill`` / ``decode_step`` contract:
+
+  admit    pop queued requests into free slots: the prompt is right-
+           padded to a length BUCKET and prefilled (per-row ``length``
+           masking keeps the padded prefill exactly equal to an unpadded
+           one), then the request's fresh state is scattered into its
+           slot with ``models.write_slots``.  Compile count is bounded
+           by the bucket list, not by prompt lengths.
+  decode   one jitted step: every slot consumes its last token at its
+           own position (``DecodeState.pos`` is per-row) and samples the
+           next (greedy / temperature / top-k).  Inactive slots decode
+           garbage into their own rows — wasted FLOPs, zero recompiles.
+  retire   rows that hit their token budget (or the cache capacity)
+           free their slot for the next queued request.
+
+On a mesh, params are replicated and the slot axis of the state is
+sharded over the replica ('pod'/'data') axes via
+``sharding.specs.cache_sharding``; the decode step donates the state and
+pins its output sharding so the layout stays a loop invariant.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.serving import sampling
+
+DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+# compiled decode/prefill steps are shared ACROSS engine instances (keyed
+# by everything that shapes the computation: config identity, sampling
+# settings, slot/capacity shapes, mesh) — a fresh engine on the same
+# model serves its first request without recompiling anything
+_DECODE_FNS: Dict[tuple, Any] = {}
+_PREFILL_FNS: Dict[tuple, Any] = {}
+
+
+def _replica_lead(mesh):
+    from repro.launch.mesh import replica_axes_of
+    axes = replica_axes_of(mesh)
+    return axes, (axes if len(axes) > 1 else axes[0])
+
+
+def _state_sharding(cfg, slots, capacity, enc_len, mesh):
+    """DecodeState shardings: slot axis over the replica axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding.specs import cache_sharding
+    axes, lead = _replica_lead(mesh)
+    cache = jax.eval_shape(
+        lambda: models.init_decode_cache(cfg, slots, capacity, enc_len))
+    return models.DecodeState(
+        cache=cache_sharding(cache, cfg, mesh, batch_axes=axes),
+        pos=NamedSharding(mesh, P(lead)))
+
+
+def _decode_fn(cfg, temperature, top_k, slots, capacity, enc_len, mesh):
+    key = (cfg, temperature, top_k, slots, capacity, enc_len, mesh)
+    if key not in _DECODE_FNS:
+        def decode(params, state, toks, rng):
+            logits, state = models.decode_step(params, cfg, state, toks)
+            tok = sampling.sample(rng, logits[:, 0],
+                                  temperature=temperature, top_k=top_k)
+            return tok[:, None], state
+
+        kw = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            _, lead = _replica_lead(mesh)
+            kw["out_shardings"] = (
+                NamedSharding(mesh, P(lead, None)),
+                _state_sharding(cfg, slots, capacity, enc_len, mesh))
+        _DECODE_FNS[key] = jax.jit(decode, donate_argnums=(1,), **kw)
+    return _DECODE_FNS[key]
+
+
+def _prefill_fn(cfg, temperature, top_k, capacity, bucket):
+    key = (cfg, temperature, top_k, capacity, bucket)
+    if key not in _PREFILL_FNS:
+        def prefill(params, tokens, length, extras, rng):
+            logits, sub = models.prefill(params, cfg, tokens, capacity,
+                                         length=length, **extras)
+            last = logits[jnp.arange(tokens.shape[0]), length - 1]
+            tok = sampling.sample(rng, last, temperature=temperature,
+                                  top_k=top_k)
+            return tok[:, None], sub
+
+        _PREFILL_FNS[key] = jax.jit(prefill)
+    return _PREFILL_FNS[key]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (tokens in, tokens out)."""
+    prompt: Any                        # (L,) int sequence
+    max_new_tokens: int = 32
+    frames: Any = None                 # encdec: encoder input (T_enc, d)
+    image_embeds: Any = None           # vlm
+    image_mask: Any = None             # vlm (over the PADDED prompt)
+    rid: int = -1                      # assigned by submit()
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    prompt_len: int
+    tokens: List[int]                  # generated ids (first from prefill)
+    t_submit: float
+    t_first: float                     # first token emitted (prefill done)
+    t_done: float
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, *, slots: int = 4, capacity: int = 256,
+                 buckets=None, temperature: float = 0.0, top_k: int = 0,
+                 eos_id: Optional[int] = None, mesh=None, seed: int = 0,
+                 enc_len: int = 64):
+        self.cfg, self.slots, self.capacity = cfg, slots, capacity
+        bs = tuple(sorted(b for b in (buckets or DEFAULT_BUCKETS)
+                          if b <= capacity))
+        if not bs or bs[-1] < capacity:
+            bs += (capacity,)     # any prompt that fits the ring is admissible
+        self.buckets = bs
+        self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
+        self.mesh, self.enc_len = mesh, enc_len
+        self.rng = jax.random.PRNGKey(seed)
+        self.state = models.init_decode_state(cfg, slots, capacity,
+                                              enc_len=enc_len)
+        self.last_tok = jnp.zeros((slots, 1), jnp.int32)
+        self._active: List[Optional[Request]] = [None] * slots
+        self._results: Dict[int, Result] = {}
+        self._queue: collections.deque = collections.deque()
+        self._next_rid = 0
+        self._buckets_used: set = set()
+        self.decode_steps = 0          # compiled-step counter (ticks)
+
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            axes, lead = _replica_lead(mesh)
+            assert slots % int(np.prod([dict(zip(mesh.axis_names,
+                                                 mesh.devices.shape))[a]
+                                        for a in axes])) == 0, \
+                (slots, mesh.shape)
+            shard = _state_sharding(cfg, slots, capacity, enc_len, mesh)
+            params = jax.device_put(
+                params, jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                     params))
+            self.state = jax.device_put(self.state, shard)
+            self.last_tok = jax.device_put(
+                self.last_tok, NamedSharding(mesh, P(lead, None)))
+        self.params = params
+        self._decode = _decode_fn(cfg, temperature, top_k, slots, capacity,
+                                  enc_len, mesh)
+
+    # ----------------------------------------------------------- compile ----
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds the largest bucket "
+                         f"{self.buckets[-1]} (capacity {self.capacity})")
+
+    def _prefill_fn(self, bucket: int):
+        """One compiled prefill per (config, bucket) — the compile bound —
+        shared across engine instances."""
+        self._buckets_used.add(bucket)
+        return _prefill_fn(self.cfg, self.temperature, self.top_k,
+                           self.capacity, bucket)
+
+    @property
+    def prefill_compiles(self) -> int:
+        return len(self._buckets_used)
+
+    # ------------------------------------------------------------- queue ----
+
+    def submit(self, request: Request) -> int:
+        if len(request.prompt) < 1:
+            raise ValueError("empty prompt: there is no position to sample "
+                             "the first token from")
+        self._bucket(len(request.prompt))      # reject overlong NOW
+        request.rid = self._next_rid
+        self._next_rid += 1
+        self._results[request.rid] = Result(
+            rid=request.rid, prompt_len=len(request.prompt), tokens=[],
+            t_submit=time.perf_counter(), t_first=0.0, t_done=0.0)
+        self._queue.append(request)
+        return request.rid
+
+    def _extras(self, req: Request, bucket: int) -> dict:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            frames = req.frames
+            if frames is None:
+                frames = np.zeros((self.enc_len, cfg.d_model), np.float32)
+            frames = np.asarray(frames)
+            if frames.shape != (self.enc_len, cfg.d_model):
+                # the cross-cache slots are built at enc_len — a mismatched
+                # request would fail deep inside write_slots otherwise
+                raise ValueError(
+                    f"request frames shape {frames.shape} != engine "
+                    f"(enc_len={self.enc_len}, d_model={cfg.d_model})")
+            return {"frames": jnp.asarray(frames,
+                                          jnp.dtype(cfg.dtype))[None]}
+        if cfg.family == "vlm":
+            emb = req.image_embeds
+            if emb is None:
+                emb = np.zeros((max(cfg.n_image_tokens, 1), cfg.d_model),
+                               np.float32)
+            mask = req.image_mask
+            if mask is None:
+                mask = np.zeros((bucket,), bool)
+            else:
+                mask = np.asarray(mask, bool)
+                mask = np.pad(mask, (0, bucket - mask.shape[0]))
+            return {"image_embeds": jnp.asarray(emb, jnp.dtype(cfg.dtype))[None],
+                    "image_mask": jnp.asarray(mask)[None]}
+        return {}
+
+    def _admit(self, req: Request, slot: int) -> None:
+        prompt = np.asarray(req.prompt, np.int32)
+        bucket = self._bucket(len(prompt))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :len(prompt)] = prompt
+        if self.temperature == 0.0:
+            k = self.rng
+        else:
+            self.rng, k = jax.random.split(self.rng)
+        first, sub = self._prefill_fn(bucket)(
+            self.params, jnp.asarray(toks),
+            jnp.asarray([len(prompt)], jnp.int32), self._extras(req, bucket),
+            k)
+        self.state = models.write_slots(self.state, sub, [slot])
+        self.last_tok = self.last_tok.at[slot].set(first[0])
+        self._active[slot] = req
+        res = self._results[req.rid]
+        res.tokens.append(int(first[0, 0]))
+        res.t_first = time.perf_counter()
+
+    def _retire(self, slot: int, now: float) -> Result:
+        req = self._active[slot]
+        self._active[slot] = None
+        # hand the Result to the caller and forget it — a long-lived
+        # engine must not accumulate one token list per request forever
+        res = self._results.pop(req.rid)
+        res.t_done = now
+        return res
+
+    def _hit_limits(self, req: Request) -> bool:
+        """True if the row must not consume another decode tick: budget
+        already met (single-token requests finish at prefill), or the
+        ring is full — one more tick would silently window the context
+        (pos[slot] == prompt_len + len(tokens) - 1 == capacity-1 is the
+        last position the cache can hold).  SINGLE copy of the retire
+        arithmetic, used both before and after the decode tick."""
+        res = self._results[req.rid]
+        return (len(res.tokens) >= req.max_new_tokens or
+                res.prompt_len + len(res.tokens) - 1 >= self.capacity)
+
+    # -------------------------------------------------------------- step ----
+
+    def step(self) -> List[Result]:
+        """Retire finished rows, admit what fits (repeating until the
+        admission fixpoint, so a slot freed by a single-token request is
+        refilled within the same tick), then run ONE decode tick.
+
+        Returns the requests that finished on this tick."""
+        finished = []
+        while True:
+            now = time.perf_counter()
+            for slot, req in enumerate(self._active):
+                if req is not None and self._hit_limits(req):
+                    finished.append(self._retire(slot, now))
+            admitted = False
+            for slot in range(self.slots):
+                if self._active[slot] is None and self._queue:
+                    self._admit(self._queue.popleft(), slot)
+                    admitted = True
+            if not admitted:
+                break
+        if not any(self._active) and not self._queue:
+            return finished
+        if self.temperature == 0.0:
+            k = self.rng          # greedy: key unused, skip the eager split
+        else:
+            self.rng, k = jax.random.split(self.rng)
+        toks, self.state = self._decode(self.params, self.state,
+                                        self.last_tok, k)
+        self.last_tok = toks
+        self.decode_steps += 1
+        host = np.asarray(toks)                       # device sync point
+        now = time.perf_counter()
+        for slot, req in enumerate(self._active):
+            if req is None:
+                continue
+            res = self._results[req.rid]
+            res.tokens.append(int(host[slot, 0]))
+            done = self._hit_limits(req)
+            done |= self.eos_id is not None and host[slot, 0] == self.eos_id
+            if done:
+                finished.append(self._retire(slot, now))
+        return finished
+
+    def run(self, requests=None) -> List[Result]:
+        """Submit ``requests`` (if given) and step until everything is
+        done.  Returns results in completion order."""
+        for r in requests or ():
+            self.submit(r)
+        out = []
+        while self._queue or any(r is not None for r in self._active):
+            out.extend(self.step())
+        return out

@@ -1,0 +1,26 @@
+"""Token sampling for the serving engine: greedy + temperature / top-k.
+
+Pure jittable functions over final-position logits.  ``temperature`` and
+``top_k`` are engine-level (compile-time) settings — they select the
+sampling computation, they are not traced."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def sample(rng, logits, *, temperature: float = 0.0, top_k: int = 0):
+    """logits (B, V) float32 -> (B,) int32 token ids.
+
+    ``temperature == 0`` is greedy argmax (``rng`` unused).  ``top_k > 0``
+    restricts sampling to each row's k highest-logit tokens.
+    """
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -248,17 +248,20 @@ def cache_sharding(cache_shapes, cfg, mesh: Mesh, *,
                    batch_axes=("pod", "data"), model_axis="model"):
     """Decode-cache sharding: batch over data axes; KV heads over 'model'
     when divisible, else the sequence axis; recurrent states over 'model'
-    on their feature dim."""
+    on their feature dim.  On a mesh without a model axis (the serving
+    engine's replica mesh) only the batch/slot axis is sharded."""
+    if model_axis not in mesh.axis_names:
+        model_axis = None
     m = _axis_size(mesh, model_axis)
     axes = tuple(a for a in batch_axes if a in mesh.axis_names)
     b_axis = (axes if len(axes) > 1 else axes[0]) if axes else None
     bsz = _axis_size(mesh, axes) if axes else 1
+    from repro.models import stacked_cache_path
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
     out = []
     for path, leaf in flat:
         ps = _path_str(path)
-        stacked = bool(re.search(r"(^|/)(blocks|self|cross)/", ps)) and \
-            "rem_blocks" not in ps
+        stacked = stacked_cache_path(ps)
         lead = (None,) if stacked else ()
         shape = leaf.shape[1:] if stacked else leaf.shape
         ba = b_axis if (b_axis and shape[0] % bsz == 0) else None

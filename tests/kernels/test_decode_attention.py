@@ -1,0 +1,92 @@
+"""Flash-decode kernel (single token vs ring cache): parity with the
+slot-arithmetic oracle across ring states, GQA groupings and windows —
+plus the policy resolver and the non-differentiability contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.kernels.decode_attention import ops, ref
+from repro.kernels.decode_attention.decode_attention import decode_blocks
+from repro.models.attention import resolve_decode_impl
+
+
+def _inputs(b, w, hkv, g, hd, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, hkv, g, hd)),
+            jax.random.normal(ks[1], (b, w, hkv, hd)),
+            jax.random.normal(ks[2], (b, w, hkv, hd)))
+
+
+@pytest.mark.parametrize("b,w,hkv,g,hd,window,pos", [
+    (2, 64, 2, 2, 32, None, [0, 63]),       # first token + exactly full
+    (2, 64, 1, 4, 32, None, [5, 200]),      # mid-fill + wrapped (GQA 4)
+    (1, 40, 2, 1, 32, None, [39]),          # odd capacity (pad path)
+    (2, 16, 2, 2, 64, 16, [7, 100]),        # SWA ring at window capacity
+    (1, 48, 4, 2, 32, 32, [45]),            # window < capacity
+])
+def test_decode_kernel_matches_ref(b, w, hkv, g, hd, window, pos):
+    q, k, v = _inputs(b, w, hkv, g, hd)
+    pos = jnp.asarray(pos, jnp.int32)
+    scale = hd ** -0.5
+    out = ops.decode_attention(q, k, v, pos, window=window, scale=scale,
+                               impl="pallas")
+    exp = ref.decode_attention_ref(q, k, v, pos, window=window, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rows_at_different_depths_disagree_with_lockstep():
+    """The per-row mask is real: evaluating row 1 at row 0's position
+    changes its output (so a shared-scalar fallback would be WRONG)."""
+    q, k, v = _inputs(2, 32, 2, 2, 32)
+    o = ref.decode_attention_ref(q, k, v, jnp.asarray([3, 30]), scale=0.2)
+    o_lock = ref.decode_attention_ref(q, k, v, jnp.asarray([3, 3]),
+                                      scale=0.2)
+    np.testing.assert_allclose(o[0], o_lock[0], rtol=1e-6, atol=1e-6)
+    assert float(jnp.max(jnp.abs(o[1] - o_lock[1]))) > 1e-3
+
+
+def test_slot_positions_oracle():
+    """Ring slot i holds pos - ((pos - i) mod W): the last W positions."""
+    sp = np.asarray(ref.slot_positions(jnp.asarray([2, 7]), 4))
+    np.testing.assert_array_equal(sp[0], [0, 1, 2, -1])   # slot 3 unwritten
+    np.testing.assert_array_equal(sp[1], [4, 5, 6, 7])    # fully wrapped
+    assert sp.max() == 7
+
+
+def test_registered_not_differentiable():
+    from repro.kernels import common
+    op = common.get_op("decode_attention")
+    assert not op.differentiable
+    assert op.tuner is decode_blocks
+
+
+def test_resolver_follows_policy():
+    def cfg(**pol):
+        return dataclasses.replace(reduced(ARCHS["olmo-1b"]),
+                                   kernels=KernelPolicy(**pol))
+    assert resolve_decode_impl(cfg(backend="pallas")) == "pallas"
+    assert resolve_decode_impl(cfg(backend="xla")) == "xla"
+    assert resolve_decode_impl(cfg(decode_attention="pallas",
+                                   backend="xla")) == "pallas"
+    assert resolve_decode_impl(cfg(interpret=False)) == "pallas"
+    if jax.default_backend() != "tpu":
+        assert resolve_decode_impl(cfg()) == "xla"
+    with pytest.raises(ValueError, match="unknown decode_attention"):
+        resolve_decode_impl(cfg(decode_attention="cudnn"))
+
+
+def test_tuner_uses_shared_cache():
+    from repro.kernels import common
+    common.clear_cache()
+    assert decode_blocks(64, 32, "float32", interpret=False,
+                         autotune=False) == (64,)
+    assert common.cache_info()["measured"] == 0
+    assert ("decode_attn", 64, 32, "float32") in \
+        {k[:4] for k in common._CACHE}
+    common.clear_cache()

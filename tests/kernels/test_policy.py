@@ -149,12 +149,15 @@ def test_wants_pallas_and_describe():
     assert "rglru" not in d              # unset fields stay out of manifests
 
 
-def test_registry_lists_all_four_families():
+def test_registry_lists_all_families():
     names = set(common.ops())
-    assert {"conv2d", "flash_attention", "rglru", "rwkv6"} <= names
-    for op in common.ops().values():
+    assert {"conv2d", "decode_attention", "flash_attention", "rglru",
+            "rwkv6"} <= names
+    for name, op in common.ops().items():
         assert callable(op.pallas) and callable(op.ref)
-        assert op.differentiable
+        # every TRAINING kernel must be differentiable; decode_attention
+        # is the deliberate exception (inference fast path, no custom_vjp)
+        assert op.differentiable == (name != "decode_attention")
 
 
 def test_moe_pallas_gemm_matches_einsum(rng):

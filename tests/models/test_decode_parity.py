@@ -1,0 +1,182 @@
+"""Decode-parity suite for the DecodeState contract (docs/serving.md):
+prefill + step-by-step decode must reproduce the full-sequence forward
+logits for EVERY model family, on BOTH kernel backends — including the
+SWA ring-buffer wraparound, GQA group-sum, and the bucketed (right-
+padded, per-row ``length``) prefill the serving engine relies on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+
+TOL = 1e-4
+
+# one representative per family; gemma-7b-swa adds ring wraparound
+# (window 16 < seq) and GQA in one case
+FAMILY_CASES = {
+    "dense": "olmo-1b",
+    "dense-swa-gqa": "gemma-7b-swa",
+    "moe": "mixtral-8x7b",
+    "ssm": "rwkv6-7b",
+    "hybrid": "recurrentgemma-9b",
+    "encdec": "seamless-m4t-medium",
+    "vlm": "phi-3-vision-4.2b",
+}
+BACKENDS = {
+    "xla": KernelPolicy(backend="xla"),
+    # CPU hosts run the Pallas kernels (flash prefill + flash-decode) in
+    # interpret mode — same code path the compiled backend takes
+    "pallas": KernelPolicy(backend="pallas"),
+}
+
+
+def _case_cfg(case, backend):
+    cfg = reduced(ARCHS[FAMILY_CASES[case]])
+    if case == "dense-swa-gqa":
+        cfg = dataclasses.replace(cfg, sliding_window=16, n_kv_heads=2)
+        assert cfg.n_kv_heads < cfg.n_heads       # GQA stays on
+    if case == "hybrid":
+        cfg = dataclasses.replace(cfg, n_layers=4)  # superblock + remainder
+    if case == "moe":
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    return dataclasses.replace(cfg, kernels=BACKENDS[backend])
+
+
+def _batch(cfg, rng, b, s):
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jax.random.normal(rng, (b, 16, cfg.d_model))
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jax.random.normal(
+            rng, (b, cfg.n_image_tokens, cfg.d_model))
+        extras["image_mask"] = jnp.zeros(
+            (b, s), bool).at[:, :cfg.n_image_tokens].set(True)
+    return jax.random.randint(rng, (b, s), 0, cfg.vocab_size), extras
+
+
+def _full_logits(params, cfg, toks, extras):
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec.forward(params, cfg, extras["frames"], toks)[0]
+    from repro.models import transformer
+    return transformer.forward(params, cfg, toks, **extras)[0]
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@pytest.mark.parametrize("case", sorted(FAMILY_CASES))
+def test_prefill_then_decode_matches_forward(case, backend, rng):
+    cfg = _case_cfg(case, backend)
+    params = models.init(rng, cfg)
+    b, s, split = 2, 32, 20
+    if case == "dense-swa-gqa":
+        s, split = 48, 24                 # ring (cap 16) wraps twice
+    toks, extras = _batch(cfg, rng, b, s)
+    full = _full_logits(params, cfg, toks, extras)
+
+    pf_extras = dict(extras)
+    if "image_mask" in pf_extras:       # the mask spans the prompt only
+        pf_extras["image_mask"] = pf_extras["image_mask"][:, :split]
+    logits, st = models.prefill(params, cfg, toks[:, :split], s, **pf_extras)
+    np.testing.assert_allclose(logits, full[:, :split], rtol=TOL, atol=TOL)
+    assert st.pos.tolist() == [split] * b
+    for t in range(split, s):
+        lg, st = models.decode_step(params, cfg, st, toks[:, t:t + 1])
+        np.testing.assert_allclose(lg[:, 0], full[:, t], rtol=TOL, atol=TOL)
+    assert st.pos.tolist() == [s] * b
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@pytest.mark.parametrize("case", ["dense-swa-gqa", "ssm", "hybrid"])
+def test_bucketed_prefill_matches_unpadded(case, backend, rng):
+    """Right-padded prefill at per-row ``length`` == unpadded prefill:
+    ring writes, recurrent carries and positions all mask the padding
+    (this is the property the serving engine's buckets stand on)."""
+    cfg = _case_cfg(case, backend)
+    params = models.init(rng, cfg)
+    cap, bucket = 48, 16
+    L = [9, 14]
+    toks, extras = _batch(cfg, rng, 2, bucket)
+    lengths = jnp.asarray(L, jnp.int32)
+    lg_pad, st_pad = models.prefill(params, cfg, toks, cap, length=lengths,
+                                    **extras)
+    # each row's state + last-real-position logits == its unpadded prefill,
+    # and stays in lockstep through 4 more greedy decode steps
+    refs, curs = [], []
+    for i, li in enumerate(L):
+        lg_ref, st_ref = models.prefill(params, cfg, toks[i:i + 1, :li],
+                                        cap, **_slice_extras(extras, i, li))
+        np.testing.assert_allclose(lg_pad[i, li - 1], lg_ref[0, -1],
+                                   rtol=TOL, atol=TOL)
+        refs.append(st_ref)
+        curs.append(jnp.argmax(lg_ref[:, -1:], -1).astype(jnp.int32))
+    cur_pad = jnp.concatenate(curs, axis=0)
+    for _ in range(4):
+        lg_pad2, st_pad = models.decode_step(params, cfg, st_pad, cur_pad)
+        nxt = []
+        for i in range(len(L)):
+            lg_ref2, refs[i] = models.decode_step(params, cfg, refs[i],
+                                                  curs[i])
+            np.testing.assert_allclose(lg_pad2[i, 0], lg_ref2[0, 0],
+                                       rtol=TOL, atol=TOL)
+            curs[i] = jnp.argmax(lg_ref2[:, 0], -1).astype(jnp.int32)[:, None]
+            nxt.append(curs[i])
+        cur_pad = jnp.concatenate(nxt, axis=0)
+
+
+def _slice_extras(extras, i, li):
+    out = {}
+    if "frames" in extras:
+        out["frames"] = extras["frames"][i:i + 1]
+    if "image_embeds" in extras:
+        out["image_embeds"] = extras["image_embeds"][i:i + 1]
+        out["image_mask"] = extras["image_mask"][i:i + 1, :li]
+    return out
+
+
+def test_vector_pos_decode_matches_scalar(rng):
+    """(B,) per-row positions: rows decoding at different depths in one
+    call agree with each row decoded alone at its scalar position."""
+    cfg = dataclasses.replace(reduced(ARCHS["gemma-7b-swa"]),
+                              sliding_window=16,
+                              kernels=KernelPolicy(backend="xla"))
+    params = models.init(rng, cfg)
+    cap = 24
+    toks, _ = _batch(cfg, rng, 2, 20)
+    # two rows prefilled to different depths via length masking
+    L = jnp.asarray([7, 19], jnp.int32)
+    _, st = models.prefill(params, cfg, toks, cap, length=L)
+    step_tok = jax.random.randint(rng, (2, 1), 0, cfg.vocab_size)
+    lg_vec, _ = models.decode_step(params, cfg, st, step_tok)
+    for i in range(2):
+        li = int(L[i])
+        _, st_i = models.prefill(params, cfg, toks[i:i + 1, :li], cap)
+        lg_i, _ = models.decode_step(params, cfg, st_i, step_tok[i:i + 1])
+        np.testing.assert_allclose(lg_vec[i], lg_i[0], rtol=TOL, atol=TOL)
+
+
+def test_decode_step_guards_unknown_family(rng):
+    cfg = dataclasses.replace(reduced(ARCHS["olmo-1b"]), family="mamba")
+    with pytest.raises(NotImplementedError, match="DecodeState contract"):
+        models.init_decode_state(cfg, 2, 16)
+    with pytest.raises(NotImplementedError, match="mamba"):
+        models.decode_step(None, cfg, {"blocks": ()},
+                           jnp.zeros((1, 1), jnp.int32), 0)
+
+
+def test_decode_state_api_shape_contract(rng):
+    cfg = reduced(ARCHS["olmo-1b"])
+    st = models.init_decode_state(cfg, 3, 16)
+    assert st.pos.shape == (3,) and st.pos.dtype == jnp.int32
+    # pytree round-trip (jit boundary crossing)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(st2, models.DecodeState)
+    with pytest.raises(ValueError, match="DecodeState.pos"):
+        models.decode_step(None, cfg, st, jnp.zeros((3, 1), jnp.int32), 5)
