@@ -38,9 +38,11 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us: float, derived: str = "", **meta):
-    """Emit one CSV row; ``meta`` kwargs (arch=, slots=, backend=, ...) are
-    persisted on the JSON row so trajectories stay comparable across PRs
-    even when row names drift."""
+    """Emit one CSV row; ``meta`` kwargs (arch=, slots=, backend=,
+    groups=, model_parallel=, ...) are persisted on the JSON row so
+    trajectories stay comparable across PRs even when row names drift —
+    grouped-conv rows carry ``groups``/``model_parallel`` so a faithful
+    AlexNet row never gets regressed against a legacy ungrouped one."""
     print(f"{name},{us:.1f},{derived}", flush=True)
     row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
     if meta:

@@ -26,7 +26,7 @@ from benchmarks.common import emit, run_subprocess_bench
 CHILD = """
 import time, jax, jax.numpy as jnp
 import numpy as np
-from repro.configs import ALEXNET_SMOKE
+from repro.configs import ALEXNET_SMOKE, ALEXNET_FAITHFUL_SMOKE
 from repro.core import init_param_avg_state, make_param_avg_step, reshape_for_replicas
 from repro.data import PrefetchLoader, synthetic
 from repro.data.preprocess import make_image_preprocess
@@ -39,7 +39,7 @@ PREFETCH = __PREFETCH__
 BACKEND = "__BACKEND__"
 DONATE = __DONATE__
 ITERS = __ITERS__
-cfg = ALEXNET_SMOKE
+cfg = ALEXNET_FAITHFUL_SMOKE if __FAITHFUL__ else ALEXNET_SMOKE
 GLOBAL_BATCH = 64
 opt = sgd_momentum()
 state = init_param_avg_state(jax.random.PRNGKey(0), lambda r: alexnet.init(r, cfg), opt, R)
@@ -65,12 +65,13 @@ loader.close()
 
 
 def _run(backend: str, replicas: int, prefetch: int, donate: bool = True,
-         iters: int = 20) -> float:
+         iters: int = 20, faithful: bool = False) -> float:
     code = (CHILD.replace("__REPLICAS__", str(replicas))
             .replace("__PREFETCH__", str(prefetch))
             .replace("__BACKEND__", backend)
             .replace("__DONATE__", str(int(donate)))
-            .replace("__ITERS__", str(iters)))
+            .replace("__ITERS__", str(iters))
+            .replace("__FAITHFUL__", str(int(faithful))))
     out = run_subprocess_bench(code, devices=replicas)
     return float([ln for ln in out.splitlines()
                   if ln.startswith("RESULT")][0].split()[1])
@@ -94,13 +95,26 @@ def main():
                 results[(backend, replicas, prefetch)] = secs
                 load = "parload" if prefetch else "serial"
                 emit(f"table1/{backend}/{replicas}rep/{load}",
-                     secs / 20 * 1e6, f"s_per_20it={secs:.2f}")
+                     secs / 20 * 1e6, f"s_per_20it={secs:.2f}",
+                     groups=1, model_parallel=1, replicas=replicas)
     base = results.get(("xla", 1, 0))
     for (backend, r, p), secs in results.items():
         if backend == "xla" and base and (r, p) != (1, 0):
             emit(f"table1/speedup/{r}rep/"
                  f"{'parload' if p else 'serial'}",
                  secs / 20 * 1e6, f"speedup_vs_serial1={base / secs:.2f}x")
+
+    # faithful-vs-legacy: the paper's grouped net (conv2/4/5 split into
+    # 2 groups + LRN) against the legacy ungrouped smoke net — grouping
+    # cuts conv2/4/5 FLOPs in half, LRN adds a normalization pass, so the
+    # ratio tracks how well the grouped kernel realizes the saving
+    for backend in backends:
+        it = iters[backend]
+        legacy = results[(backend, 1, prefetches[0])]
+        secs = _run(backend, 1, prefetches[0], iters=it, faithful=True)
+        emit(f"table1/{backend}/faithful/1rep", secs / 20 * 1e6,
+             f"s_per_20it={secs:.2f};vs_legacy={legacy / secs:.2f}x",
+             groups=2, model_parallel=1, replicas=1)
 
     # donation A/B: same config with and without donate_argnums=0 — the
     # in-place state update must not be slower than fresh allocations

@@ -36,6 +36,8 @@ ASSIGNED = [
 
 ALEXNET = alexnet.CONFIG
 ALEXNET_SMOKE = alexnet.SMOKE
+ALEXNET_FAITHFUL = alexnet.FAITHFUL
+ALEXNET_FAITHFUL_SMOKE = alexnet.FAITHFUL_SMOKE
 
 
 def get_config(name: str) -> ModelConfig:
@@ -45,7 +47,8 @@ def get_config(name: str) -> ModelConfig:
 
 
 __all__ = [
-    "ARCHS", "ASSIGNED", "ALEXNET", "ALEXNET_SMOKE", "SHAPES",
+    "ARCHS", "ASSIGNED", "ALEXNET", "ALEXNET_SMOKE",
+    "ALEXNET_FAITHFUL", "ALEXNET_FAITHFUL_SMOKE", "SHAPES",
     "ModelConfig", "MoEConfig", "ShapeConfig", "get_config", "reduced",
     "supports_shape",
 ]

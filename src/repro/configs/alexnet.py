@@ -4,6 +4,20 @@
 conv1/conv2, 2 fully-connected layers + softmax over 1000 classes.  This is
 the exact single-tower variant the Theano paper trains (their Fig. 1/2 and
 Table 1); batch 256 on 1 replica / 128 per replica on 2.
+
+Two flavours coexist:
+
+``CONFIG`` / ``SMOKE`` (``faithful=False``)
+    The legacy nets from PR 2 — ungrouped convs, LRN applied *before*
+    the pool.  Kept byte-identical so BENCH rows and golden traces from
+    earlier PRs stay comparable.
+
+``FAITHFUL`` / ``FAITHFUL_SMOKE`` (``faithful=True``)
+    The paper's dual-GPU topology: conv2/4/5 are 2-group convolutions
+    (the intra-layer model-parallel split — each GPU held one group),
+    and LRN runs *after* pool1/pool2 with the Caffe reference constants
+    ``size=5, alpha=1e-4, beta=0.75`` (SNIPPETS.md snippets 2–3; Jia et
+    al. 2014).  FAITHFUL totals 60,965,224 params — the canonical ~61M.
 """
 from __future__ import annotations
 
@@ -21,6 +35,8 @@ class ConvSpec:
     padding: int
     pool: bool       # 3x3 stride-2 max pool after this conv
     lrn: bool        # local response normalization after this conv
+    groups: int = 1  # grouped conv (the paper's per-GPU split); must
+                     # divide both in- and out-channels
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,11 +55,30 @@ class AlexNetConfig:
     )
     fc_dim: int = 4096
     dropout: float = 0.5
+    # faithful=True switches to the paper ordering: conv -> relu -> pool
+    # -> LRN (the Caffe reference net).  The legacy nets normalized
+    # before pooling; that order is preserved under faithful=False so
+    # their numerics (and golden traces) never move.
+    faithful: bool = False
+    # LRN constants (only read where ConvSpec.lrn is set)
+    lrn_n: int = 5
+    lrn_alpha: float = 1e-4
+    lrn_beta: float = 0.75
+    lrn_k: float = 2.0
     # same KernelPolicy the LM zoo carries: conv2d resolves xla|pallas|
     # pallas_im2col_ref through it when the forward gets no explicit backend
     kernels: KernelPolicy = KernelPolicy()
     dtype: str = "float32"
     citation: str = "Krizhevsky et al. 2012; Ding et al. ICLR 2015 (this paper)"
+
+    def __post_init__(self):
+        c_in = self.in_channels
+        for i, cs in enumerate(self.convs):
+            if c_in % cs.groups or cs.out_channels % cs.groups:
+                raise ValueError(
+                    f"{self.name}: conv{i + 1} groups={cs.groups} must "
+                    f"divide in={c_in} and out={cs.out_channels} channels")
+            c_in = cs.out_channels
 
     def feature_hw(self, image_size: int = None) -> int:
         """Spatial size after the conv stack.  Raises ValueError when
@@ -72,7 +107,9 @@ class AlexNetConfig:
         c_in = self.in_channels
         total = 0
         for cs in self.convs:
-            total += cs.kernel * cs.kernel * c_in * cs.out_channels + cs.out_channels
+            # a grouped conv only connects within its group: Cin/G
+            total += (cs.kernel * cs.kernel * (c_in // cs.groups)
+                      * cs.out_channels + cs.out_channels)
             c_in = cs.out_channels
         flat = self.feature_hw() ** 2 * c_in
         total += flat * self.fc_dim + self.fc_dim
@@ -94,6 +131,34 @@ SMOKE = AlexNetConfig(
         ConvSpec(32, 3, 1, 1, pool=False, lrn=False),
         ConvSpec(32, 3, 1, 1, pool=False, lrn=False),
         ConvSpec(32, 3, 1, 1, pool=True, lrn=False),
+    ),
+    fc_dim=128,
+)
+
+# The paper-faithful dual-GPU topology (see module docstring).
+FAITHFUL = AlexNetConfig(
+    name="alexnet-faithful",
+    faithful=True,
+    convs=(
+        ConvSpec(96, 11, 4, 0, pool=True, lrn=True),
+        ConvSpec(256, 5, 1, 2, pool=True, lrn=True, groups=2),
+        ConvSpec(384, 3, 1, 1, pool=False, lrn=False),
+        ConvSpec(384, 3, 1, 1, pool=False, lrn=False, groups=2),
+        ConvSpec(256, 3, 1, 1, pool=True, lrn=False, groups=2),
+    ),
+)
+
+FAITHFUL_SMOKE = AlexNetConfig(
+    name="alexnet-faithful-smoke",
+    faithful=True,
+    image_size=64,
+    n_classes=10,
+    convs=(
+        ConvSpec(16, 7, 2, 0, pool=True, lrn=True),
+        ConvSpec(32, 5, 1, 2, pool=True, lrn=True, groups=2),
+        ConvSpec(32, 3, 1, 1, pool=False, lrn=False),
+        ConvSpec(32, 3, 1, 1, pool=False, lrn=False, groups=2),
+        ConvSpec(32, 3, 1, 1, pool=True, lrn=False, groups=2),
     ),
     fc_dim=128,
 )

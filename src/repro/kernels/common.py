@@ -194,8 +194,8 @@ class KernelOp:
 
 
 _REGISTRY: Dict[str, KernelOp] = {}
-_OP_PACKAGES = ("conv2d", "decode_attention", "flash_attention", "rglru",
-                "rwkv6")
+_OP_PACKAGES = ("conv2d", "decode_attention", "flash_attention", "lrn",
+                "rglru", "rwkv6")
 
 
 def register(op: KernelOp) -> KernelOp:
@@ -228,7 +228,8 @@ BACKENDS = ("auto", "xla", "pallas")
 # ops a global ``backend=pallas`` switches over, and the impl name the
 # model layer maps it to
 _PALLAS_IMPL = {"attention": "flash", "rglru": "pallas", "rwkv6": "pallas",
-                "conv2d": "pallas", "decode_attention": "pallas"}
+                "conv2d": "pallas", "decode_attention": "pallas",
+                "lrn": "pallas"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,6 +249,7 @@ class KernelPolicy:
     rglru: Optional[str] = None           # auto|xla|pallas
     rwkv6: Optional[str] = None           # auto|sequential|chunked|pallas
     conv2d: Optional[str] = None          # auto|xla|pallas|pallas_im2col_ref
+    lrn: Optional[str] = None             # auto|xla|pallas
     # explicit opt-in ONLY (the global backend does not flip it): route
     # dense/MoE projection GEMMs through kernels.conv2d.matmul_bias —
     # XLA's einsum is already near-roofline there, so this is for A/B

@@ -151,20 +151,27 @@ def matmul_bias(x, w, b, *, bm: int = None, bk: int = None, bn: int = None,
 def _conv_fused_kernel(x_ref, w_ref, b_ref, o_ref, *, kernel: int,
                        stride: int, oh: int, ow: int, m_pad: int,
                        relu: bool):
-    """One (batch b, M-tile i, N-tile j) output tile.
+    """One (batch b, M-tile i, group-walking N-tile j) output tile.
 
-    x_ref (1, Hp, Wp, C) — the whole padded image, staged in VMEM;
-    w_ref (K*K*C, bn); b_ref (1, bn); o_ref (1, bm, bn).
+    x_ref (1, Hp, Wp, 1, Cg) — ONE group's input-channel slice of the
+    padded image, staged in VMEM (the BlockSpec index map picks the
+    group, so a program never sees the other groups' channels);
+    w_ref (1, K*K*Cg, bn) — that group's weight slab; b_ref (1, 1, bn);
+    o_ref (1, bm, 1, bn).
 
     Patch rows are gathered on the fly: for each static kernel offset
-    (kh, kw) the strided window slice of the image IS the (M, C) slab of
-    the im2col matrix belonging to that offset, so the reduction is
-    K*K unrolled (bm, C) @ (C, bn) MXU dots — implicit GEMM.
+    (kh, kw) the strided window slice of the image IS the (M, Cg) slab
+    of the im2col matrix belonging to that offset, so the reduction is
+    K*K unrolled (bm, Cg) @ (Cg, bn) MXU dots — implicit GEMM.  Grouped
+    convolution is just the N axis walking block-diagonal tiles: the
+    grid's j axis enumerates (group, in-group N-tile) pairs and the
+    index maps route each j to its diagonal block — no per-group Python
+    loop, no HBM blowup.
     """
     i = pl.program_id(1)
-    xv = x_ref[0]
+    xv = x_ref[0, :, :, 0, :]
     c = xv.shape[-1]
-    bm, bn = o_ref.shape[1], o_ref.shape[2]
+    bm, bn = o_ref.shape[1], o_ref.shape[3]
     span_h = (oh - 1) * stride + 1
     span_w = (ow - 1) * stride + 1
     acc = jnp.zeros((bm, bn), jnp.float32)
@@ -178,83 +185,101 @@ def _conv_fused_kernel(x_ref, w_ref, b_ref, o_ref, *, kernel: int,
             q = kh * kernel + kw
             acc += jax.lax.dot(
                 blk.astype(jnp.float32),
-                w_ref[q * c:(q + 1) * c, :].astype(jnp.float32),
+                w_ref[0, q * c:(q + 1) * c, :].astype(jnp.float32),
                 preferred_element_type=jnp.float32)
-    y = acc + b_ref[...].astype(jnp.float32)
+    y = acc + b_ref[0].astype(jnp.float32)
     if relu:
         y = jnp.maximum(y, 0.0)
-    o_ref[0] = y.astype(o_ref.dtype)
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("kernel", "stride", "oh", "ow",
-                                             "bm", "bn", "relu", "interpret"))
+                                             "bm", "bn", "relu", "groups",
+                                             "interpret"))
 def _conv_fused_impl(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
-                     interpret):
+                     groups, interpret):
     b_, hp, wp, cin = x.shape
     cout = w.shape[-1]
+    cig = cin // groups          # input channels per group
+    npg = cout // groups         # output channels per group
     m = oh * ow
     m_pad = -(-m // bm) * bm
-    n_pad = -(-cout // bn) * bn
-    wmat = w.reshape(kernel * kernel * cin, cout)
-    if n_pad != cout:
-        wmat = jnp.pad(wmat, ((0, 0), (0, n_pad - cout)))
-        bias = jnp.pad(bias, (0, n_pad - cout))
-    bmat = bias[None, :]
+    npg_pad = -(-npg // bn) * bn     # pad per group so bn tiles never
+    kkc = kernel * kernel * cig      # straddle a group boundary
+    # (K,K,Cg,Cout) -> (G, K*K*Cg, npg) stacked per-group weight slabs;
+    # Cout is group-major (group g owns channels [g*npg, (g+1)*npg))
+    wmat = w.reshape(kkc, groups, npg).transpose(1, 0, 2)
+    bvec = bias.reshape(groups, 1, npg)
+    if npg_pad != npg:
+        wmat = jnp.pad(wmat, ((0, 0), (0, 0), (0, npg_pad - npg)))
+        bvec = jnp.pad(bvec, ((0, 0), (0, 0), (0, npg_pad - npg)))
+    xg = x.reshape(b_, hp, wp, groups, cig)
+    tiles_pg = npg_pad // bn         # N-tiles per diagonal block
 
     out = pl.pallas_call(
         functools.partial(_conv_fused_kernel, kernel=kernel, stride=stride,
                           oh=oh, ow=ow, m_pad=m_pad, relu=relu),
-        grid=(b_, m_pad // bm, n_pad // bn),
+        grid=(b_, m_pad // bm, groups * tiles_pg),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, cin), lambda b, i, j: (b, 0, 0, 0)),
-            pl.BlockSpec((kernel * kernel * cin, bn),
-                         lambda b, i, j: (0, j)),
-            pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, hp, wp, 1, cig),
+                         lambda b, i, j: (b, 0, 0, j // tiles_pg, 0)),
+            pl.BlockSpec((1, kkc, bn),
+                         lambda b, i, j: (j // tiles_pg, 0, j % tiles_pg)),
+            pl.BlockSpec((1, 1, bn),
+                         lambda b, i, j: (j // tiles_pg, 0, j % tiles_pg)),
         ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
-        out_shape=jax.ShapeDtypeStruct((b_, m_pad, n_pad), x.dtype),
+        out_specs=pl.BlockSpec(
+            (1, bm, 1, bn),
+            lambda b, i, j: (b, i, j // tiles_pg, j % tiles_pg)),
+        out_shape=jax.ShapeDtypeStruct((b_, m_pad, groups, npg_pad),
+                                       x.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
-    )(x, wmat, bmat)
-    out = out if (m_pad == m and n_pad == cout) else out[:, :m, :cout]
+    )(xg, wmat, bvec)
+    out = out if (m_pad == m and npg_pad == npg) else out[:, :m, :, :npg]
     return out.reshape(b_, oh, ow, cout)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
 def _conv_fused_core(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
-                     interpret):
+                     groups, interpret):
     return _conv_fused_impl(x, w, bias, kernel, stride, oh, ow, bm, bn,
-                            relu, interpret)
+                            relu, groups, interpret)
 
 
 def _conv_fused_fwd(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
-                    interpret):
+                    groups, interpret):
     y = _conv_fused_impl(x, w, bias, kernel, stride, oh, ow, bm, bn, relu,
-                         interpret)
+                         groups, interpret)
     return y, (x, w, bias, y)
 
 
-def _conv_fused_bwd(kernel, stride, oh, ow, bm, bn, relu, interpret, res,
-                    dy):
+def _conv_fused_bwd(kernel, stride, oh, ow, bm, bn, relu, groups, interpret,
+                    res, dy):
     x, w, bias, y = res
     if relu:
         dy = dy * (y > 0).astype(dy.dtype)
     db = dy.sum((0, 1, 2)).astype(bias.dtype)
     # conv is bilinear: each partial is the transpose of a linear map, so
     # XLA's conv-grad kernels fall out of linear_transpose with no
-    # recomputed forward (x was padded by the caller; padding=VALID here)
+    # recomputed forward (x was padded by the caller; padding=VALID here).
+    # feature_group_count keeps the backward block-diagonal too: dx and dw
+    # for one group never read the other groups' cotangents.
     dyf = dy.astype(jnp.float32)
 
     def conv_x(x_):
         return jax.lax.conv_general_dilated(
             x_, w.astype(jnp.float32), (stride, stride), "VALID",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
 
     def conv_w(w_):
         return jax.lax.conv_general_dilated(
             x.astype(jnp.float32), w_, (stride, stride), "VALID",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
 
     dx, = jax.linear_transpose(conv_x, x.astype(jnp.float32))(dyf)
     dw, = jax.linear_transpose(conv_w, w.astype(jnp.float32))(dyf)
@@ -265,15 +290,26 @@ _conv_fused_core.defvjp(_conv_fused_fwd, _conv_fused_bwd)
 
 
 def conv2d_fused(x, w, *, stride: int, padding: int, bias=None,
-                 relu: bool = False, bm: int = None, bn: int = None,
-                 interpret: bool = None, autotune: bool = None):
-    """Implicit-GEMM conv: x (B,H,W,Cin), w (K,K,Cin,Cout) -> (B,OH,OW,Cout).
+                 relu: bool = False, groups: int = 1, bm: int = None,
+                 bn: int = None, interpret: bool = None,
+                 autotune: bool = None):
+    """Implicit-GEMM conv: x (B,H,W,Cin), w (K,K,Cin/G,Cout) ->
+    (B,OH,OW,Cout).
 
     The im2col patch tensor never materializes in HBM — each grid program
-    gathers its windows from the (B,H,W,C) operand.  Differentiable.
+    gathers its windows from the (B,H,W,C) operand.  ``groups`` > 1 is
+    the paper's intra-layer model parallelism (AlexNet conv2/4/5): the N
+    grid axis walks block-diagonal tiles and each program stages only its
+    group's input-channel slice.  Differentiable.
     """
     interpret = tune.resolve_interpret(interpret)
-    k, _, cin, cout = w.shape
+    k, _, wcin, cout = w.shape
+    cin = x.shape[-1]
+    if wcin * groups != cin:
+        raise ValueError(f"w in-channels {wcin} x groups {groups} != "
+                         f"x channels {cin}")
+    if cout % groups:
+        raise ValueError(f"cout {cout} not divisible by groups {groups}")
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
                         (0, 0)))
@@ -282,10 +318,10 @@ def conv2d_fused(x, w, *, stride: int, padding: int, bias=None,
     ow = (wp - k) // stride + 1
     if bm is None or bn is None:
         tbm, tbn = tune.conv_blocks(b_, oh, ow, k, cin, cout, stride,
-                                    x.dtype, interpret=interpret,
-                                    autotune=autotune)
+                                    x.dtype, groups=groups,
+                                    interpret=interpret, autotune=autotune)
         bm, bn = bm or tbm, bn or tbn
     if bias is None:
         bias = jnp.zeros((cout,), x.dtype)
     return _conv_fused_core(x, w, bias, k, stride, oh, ow, bm, bn, relu,
-                            interpret)
+                            groups, interpret)

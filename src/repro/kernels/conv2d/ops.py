@@ -29,18 +29,33 @@ _WCACHE: OrderedDict = OrderedDict()
 _WCACHE_MAX = 32
 
 
-def reorder_weights(w):
-    """(K,K,Cin,Cout) -> (Cin*K*K, Cout) rows in the patches' channel-major
-    order.  Memoised for concrete arrays (a training step reuses the same
-    weight buffers until the optimizer writes new ones)."""
+def _reorder(w, groups: int):
+    # channel-major rows; grouped weights embed as a block-diagonal
+    # (Cin*K*K, Cout) matrix: group g's K*K*Cg rows are contiguous in the
+    # patches' channel-major feature order, its Cout/G columns are
+    # group-major — zeros everywhere else, so one GEMM does all groups
+    wm = w.transpose(2, 0, 1, 3).reshape(-1, w.shape[-1])
+    if groups == 1:
+        return wm
+    npg = w.shape[-1] // groups
+    from jax.scipy.linalg import block_diag
+    return block_diag(*[wm[:, g * npg:(g + 1) * npg]
+                        for g in range(groups)])
+
+
+def reorder_weights(w, groups: int = 1):
+    """(K,K,Cin/G,Cout) -> (Cin*K*K, Cout) rows in the patches'
+    channel-major order (block-diagonal when grouped).  Memoised for
+    concrete arrays (a training step reuses the same weight buffers until
+    the optimizer writes new ones)."""
     if isinstance(w, jax.core.Tracer):        # under jit: XLA will CSE it
-        return w.transpose(2, 0, 1, 3).reshape(-1, w.shape[-1])
-    key = id(w)
+        return _reorder(w, groups)
+    key = (id(w), groups)
     hit = _WCACHE.get(key)
     if hit is not None and hit[0]() is w:
         _WCACHE.move_to_end(key)
         return hit[1]
-    out = w.transpose(2, 0, 1, 3).reshape(-1, w.shape[-1])
+    out = _reorder(w, groups)
     try:
         import weakref
         ref = weakref.ref(w, lambda _, k=key: _WCACHE.pop(k, None))
@@ -62,14 +77,16 @@ def im2col(x, kernel: int, stride: int, padding: int):
 
 
 def conv2d_im2col(x, w, *, stride: int, padding: int, bias=None,
-                  relu: bool = False, interpret: bool = None,
-                  autotune: bool = None):
+                  relu: bool = False, groups: int = 1,
+                  interpret: bool = None, autotune: bool = None):
     """Two-stage reference: XLA im2col + Pallas GEMM.  x (B,H,W,Cin),
-    w (K,K,Cin,Cout)."""
-    k, _, cin, cout = w.shape
+    w (K,K,Cin/G,Cout).  Grouped convs run as ONE GEMM against the
+    block-diagonal weight embedding (an independent formulation from the
+    fused kernel's block-diagonal N-tile walk — parity fodder)."""
+    k, _, _, cout = w.shape
     patches = im2col(x, k, stride, padding)
     b, oh, ow, feat = patches.shape
-    wmat = reorder_weights(w)
+    wmat = reorder_weights(w, groups)
     bvec = jnp.zeros((cout,), x.dtype) if bias is None else bias
     y = matmul_bias(patches.reshape(b * oh * ow, feat), wmat, bvec,
                     relu=relu, interpret=interpret, autotune=autotune)
@@ -84,12 +101,30 @@ def _example(seed: int = 0):
     return jnp.asarray(x), jnp.asarray(w)
 
 
+def _example_grouped(seed: int = 0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(2, 13, 13, 8)).astype(np.float32)
+    w = (rng.normal(size=(3, 3, 4, 12)) * 0.2).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
 common.register(common.KernelOp(
     name="conv2d",
     pallas=lambda x, w: conv2d_fused(x, w, stride=2, padding=1),
     ref=lambda x, w: conv_ref.conv2d_ref(x, w, 2, 1),
     example=_example,
     tuner=None,          # conv_blocks/matmul_blocks in tune.py (shape-rich)
+    tol=2e-4,
+    grad_argnums=(0, 1),
+))
+
+common.register(common.KernelOp(
+    name="conv2d_grouped",
+    pallas=lambda x, w: conv2d_fused(x, w, stride=1, padding=1, groups=2),
+    ref=lambda x, w: conv_ref.conv2d_ref(x, w, 1, 1, groups=2),
+    example=_example_grouped,
+    tuner=None,
     tol=2e-4,
     grad_argnums=(0, 1),
 ))

@@ -5,12 +5,16 @@ import jax
 import jax.numpy as jnp
 
 
-def conv2d_ref(x, w, stride: int, padding: int):
-    """x (B,H,W,Cin), w (K,K,Cin,Cout) -> (B,OH,OW,Cout)."""
+def conv2d_ref(x, w, stride: int, padding: int, groups: int = 1):
+    """x (B,H,W,Cin), w (K,K,Cin/G,Cout) -> (B,OH,OW,Cout).
+
+    ``groups`` maps to XLA's ``feature_group_count`` — output channels
+    are group-major, matching the fused kernel's layout."""
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride),
         padding=[(padding, padding), (padding, padding)],
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
         preferred_element_type=jnp.float32).astype(x.dtype)
 
 

@@ -79,13 +79,16 @@ _CONV_BM_CAP = 512
 
 
 def conv_blocks(b: int, oh: int, ow: int, kernel: int, cin: int, cout: int,
-                stride: int, dtype, *, interpret: bool,
+                stride: int, dtype, *, groups: int = 1, interpret: bool,
                 autotune: bool = None) -> Tuple[int, int]:
     """(bm, bn) for the fused implicit-GEMM conv (reduction is unrolled
-    in-kernel, so there is no bk)."""
+    in-kernel, so there is no bk).  ``groups`` is part of the cache key —
+    a grouped layer tiles N per diagonal block (Cout/G wide), so its
+    winning blocking is NOT the ungrouped layer's — and bn defaults to
+    the per-group output width, never a whole-Cout tile."""
     m = oh * ow
-    default = (pow2_clip(m, _CONV_BM_CAP), pow2_clip(cout, LANE))
-    key = ("conv", b, oh, ow, kernel, cin, cout, stride, str(dtype))
+    default = (pow2_clip(m, _CONV_BM_CAP), pow2_clip(cout // groups, LANE))
+    key = ("conv", b, oh, ow, kernel, cin, cout, stride, groups, str(dtype))
     if not _autotune_enabled(interpret, autotune):
         return common.autotune(key, [default], None)
 
@@ -99,11 +102,12 @@ def conv_blocks(b: int, oh: int, ow: int, kernel: int, cin: int, cout: int,
     w_sz = (ow - 1) * stride + kernel
     x = np.random.default_rng(0).normal(size=(b, h, w_sz, cin)).astype(dtype)
     wt = np.random.default_rng(1).normal(
-        size=(kernel, kernel, cin, cout)).astype(dtype)
+        size=(kernel, kernel, cin // groups, cout)).astype(dtype)
 
     def measure(c):
         bm, bn = c
         return time_call(
             lambda: _ops.conv2d_fused(x, wt, stride=stride, padding=0,
-                                      bm=bm, bn=bn, interpret=False))
+                                      groups=groups, bm=bm, bn=bn,
+                                      interpret=False))
     return common.autotune(key, sorted(cands), measure)

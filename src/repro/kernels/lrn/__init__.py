@@ -1,0 +1,1 @@
+from repro.kernels.lrn import ops, ref  # noqa: F401

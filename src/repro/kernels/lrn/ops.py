@@ -1,0 +1,41 @@
+"""LRN dispatch + registry entry.
+
+``lrn`` routes on ``backend``: ``xla`` (the jnp oracle — XLA fuses it
+adequately for small nets) or ``pallas`` (single-pass VMEM tile kernel).
+The model layer picks via ``KernelPolicy.wants_pallas("lrn")``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.lrn import ref as lrn_ref_mod
+from repro.kernels.lrn.lrn import lrn_pallas  # noqa: F401
+
+
+def lrn(x, *, n: int = 5, alpha: float = 1e-4, beta: float = 0.75,
+        k: float = 2.0, backend: str = "xla", interpret: bool = None):
+    if backend == "pallas":
+        return lrn_pallas(x, n=n, alpha=alpha, beta=beta, k=k,
+                          interpret=interpret)
+    if backend == "xla":
+        return lrn_ref_mod.lrn_ref(x, n=n, alpha=alpha, beta=beta, k=k)
+    raise ValueError(f"unknown lrn backend {backend!r}")
+
+
+def _example(seed: int = 0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    # (B, H, W, C) with C straddling a non-multiple of the window
+    return (jnp.asarray(rng.normal(size=(2, 7, 7, 24)).astype(np.float32)),)
+
+
+common.register(common.KernelOp(
+    name="lrn",
+    pallas=lambda x: lrn_pallas(x),
+    ref=lambda x: lrn_ref_mod.lrn_ref(x),
+    example=_example,
+    tuner=None,
+    tol=2e-5,            # elementwise + window sum: no MXU accumulation
+    grad_argnums=(0,),
+))

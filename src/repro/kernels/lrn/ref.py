@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for local response normalization (AlexNet §3.3).
+
+``y_c = x_c / (k + alpha * sum_{c' in window(c)} x_{c'}^2) ** beta`` with
+a size-``n`` channel window centred on ``c`` (zero-padded at the edges).
+The paper's constants are ``n=5, alpha=1e-4, beta=0.75`` (the Caffe
+reference net); ``k=2`` per Krizhevsky et al.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def window_sum(v, n: int):
+    """Size-``n`` zero-padded sliding-window sum over the channel axis."""
+    c = v.shape[-1]
+    pad = n // 2
+    vp = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(pad, pad)])
+    return sum(vp[..., i:i + c] for i in range(n))
+
+
+def lrn_ref(x, n: int = 5, alpha: float = 1e-4, beta: float = 0.75,
+            k: float = 2.0):
+    """x (..., C) -> (..., C), same dtype; fp32 internal math."""
+    xf = x.astype(jnp.float32)
+    den = jnp.power(k + alpha * window_sum(xf * xf, n), beta)
+    return (xf / den).astype(x.dtype)

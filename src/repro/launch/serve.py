@@ -12,7 +12,11 @@ request stream, and reports tok/s + per-request p50/p99 latency.
 The engine serves every family in the zoo through the DecodeState
 contract (docs/serving.md); ``--arch seamless-m4t-medium`` exercises the
 encdec path with stub frames, ``--arch rwkv6-7b`` the constant-state
-recurrent path.
+recurrent path.  Vision runs through the SAME admission loop:
+``--arch alexnet`` serves image-classification requests (one class id
+per image, batched through ``_admit_images`` — no decode ticks), and
+``--images`` attaches raw pixels to every vlm request so
+``phi-3-vision-4.2b`` prefills real (stub-encoded) patch embeddings.
 """
 import os
 
@@ -30,7 +34,7 @@ import jax
 import numpy as np
 
 from repro import models
-from repro.configs import get_config, reduced
+from repro.configs import ALEXNET, ALEXNET_SMOKE, get_config, reduced
 from repro.kernels.common import KernelPolicy
 from repro.launch.mesh import make_replica_mesh
 from repro.serving import Request, ServingEngine
@@ -39,6 +43,9 @@ from repro.serving import Request, ServingEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--images", action="store_true",
+                    help="vlm: attach random raw pixels to every request "
+                    "(encoded to patch embeddings at submit)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
     ap.add_argument("--slots", type=int, default=4,
@@ -62,12 +69,18 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg, n_layers=args.layers or 2,
-                      d_model=args.d_model or 256)
+    if args.arch == "alexnet":
+        cfg = ALEXNET_SMOKE if args.smoke else ALEXNET
+    else:
+        cfg = get_config(args.arch)
+        if args.smoke:
+            cfg = reduced(cfg, n_layers=args.layers or 2,
+                          d_model=args.d_model or 256)
     cfg = dataclasses.replace(cfg,
                               kernels=KernelPolicy(backend=args.kernel_backend))
+    if args.images and cfg.family != "vlm":
+        raise SystemExit(f"--images needs a vlm arch, {cfg.name} is "
+                         f"{cfg.family}")
 
     n_dev = jax.device_count()
     mesh = make_replica_mesh(n_dev) if n_dev > 1 else None
@@ -88,13 +101,19 @@ def main():
 
     rs = np.random.default_rng(args.seed)
     reqs = []
-    hi = max(args.capacity - args.max_new, 2)
+    n_img = cfg.n_image_tokens if args.images else 0
+    hi = max(args.capacity - args.max_new - n_img, 2)
     for i in range(args.requests):
+        if cfg.family == "conv":
+            reqs.append(Request(image=rs.standard_normal(
+                (cfg.image_size, cfg.image_size, cfg.in_channels))))
+            continue
         ln = int(np.clip(rs.integers(max(args.prompt_len // 2, 1),
                                      args.prompt_len * 2), 1, hi))
         reqs.append(Request(
             prompt=rs.integers(0, cfg.vocab_size, size=ln),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new,
+            image=rs.standard_normal((32, 32, 3)) if args.images else None))
 
     print(f"arch={cfg.name} family={cfg.family} devices={n_dev} "
           f"slots={args.slots} capacity={args.capacity} "

@@ -41,13 +41,14 @@ import jax
 import numpy as np
 
 from repro import models
-from repro.configs import ALEXNET, ALEXNET_SMOKE, get_config, reduced
+from repro.configs import (ALEXNET, ALEXNET_FAITHFUL, ALEXNET_FAITHFUL_SMOKE,
+                           ALEXNET_SMOKE, get_config, reduced)
 from repro.core import (init_param_avg_state, make_eval_step,
                         make_mesh_param_avg_step, make_param_avg_step,
                         replica_spread, reshape_for_replicas)
 from repro.kernels.common import KernelPolicy
 from repro.launch.mesh import make_replica_mesh
-from repro.sharding.specs import replica_sharding
+from repro.sharding.specs import replica_sharding, state_sharding
 from repro.data import synthetic
 from repro.models import alexnet as alexnet_mod
 from repro.optim import schedules
@@ -118,7 +119,10 @@ def build_lm(args) -> Build:
 
 
 def build_alexnet(args, error) -> Build:
-    cfg = ALEXNET_SMOKE if args.smoke else ALEXNET
+    if args.faithful:
+        cfg = ALEXNET_FAITHFUL_SMOKE if args.smoke else ALEXNET_FAITHFUL
+    else:
+        cfg = ALEXNET_SMOKE if args.smoke else ALEXNET
     cfg = dataclasses.replace(cfg, kernels=make_policy(args))
     if args.image_size is not None:
         try:
@@ -182,6 +186,17 @@ def main():
                     "if the conv stack cannot consume it; default: the "
                     "config's own size — 227 full, 64 smoke)")
     ap.add_argument("--replicas", type=int, default=None)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="size of the mesh's 'model' axis: shards grouped "
+                    "conv / FC output channels (and the LM zoo's tensor-"
+                    "parallel dims) across devices — the paper's intra-"
+                    "layer 2-GPU split is --faithful --model-parallel 2. "
+                    "Uses the reference engine (replicas x model mesh); "
+                    "requires replicas * model-parallel <= devices")
+    ap.add_argument("--faithful", action="store_true",
+                    help="paper-faithful AlexNet: 2-group conv2/4/5 + LRN "
+                    "after pool1/pool2 (the Caffe reference topology); "
+                    "without it the legacy PR-2 net is trained")
     ap.add_argument("--strategy", default="all_reduce")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "mesh", "reference"],
@@ -240,8 +255,17 @@ def main():
         ap.error("--resume needs --ckpt-dir")
 
     n_dev = jax.device_count()
-    n_rep = args.replicas or n_dev
+    mp = args.model_parallel
+    n_rep = args.replicas or (n_dev // mp if mp > 1 else n_dev)
     assert args.batch % n_rep == 0, (args.batch, n_rep)
+    if mp > 1:
+        if args.engine == "mesh":
+            ap.error("--model-parallel needs the reference engine (the "
+                     "mesh engine's shard_map owns every non-replica axis)")
+        if n_rep * mp > n_dev:
+            ap.error(f"--replicas {n_rep} x --model-parallel {mp} needs "
+                     f"{n_rep * mp} devices, have {n_dev} "
+                     "(set REPRO_DEVICES)")
 
     if args.arch == "alexnet":
         build = build_alexnet(args, ap.error)
@@ -253,7 +277,8 @@ def main():
 
     engine = args.engine
     if engine == "auto":
-        engine = "mesh" if (n_dev > 1 and n_rep == n_dev) else "reference"
+        engine = "mesh" if (n_dev > 1 and n_rep == n_dev and mp == 1) \
+            else "reference"
 
     rng = jax.random.PRNGKey(args.seed)
     state = init_param_avg_state(rng, build.init, opt, n_rep)
@@ -279,8 +304,18 @@ def main():
         out_shardings = None
         if n_dev > 1:
             from jax.sharding import NamedSharding, PartitionSpec as P
-            mesh = jax.make_mesh((n_rep, n_dev // n_rep), ("data", "model"))
-            sharding = replica_sharding(state, mesh, replica_axes=("data",))
+            mesh = jax.make_mesh((n_rep, mp if mp > 1 else n_dev // n_rep),
+                                 ("data", "model"))
+            if mp > 1:
+                # replica x model layout: replicas over 'data', grouped
+                # conv / FC output channels (and the LM zoo's tensor-
+                # parallel dims) over 'model' via sharding/specs.py — the
+                # paper's intra-layer split, run by GSPMD
+                sharding = state_sharding(state, build.cfg, mesh,
+                                          replica_axes=("data",))
+            else:
+                sharding = replica_sharding(state, mesh,
+                                            replica_axes=("data",))
             state = jax.device_put(state, sharding)
             put = lambda b: jax.device_put(  # noqa: E731
                 b, replica_sharding(b, mesh, replica_axes=("data",)))
@@ -317,10 +352,12 @@ def main():
         log_every=args.log_every, images_per_step=args.batch,
         metrics_path=args.metrics_out,
         run_meta={"kernels": make_policy(args).describe(),
-                  "engine": engine, "strategy": args.strategy})
+                  "engine": engine, "strategy": args.strategy,
+                  "model_parallel": mp})
 
     print(f"arch={getattr(build.cfg, 'name', args.arch)} replicas={n_rep} "
-          f"devices={n_dev} engine={engine} strategy={args.strategy} "
+          f"devices={n_dev} model_parallel={mp} "
+          f"engine={engine} strategy={args.strategy} "
           f"sync_every={args.sync_every} "
           f"kernels={make_policy(args).describe()}"
           + (f" resume_from={args.ckpt_dir}" if args.resume else ""))

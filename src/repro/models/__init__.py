@@ -29,7 +29,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models import alexnet, encdec, transformer
+from repro.models import alexnet, encdec, transformer, vision
 from repro.models.layers import softmax_xent
 
 # families whose decode path is the transformer composer's (its block
@@ -39,6 +39,8 @@ DECODE_FAMILIES = _TRANSFORMER_DECODE + ("encdec",)
 
 
 def init(rng, cfg):
+    if cfg.family == "conv":
+        return alexnet.init(rng, cfg)
     if cfg.family == "encdec":
         return encdec.init(rng, cfg)
     return transformer.init(rng, cfg)
@@ -52,6 +54,8 @@ def logits_fn(params, cfg, batch, remat=False):
     ``attn_impl=`` kwarg threading is gone; use
     ``dataclasses.replace(cfg, kernels=KernelPolicy(...))`` instead.
     """
+    if cfg.family == "conv":
+        return alexnet.forward(params, cfg, batch["images"]), 0.0
     if cfg.family == "encdec":
         return encdec.forward(params, cfg, batch["frames"], batch["tokens"],
                               remat=remat)
@@ -64,9 +68,11 @@ def logits_fn(params, cfg, batch, remat=False):
 
 
 def loss_fn(params, cfg, batch, remat=False):
-    """Next-token cross entropy (+ MoE aux)."""
+    """Next-token cross entropy (+ MoE aux); classification xent for conv."""
     logits, aux = logits_fn(params, cfg, batch, remat=remat)
     labels = batch["labels"]
+    if cfg.family == "conv":
+        return softmax_xent(logits[:, None, :], labels[:, None]) + aux
     return softmax_xent(logits[:, :-1], labels[:, 1:]) + aux
 
 
@@ -101,6 +107,11 @@ def _check_decode_family(cfg):
 
 def init_decode_cache(cfg, batch: int, seq_len: int, enc_len: int = 1024):
     """Low-level cache builder (the DecodeState's ``cache`` pytree)."""
+    if cfg.family == "conv":
+        # image classification is a single forward pass — the serving
+        # engine admits a batch, emits one class id per image and retires
+        # the rows before any decode tick; there is no state to carry
+        return {}
     _check_decode_family(cfg)
     if cfg.family == "encdec":
         return encdec.init_decode_cache(cfg, batch, seq_len, enc_len)
@@ -206,7 +217,12 @@ def write_slots(state: DecodeState, sub: DecodeState, slots) -> DecodeState:
 
 
 def model_inputs(cfg, batch: int, seq_len: int):
-    """Shape/dtype description of the training/prefill batch."""
+    """Shape/dtype description of the training/prefill batch.  For the
+    conv family ``seq_len`` is ignored — the batch is images + labels."""
+    if cfg.family == "conv":
+        return {"images": ((batch, cfg.image_size, cfg.image_size,
+                            cfg.in_channels), jnp.dtype(cfg.dtype)),
+                "labels": ((batch,), jnp.int32)}
     spec = {"tokens": ((batch, seq_len), jnp.int32),
             "labels": ((batch, seq_len), jnp.int32)}
     if cfg.family == "encdec":
@@ -220,7 +236,8 @@ def model_inputs(cfg, batch: int, seq_len: int):
     return spec
 
 
-__all__ = ["alexnet", "encdec", "transformer", "init", "logits_fn", "loss_fn",
+__all__ = ["alexnet", "encdec", "transformer", "vision", "init", "logits_fn",
+           "loss_fn",
            "DecodeState", "DECODE_FAMILIES", "init_decode_cache",
            "init_decode_state", "prefill", "decode_step", "write_slots",
            "stacked_cache_path", "model_inputs"]

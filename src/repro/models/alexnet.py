@@ -3,15 +3,23 @@
 Faithful to Krizhevsky et al. 2012 / the Theano implementation: 5 conv
 layers (LRN after conv1/2, 3x3 stride-2 max-pool after conv1/2/5), two
 4096-d fully-connected layers with dropout 0.5, softmax over 1000 classes.
+With ``cfg.faithful`` the net is the paper's dual-GPU topology: conv2/4/5
+are 2-group convolutions (``ConvSpec.groups`` — the intra-layer
+model-parallel split each GPU held one half of) and LRN runs *after*
+pool1/pool2, the Caffe reference ordering.  Legacy configs
+(``faithful=False``) keep the PR-2 ordering (LRN before pool, no groups)
+so their numerics never move.
 
 The convolution backend is pluggable, mirroring the paper's cuda-convnet vs
 cuDNN comparison (§2, Table 1):
   ``xla``               lax.conv_general_dilated (the library backend)
   ``pallas``            fused implicit-GEMM Pallas kernel — patch gather
                         inside the kernel, bias+ReLU epilogue fused, no
-                        im2col tensor in HBM (docs/kernels.md)
-  ``pallas_im2col_ref`` two-stage XLA im2col + Pallas GEMM, kept for
-                        parity testing the fused kernel
+                        im2col tensor in HBM; grouped convs walk
+                        block-diagonal N-tiles (docs/kernels.md)
+  ``pallas_im2col_ref`` two-stage XLA im2col + Pallas GEMM (block-diagonal
+                        weight embedding when grouped), kept for parity
+                        testing the fused kernel
 ``interpret=None`` auto-resolves per backend (kernels/conv2d/tune.py);
 block sizes come from the autotune cache.  Layout is NHWC (TPU-native)
 rather than the paper's cuda-convnet C01B.
@@ -22,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import policy_of, resolve_interpret
+from repro.kernels.lrn import ops as lrn_ops
 from repro.models.layers import softmax_xent
 
 
@@ -37,39 +46,44 @@ def resolve_conv_backend(cfg) -> str:
 
 
 def conv2d(x, w, b, stride: int, padding: int, backend: str = "xla", *,
-           relu: bool = False, interpret: bool = None,
+           relu: bool = False, groups: int = 1, interpret: bool = None,
            autotune: bool = None):
-    """x (B,H,W,C_in), w (K,K,C_in,C_out).  The pallas backends fuse the
-    bias add (+ optional ReLU) into the kernel epilogue."""
+    """x (B,H,W,C_in), w (K,K,C_in/G,C_out).  The pallas backends fuse the
+    bias add (+ optional ReLU) into the kernel epilogue; ``groups`` > 1
+    runs the paper's intra-layer split on every backend."""
     if backend == "pallas":
         from repro.kernels.conv2d import ops as conv_ops
         return conv_ops.conv2d_fused(x, w, stride=stride, padding=padding,
-                                     bias=b, relu=relu, interpret=interpret,
-                                     autotune=autotune)
+                                     bias=b, relu=relu, groups=groups,
+                                     interpret=interpret, autotune=autotune)
     if backend in ("pallas_im2col_ref", "pallas_im2col"):
         from repro.kernels.conv2d import ops as conv_ops
         return conv_ops.conv2d_im2col(x, w, stride=stride, padding=padding,
-                                      bias=b, relu=relu, interpret=interpret,
-                                      autotune=autotune)
+                                      bias=b, relu=relu, groups=groups,
+                                      interpret=interpret, autotune=autotune)
     if backend == "xla":
         y = jax.lax.conv_general_dilated(
             x, w, window_strides=(stride, stride),
             padding=[(padding, padding), (padding, padding)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups,
             preferred_element_type=jnp.float32).astype(x.dtype)
         y = y + b.astype(y.dtype)
         return jax.nn.relu(y) if relu else y
     raise ValueError(f"unknown conv backend {backend!r}")
 
 
-def lrn(x, n: int = 5, alpha: float = 1e-4, beta: float = 0.75, k: float = 2.0):
-    """Local response normalization across channels (AlexNet §3.3)."""
-    sq = jnp.square(x.astype(jnp.float32))
-    c = x.shape[-1]
-    pad = n // 2
-    sqp = jnp.pad(sq, [(0, 0)] * (x.ndim - 1) + [(pad, pad)])
-    windows = sum(sqp[..., i:i + c] for i in range(n))
-    return (x.astype(jnp.float32) / jnp.power(k + alpha * windows, beta)).astype(x.dtype)
+def resolve_lrn_backend(cfg) -> str:
+    pol = policy_of(cfg)
+    return "pallas" if pol.wants_pallas("lrn") else "xla"
+
+
+def lrn(x, n: int = 5, alpha: float = 1e-4, beta: float = 0.75,
+        k: float = 2.0, backend: str = "xla", interpret: bool = None):
+    """Local response normalization across channels (AlexNet §3.3).
+    Dispatches to ``kernels.lrn`` (XLA oracle or Pallas tile kernel)."""
+    return lrn_ops.lrn(x, n=n, alpha=alpha, beta=beta, k=k, backend=backend,
+                       interpret=interpret)
 
 
 def maxpool(x, size: int = 3, stride: int = 2):
@@ -85,10 +99,12 @@ def init(rng, cfg):
     for i, cs in enumerate(cfg.convs):
         k = jax.random.fold_in(rng, i)
         # He init (the paper's 0.01 works at 227x224 ImageNet scale but
-        # vanishes through the reduced net's 5 conv layers)
-        fan_in = cs.kernel * cs.kernel * c_in
-        w = jax.random.normal(k, (cs.kernel, cs.kernel, c_in, cs.out_channels),
-                              jnp.float32) * (2.0 / fan_in) ** 0.5
+        # vanishes through the reduced net's 5 conv layers); a grouped
+        # conv's receptive field only spans its group's channels
+        fan_in = cs.kernel * cs.kernel * (c_in // cs.groups)
+        w = jax.random.normal(
+            k, (cs.kernel, cs.kernel, c_in // cs.groups, cs.out_channels),
+            jnp.float32) * (2.0 / fan_in) ** 0.5
         params["convs"].append({"w": w.astype(dt),
                                 "b": jnp.zeros((cs.out_channels,), dt)})
         hw = (hw + 2 * cs.padding - cs.kernel) // cs.stride + 1
@@ -116,15 +132,29 @@ def forward(params, cfg, images, *, train: bool = False, dropout_rng=None,
         conv_backend = resolve_conv_backend(cfg)
     if conv_interpret is None:
         conv_interpret = policy_of(cfg).interpret
+    lrn_backend = resolve_lrn_backend(cfg)
+    faithful = getattr(cfg, "faithful", False)
+
+    def _lrn(h):
+        return lrn(h, n=getattr(cfg, "lrn_n", 5),
+                   alpha=getattr(cfg, "lrn_alpha", 1e-4),
+                   beta=getattr(cfg, "lrn_beta", 0.75),
+                   k=getattr(cfg, "lrn_k", 2.0),
+                   backend=lrn_backend, interpret=conv_interpret)
+
     h = images
     for cp, cs in zip(params["convs"], cfg.convs):
         h = conv2d(h, cp["w"], cp["b"], cs.stride, cs.padding, conv_backend,
-                   relu=True, interpret=conv_interpret,
+                   relu=True, groups=cs.groups, interpret=conv_interpret,
                    autotune=policy_of(cfg).autotune)
-        if cs.lrn:
-            h = lrn(h)
+        # faithful ordering is the Caffe reference net's: pool THEN norm
+        # (normalizing the pooled map); legacy nets normalized first
+        if not faithful and cs.lrn:
+            h = _lrn(h)
         if cs.pool:
             h = maxpool(h)
+        if faithful and cs.lrn:
+            h = _lrn(h)
     h = h.reshape(h.shape[0], -1)
     for i, fp in enumerate(params["fcs"]):
         if i > 0:

@@ -1,0 +1,56 @@
+"""Stub image encoder for VLM serving.
+
+``encode_image(cfg, image)`` turns a raw (H, W, C) image into the
+``(n_image_tokens, d_model)`` patch-embedding block the vlm family's
+``prefill`` consumes at its masked positions.  The real Phi-3-Vision
+encoder is a CLIP ViT; reproducing it is out of scope for this paper, so
+this is a DETERMINISTIC stand-in with the right interface:
+
+  * the image is mean-pooled onto a ``g x g`` grid
+    (``g = ceil(sqrt(n_image_tokens))``) — spatial structure survives,
+  * each cell gets its normalized (row, col) coordinates appended so
+    distinct positions stay distinguishable even on flat images,
+  * the features are projected to ``d_model`` with a fixed-seed random
+    matrix (the same image always maps to the same embeddings, which is
+    what the serving parity tests pin against).
+
+Pure numpy on purpose: the encoder runs at request-admission time on the
+host, outside any jit — no tracing, no device transfer until the engine
+batches the prefill.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_PROJ_SEED = 0x51DE
+
+
+def encode_image(cfg, image) -> np.ndarray:
+    """image (H, W, C) or (H, W) float -> (cfg.n_image_tokens, cfg.d_model)
+    float32 patch embeddings (deterministic; see module docstring)."""
+    img = np.asarray(image, np.float32)
+    if img.ndim == 2:
+        img = img[..., None]
+    if img.ndim != 3:
+        raise ValueError(f"expected an (H, W, C) image, got {img.shape}")
+    n, d = int(cfg.n_image_tokens), int(cfg.d_model)
+    if n < 1:
+        raise ValueError(f"{cfg.name}: n_image_tokens={n} — not a vlm config?")
+    g = int(np.ceil(np.sqrt(n)))
+    h, w, c = img.shape
+    ys = np.linspace(0, h, g + 1).astype(int)
+    xs = np.linspace(0, w, g + 1).astype(int)
+    pooled = np.zeros((g, g, c), np.float32)
+    for i in range(g):
+        y0, y1 = ys[i], max(ys[i + 1], ys[i] + 1)
+        for j in range(g):
+            x0, x1 = xs[j], max(xs[j + 1], xs[j] + 1)
+            pooled[i, j] = img[min(y0, h - 1):y1, min(x0, w - 1):x1].mean(
+                axis=(0, 1))
+    feats = pooled.reshape(g * g, c)[:n]
+    iy, ix = np.divmod(np.arange(n, dtype=np.float32), g)
+    feats = np.concatenate([feats, (iy / g)[:, None], (ix / g)[:, None]],
+                           axis=1)
+    proj = np.random.default_rng(_PROJ_SEED).standard_normal(
+        (feats.shape[1], d)).astype(np.float32)
+    return ((feats @ proj) / np.sqrt(feats.shape[1])).astype(np.float32)

@@ -22,6 +22,13 @@ On a mesh, params are replicated and the slot axis of the state is
 sharded over the replica ('pod'/'data') axes via
 ``sharding.specs.cache_sharding``; the decode step donates the state and
 pins its output sharding so the layout stays a loop invariant.
+
+Vision rides the same admission loop: a conv-family engine (AlexNet)
+treats each request's ``image`` as a one-token generation — freshly
+freed slots are classified as ONE batched compiled forward
+(``_admit_images``), and ``max_new_tokens == 1`` retires them before any
+decode tick; vlm requests carrying raw ``image`` pixels get them encoded
+to patch embeddings at submit() and prefill like any other prompt.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
 # model serves its first request without recompiling anything
 _DECODE_FNS: Dict[tuple, Any] = {}
 _PREFILL_FNS: Dict[tuple, Any] = {}
+_IMAGE_FNS: Dict[tuple, Any] = {}
 
 
 def _replica_lead(mesh):
@@ -100,13 +108,37 @@ def _prefill_fn(cfg, temperature, top_k, capacity, bucket):
     return _PREFILL_FNS[key]
 
 
+def _image_fn(cfg, temperature, top_k, bucket):
+    """Compiled image-classification 'prefill' for the conv family: one
+    forward over a (bucket, H, W, C) batch, one sampled class id per row.
+    Cached per (config, sampling, bucket) like the token prefills."""
+    key = (cfg, temperature, top_k, bucket)
+    if key not in _IMAGE_FNS:
+        from repro.models import alexnet
+
+        def classify(params, images, rng):
+            logits = alexnet.forward(params, cfg, images)
+            return sampling.sample(rng, logits, temperature=temperature,
+                                   top_k=top_k)
+
+        _IMAGE_FNS[key] = jax.jit(classify)
+    return _IMAGE_FNS[key]
+
+
 @dataclasses.dataclass
 class Request:
-    """One generation request (tokens in, tokens out)."""
-    prompt: Any                        # (L,) int sequence
+    """One generation request (tokens in, tokens out).
+
+    ``image`` is the raw-pixels entry point: for the conv family it IS
+    the request (an (image_size, image_size, in_channels) array; the
+    prompt is ignored and the result is one class id); for the vlm
+    family ``submit`` encodes it to patch embeddings and prepends
+    ``n_image_tokens`` placeholder positions to the prompt."""
+    prompt: Any = ()                   # (L,) int sequence
     max_new_tokens: int = 32
     frames: Any = None                 # encdec: encoder input (T_enc, d)
-    image_embeds: Any = None           # vlm
+    image: Any = None                  # conv / vlm: raw (H, W, C) pixels
+    image_embeds: Any = None           # vlm (precomputed; wins over image)
     image_mask: Any = None             # vlm (over the PADDED prompt)
     rid: int = -1                      # assigned by submit()
 
@@ -194,14 +226,41 @@ class ServingEngine:
     # ------------------------------------------------------------- queue ----
 
     def submit(self, request: Request) -> int:
-        if len(request.prompt) < 1:
-            raise ValueError("empty prompt: there is no position to sample "
-                             "the first token from")
-        self._bucket(len(request.prompt))      # reject overlong NOW
+        if self.cfg.family == "conv":
+            expect = (self.cfg.image_size, self.cfg.image_size,
+                      self.cfg.in_channels)
+            img = None if request.image is None \
+                else np.asarray(request.image, np.float32)
+            if img is None or img.shape != expect:
+                raise ValueError(
+                    f"conv-family request needs image of shape {expect}, "
+                    f"got {None if img is None else img.shape}")
+            request.image = img
+            request.max_new_tokens = 1     # one class id per image
+            prompt_len = 0
+        else:
+            if (self.cfg.family == "vlm" and request.image is not None
+                    and request.image_embeds is None):
+                # encode now (host-side, deterministic) and reserve the
+                # image's positions at the front of the prompt, so the
+                # bucket check below sees the true prefill length
+                from repro.models import vision
+                request.image_embeds = vision.encode_image(self.cfg,
+                                                           request.image)
+                n_img = self.cfg.n_image_tokens
+                request.prompt = np.concatenate(
+                    [np.zeros((n_img,), np.int32),
+                     np.asarray(request.prompt, np.int32)])
+                request.image_mask = np.arange(len(request.prompt)) < n_img
+            if len(request.prompt) < 1:
+                raise ValueError("empty prompt: there is no position to "
+                                 "sample the first token from")
+            self._bucket(len(request.prompt))  # reject overlong NOW
+            prompt_len = len(request.prompt)
         request.rid = self._next_rid
         self._next_rid += 1
         self._results[request.rid] = Result(
-            rid=request.rid, prompt_len=len(request.prompt), tokens=[],
+            rid=request.rid, prompt_len=prompt_len, tokens=[],
             t_submit=time.perf_counter(), t_first=0.0, t_done=0.0)
         self._queue.append(request)
         return request.rid
@@ -256,6 +315,42 @@ class ServingEngine:
         res.tokens.append(int(first[0, 0]))
         res.t_first = time.perf_counter()
 
+    def _admit_images(self, reqs: List[Request], slots: List[int]) -> None:
+        """Conv-family admission: ONE compiled forward classifies every
+        freshly-admitted image (rows zero-padded up to a power-of-two
+        bucket to bound compiles), then the class ids land in the rows'
+        results.  ``max_new_tokens == 1`` retires the rows at the next
+        fixpoint iteration — the decode step never traces for conv."""
+        bucket = 1
+        while bucket < len(reqs):
+            bucket *= 2
+        self._buckets_used.add(("img", bucket))
+        cfg = self.cfg
+        imgs = np.zeros((bucket, cfg.image_size, cfg.image_size,
+                         cfg.in_channels), np.float32)
+        for i, req in enumerate(reqs):
+            imgs[i] = req.image
+        if self.temperature == 0.0:
+            k = self.rng
+        else:
+            self.rng, k = jax.random.split(self.rng)
+        toks = _image_fn(cfg, self.temperature, self.top_k, bucket)(
+            self.params, jnp.asarray(imgs), k)
+        host = np.asarray(toks)
+        # slot surgery still runs (the conv cache is the empty pytree, so
+        # only pos moves) — rows read as occupied like any other family's
+        sub = models.DecodeState(cache={},
+                                 pos=jnp.ones((len(reqs),), jnp.int32))
+        self.state = models.write_slots(self.state, sub, slots)
+        self.last_tok = self.last_tok.at[jnp.asarray(slots)].set(
+            jnp.asarray(host[:len(reqs), None]))
+        now = time.perf_counter()
+        for i, (slot, req) in enumerate(zip(slots, reqs)):
+            self._active[slot] = req
+            res = self._results[req.rid]
+            res.tokens.append(int(host[i]))
+            res.t_first = now
+
     def _retire(self, slot: int, now: float) -> Result:
         req = self._active[slot]
         self._active[slot] = None
@@ -291,10 +386,18 @@ class ServingEngine:
                 if req is not None and self._hit_limits(req):
                     finished.append(self._retire(slot, now))
             admitted = False
+            batch: List[tuple] = []    # conv family admits as ONE batch
             for slot in range(self.slots):
                 if self._active[slot] is None and self._queue:
-                    self._admit(self._queue.popleft(), slot)
+                    req = self._queue.popleft()
+                    if self.cfg.family == "conv":
+                        batch.append((slot, req))
+                    else:
+                        self._admit(req, slot)
                     admitted = True
+            if batch:
+                self._admit_images([r for _, r in batch],
+                                   [s for s, _ in batch])
             if not admitted:
                 break
         if not any(self._active) and not self._queue:

@@ -131,10 +131,29 @@ def param_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh,
         return P(model_axis, None, None) if div(shape[0]) else P(None, None, None)
 
     # ---- alexnet ----
-    if re.search(r"convs/\d+/w$", path):
-        return P(None, None, None, model_axis) if div(shape[-1]) else P(*([None] * 4))
+    # out-channel sharding doubles as the paper's per-GPU group split:
+    # Cout is group-major, so when every shard holds WHOLE groups
+    # (g % m == 0; ungrouped convs just need divisibility) the grouped
+    # conv partitions with no cross-device channel traffic.  Splitting
+    # a group across shards is not just slow — XLA's SPMD convolution
+    # handler CHECK-fails on it, and a channel-sharded ACTIVATION feeding
+    # a grouped conv trips the same check, so the rule is global to the
+    # conv stack: if ANY grouped layer cannot nest with m, every conv in
+    # the net replicates (the fc tower still shards).
+    mc = re.search(r"convs/(\d+)/([wb])$", path)
+    if mc:
+        convs = getattr(cfg, "convs", None)
+        nest = convs is None or all(
+            cs.groups == 1 or cs.groups % m == 0 for cs in convs)
+        ok = div(shape[-1]) and nest
+        if mc.group(2) == "w":
+            return P(None, None, None, model_axis) if ok \
+                else P(*([None] * 4))
+        return P(model_axis) if ok else P(None)
     if re.search(r"fcs/\d+/w$", path):
         return P(None, model_axis) if div(shape[-1]) else P(None, None)
+    if re.search(r"fcs/\d+/b$", path):
+        return P(model_axis) if div(shape[-1]) else P(None)
 
     # norms, biases, lora adapters, scalars: replicated
     return P(*([None] * len(shape)))

@@ -1,0 +1,151 @@
+"""Property-based checks of the serving/kernel ARITHMETIC — the pure
+index math that parity tests only probe at a handful of points:
+
+* grouped-conv shape algebra (output spatial dims, parameter counts,
+  group-major channel layout) vs brute-force oracles,
+* the ring-cache slot/validity math (``slot_positions``) vs a literal
+  write-loop simulation of the ring.
+
+With hypothesis installed (requirements-dev.txt / CI) these explore the
+space; without it the ``@given`` tests skip and the seeded sweeps below
+keep the same oracles exercised on every bare-environment run."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs.alexnet import AlexNetConfig, ConvSpec
+from repro.kernels.decode_attention.ref import slot_positions
+
+
+# ------------------------------------------------------------- oracles ----
+
+def _conv_out_hw(hw, kernel, stride, pad):
+    return (hw + 2 * pad - kernel) // stride + 1
+
+
+def _check_shape_algebra(hw, kernel, stride, pad, cig, npg, groups):
+    """feature_hw / n_params vs brute force on a 1-conv net."""
+    cin, cout = cig * groups, npg * groups
+    out = _conv_out_hw(hw, kernel, stride, pad)
+    if out < 1:
+        with pytest.raises(ValueError):
+            AlexNetConfig(
+                name="p", image_size=hw, in_channels=cin, n_classes=3,
+                convs=(ConvSpec(cout, kernel, stride, pad, pool=False,
+                                lrn=False, groups=groups),),
+                fc_dim=4).feature_hw()
+        return
+    cfg = AlexNetConfig(
+        name="p", image_size=hw, in_channels=cin, n_classes=3,
+        convs=(ConvSpec(cout, kernel, stride, pad, pool=False, lrn=False,
+                        groups=groups),),
+        fc_dim=4)
+    assert cfg.feature_hw() == out
+    # brute-force param count: each output channel sees only its group
+    conv_params = kernel * kernel * cig * cout + cout
+    fc = out * out * cout * 4 + 4 + 4 * 4 + 4 + 4 * 3 + 3
+    assert cfg.n_params() == conv_params + fc
+
+
+def _check_group_major_layout(cig, npg, groups, kernel=1, hw=3, seed=0):
+    """The grouped conv's output channel layout == running each group's
+    conv separately and concatenating (group-major Cout) — pinned against
+    a per-group numpy loop, which is what makes out-channel sharding and
+    the weight slicing in sharding/specs.py correct."""
+    import jax
+    from repro.kernels.conv2d import ref
+    cin, cout = cig * groups, npg * groups
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (1, hw, hw, cin))
+    w = jax.random.normal(ks[1], (kernel, kernel, cig, cout)) * 0.3
+    got = np.asarray(ref.conv2d_ref(x, w, 1, 0, groups=groups))
+    for g in range(groups):
+        xs = x[..., g * cig:(g + 1) * cig]
+        wg = w[..., g * npg:(g + 1) * npg]
+        exp = np.asarray(ref.conv2d_ref(xs, wg, 1, 0))
+        np.testing.assert_allclose(got[..., g * npg:(g + 1) * npg], exp,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _check_ring_slots(pos, cap):
+    """slot_positions vs literally writing positions 0..pos into a ring."""
+    ring = -np.ones(cap, np.int64)
+    for t in range(pos + 1):
+        ring[t % cap] = t
+    sp = np.asarray(slot_positions(np.asarray([pos]), cap))[0]
+    valid = sp >= 0
+    # every valid slot holds exactly what the write loop left there
+    np.testing.assert_array_equal(sp[valid], ring[valid])
+    # validity == the write loop reached that slot
+    np.testing.assert_array_equal(valid, ring >= 0)
+    # invariants the decode kernels rely on
+    assert (sp <= pos).all()
+    assert (sp[valid] > pos - cap).all()            # within the window
+    assert (sp[valid] % cap == np.flatnonzero(valid)).all()
+
+
+def _check_window_mask(pos, cap, window):
+    """The sliding-window validity mask == brute force over positions."""
+    sp = np.asarray(slot_positions(np.asarray([pos]), cap))[0]
+    got = (sp >= 0) & (sp > pos - window)
+    exp = np.array([0 <= p and p > pos - window for p in sp])
+    np.testing.assert_array_equal(got, exp)
+
+
+# ------------------------------------------------- hypothesis explorers ----
+
+@settings(max_examples=200, deadline=None)
+@given(hw=st.integers(1, 40), kernel=st.integers(1, 11),
+       stride=st.integers(1, 4), pad=st.integers(0, 5),
+       cig=st.integers(1, 8), npg=st.integers(1, 8),
+       groups=st.integers(1, 4))
+def test_shape_algebra_property(hw, kernel, stride, pad, cig, npg, groups):
+    _check_shape_algebra(hw, kernel, stride, pad, cig, npg, groups)
+
+
+@settings(max_examples=50, deadline=None)
+@given(cig=st.integers(1, 5), npg=st.integers(1, 5),
+       groups=st.integers(1, 4), seed=st.integers(0, 7))
+def test_group_major_layout_property(cig, npg, groups, seed):
+    _check_group_major_layout(cig, npg, groups, seed=seed)
+
+
+@settings(max_examples=300, deadline=None)
+@given(pos=st.integers(0, 300), cap=st.integers(1, 64))
+def test_ring_slots_property(pos, cap):
+    _check_ring_slots(pos, cap)
+
+
+@settings(max_examples=200, deadline=None)
+@given(pos=st.integers(0, 200), cap=st.integers(1, 48),
+       window=st.integers(1, 64))
+def test_window_mask_property(pos, cap, window):
+    _check_window_mask(pos, cap, window)
+
+
+# ------------------------------------------ seeded always-on fallbacks ----
+
+def test_shape_algebra_seeded_sweep():
+    rs = np.random.default_rng(0)
+    for _ in range(60):
+        _check_shape_algebra(int(rs.integers(1, 40)),
+                             int(rs.integers(1, 11)),
+                             int(rs.integers(1, 4)), int(rs.integers(0, 5)),
+                             int(rs.integers(1, 8)), int(rs.integers(1, 8)),
+                             int(rs.integers(1, 4)))
+
+
+def test_group_major_layout_seeded_sweep():
+    for groups in (1, 2, 3, 4):
+        _check_group_major_layout(3, 2, groups)
+        _check_group_major_layout(1, 5, groups, seed=groups)
+
+
+def test_ring_slots_seeded_sweep():
+    rs = np.random.default_rng(1)
+    for cap in (1, 2, 3, 8, 16, 31):
+        for pos in {0, 1, cap - 1, cap, cap + 1, 3 * cap + 2,
+                    int(rs.integers(0, 200))}:
+            if pos >= 0:
+                _check_ring_slots(int(pos), cap)
+                _check_window_mask(int(pos), cap, int(rs.integers(1, 64)))

@@ -1,0 +1,118 @@
+"""Serving-engine edge cases around admission and slot surgery: prompts
+that fill the ring exactly, whole admission waves retiring inside one
+tick, and write_slots over the vision-family decode states."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import ALEXNET_FAITHFUL_SMOKE, ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.models import vision
+from repro.serving import Request, ServingEngine
+
+XLA = KernelPolicy(backend="xla")
+
+
+def _cfg(arch="olmo-1b", **over):
+    return dataclasses.replace(reduced(ARCHS[arch]), kernels=XLA, **over)
+
+
+def _params(cfg):
+    return models.init(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=ln) for ln in lengths]
+
+
+def test_submit_accepts_prompt_equal_to_capacity():
+    """A prompt of exactly ring capacity is admissible (the bucket list
+    is topped up to capacity) and must retire on its prefill token —
+    pos has reached the last position the cache can hold."""
+    cfg = _cfg()
+    eng = ServingEngine(_params(cfg), cfg, slots=2, capacity=16,
+                        buckets=(8,))
+    (full,) = _prompts(cfg, [16])
+    eng.submit(Request(prompt=full, max_new_tokens=4))
+    results = []
+    while eng._queue or any(r is not None for r in eng._active):
+        results.extend(eng.step())
+    assert len(results) == 1
+    assert len(results[0].tokens) == 1          # prefill token only
+    assert eng.decode_steps == 0                # no wrapped tick
+
+
+def test_admission_fixpoint_drains_whole_waves():
+    """Every slot freed by single-token requests refills within the SAME
+    step(): 3 waves x 2 slots of max_new=1 requests finish with zero
+    decode ticks, in one step call."""
+    cfg = _cfg()
+    eng = ServingEngine(_params(cfg), cfg, slots=2, capacity=32,
+                        buckets=(8,))
+    for p in _prompts(cfg, [5, 6, 7, 5, 6, 7]):
+        eng.submit(Request(prompt=p, max_new_tokens=1))
+    finished = eng.step()
+    assert len(finished) == 6                   # all waves drained
+    assert eng.decode_steps == 0
+    assert not eng._queue and not any(eng._active)
+
+
+def test_mixed_single_and_multi_token_admission():
+    """Single-token rows cycle through their slot while the long row
+    keeps decoding — the fixpoint never starves either kind."""
+    cfg = _cfg()
+    eng = ServingEngine(_params(cfg), cfg, slots=2, capacity=32,
+                        buckets=(8,))
+    prompts = _prompts(cfg, [5, 5, 5, 5, 5])
+    budgets = [6, 1, 1, 1, 1]
+    results = eng.run([Request(prompt=p, max_new_tokens=m)
+                       for p, m in zip(prompts, budgets)])
+    by_rid = {r.rid: r for r in results}
+    assert [len(by_rid[i].tokens) for i in range(5)] == budgets
+    assert eng.decode_steps == 5                # only the 6-token row ticks
+
+
+def test_write_slots_on_vlm_image_state():
+    """Slot surgery over a vlm prefill that consumed real image embeds:
+    the written slot carries the image-conditioned cache, others stay."""
+    cfg = _cfg("phi-3-vision-4.2b")
+    params = _params(cfg)
+    img = np.random.default_rng(3).standard_normal((20, 20, 3))
+    emb = vision.encode_image(cfg, img)
+    n = cfg.n_image_tokens
+    prompt = np.concatenate([np.zeros(n, np.int32),
+                             _prompts(cfg, [4])[0]])
+    mask = (np.arange(len(prompt)) < n)[None]
+    st = models.init_decode_state(cfg, 3, 32)
+    _, sub = models.prefill(params, cfg, jnp.asarray(prompt)[None], 32,
+                            image_embeds=jnp.asarray(emb)[None],
+                            image_mask=jnp.asarray(mask))
+    st2 = models.write_slots(st, sub, [1])
+    assert st2.pos.tolist() == [0, len(prompt), 0]
+    for (path, before), after, new in zip(
+            jax.tree_util.tree_leaves_with_path(st.cache),
+            jax.tree.leaves(st2.cache), jax.tree.leaves(sub.cache)):
+        ax = models._leaf_batch_axis(path)
+        before, after, new = (np.asarray(a) for a in (before, after, new))
+        idx = [slice(None)] * before.ndim
+        idx[ax] = 1
+        np.testing.assert_array_equal(after[tuple(idx)],
+                                      np.take(new, 0, axis=ax))
+        idx[ax] = 0
+        np.testing.assert_array_equal(after[tuple(idx)], before[tuple(idx)])
+
+
+def test_write_slots_on_conv_state_is_pos_only():
+    """The conv family's decode state is pure bookkeeping: an empty cache
+    pytree plus per-row pos — write_slots must handle the no-leaves
+    case."""
+    cfg = dataclasses.replace(ALEXNET_FAITHFUL_SMOKE, kernels=XLA)
+    st = models.init_decode_state(cfg, 4, 8)
+    sub = models.DecodeState(cache={}, pos=jnp.asarray([1, 1], jnp.int32))
+    st2 = models.write_slots(st, sub, [0, 3])
+    assert st2.cache == {}
+    assert st2.pos.tolist() == [1, 0, 0, 1]

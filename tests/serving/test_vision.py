@@ -1,0 +1,159 @@
+"""Vision through the continuous-batching engine: conv-family image
+classification rides the SAME admission loop as token generation (one
+batched compiled forward per admission wave, zero decode ticks), and vlm
+requests carrying raw pixels prefill exactly like the explicit
+image-embeds API."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_child
+from repro import models
+from repro.configs import ALEXNET_FAITHFUL_SMOKE, ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.models import alexnet, vision
+from repro.serving import Request, ServingEngine
+
+XLA = KernelPolicy(backend="xla")
+CONV_CFG = dataclasses.replace(ALEXNET_FAITHFUL_SMOKE, kernels=XLA)
+
+
+def _images(cfg, n, seed=0):
+    rs = np.random.default_rng(seed)
+    return [rs.standard_normal((cfg.image_size, cfg.image_size,
+                                cfg.in_channels)) for _ in range(n)]
+
+
+def test_conv_engine_classifies_matching_argmax():
+    """10 requests through 4 slots: every result is the standalone
+    argmax class, in ONE token, with NO decode ticks spent."""
+    cfg = CONV_CFG
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    imgs = _images(cfg, 10)
+    eng = ServingEngine(params, cfg, slots=4, capacity=32)
+    results = eng.run([Request(image=im) for im in imgs])
+    assert len(results) == 10
+    assert eng.decode_steps == 0          # classification never decodes
+    ref = np.asarray(jnp.argmax(alexnet.forward(
+        params, cfg, jnp.asarray(np.stack(imgs), jnp.float32)), axis=-1))
+    for r in results:
+        assert r.tokens == [int(ref[r.rid])], (r.rid, r.tokens)
+        assert r.prompt_len == 0
+        assert r.t_first >= r.t_submit and r.t_done >= r.t_first
+    # bucketed compiles: 4-slot waves pad to the pow-2 image buckets
+    assert eng._buckets_used <= {("img", 1), ("img", 2), ("img", 4)}
+
+
+def test_conv_engine_rejects_bad_images():
+    cfg = CONV_CFG
+    eng = ServingEngine(models.init(jax.random.PRNGKey(0), cfg), cfg,
+                        slots=2, capacity=16)
+    with pytest.raises(ValueError, match="image of shape"):
+        eng.submit(Request(image=np.zeros((3, 3, 3))))
+    with pytest.raises(ValueError, match="image of shape"):
+        eng.submit(Request(prompt=[1, 2, 3]))      # tokens are not images
+
+
+def test_conv_engine_state_stays_consistent():
+    """write_slots on the empty conv cache: pos moves, nothing breaks,
+    and a second wave reuses the slots cleanly."""
+    cfg = CONV_CFG
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, slots=2, capacity=16)
+    first = eng.run([Request(image=im) for im in _images(cfg, 2, seed=1)])
+    second = eng.run([Request(image=im) for im in _images(cfg, 2, seed=2)])
+    assert len(first) == 2 and len(second) == 2
+    assert eng._results == {}             # retired results are pruned
+    assert eng.state.cache == {}          # conv carries no decode state
+
+
+def test_vlm_raw_image_matches_explicit_embeds():
+    """Request(image=...) == the pre-existing explicit-embeds API: same
+    encoder, same prompt layout, same greedy tokens."""
+    cfg = dataclasses.replace(reduced(ARCHS["phi-3-vision-4.2b"]),
+                              kernels=XLA)
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    rs = np.random.default_rng(0)
+    img = rs.standard_normal((24, 24, 3))
+    prompt = rs.integers(1, cfg.vocab_size, size=6)
+
+    eng_a = ServingEngine(params, cfg, slots=2, capacity=64)
+    (ra,) = eng_a.run([Request(prompt=prompt.copy(), image=img,
+                               max_new_tokens=5)])
+
+    n = cfg.n_image_tokens
+    p2 = np.concatenate([np.zeros(n, np.int32), prompt])
+    eng_b = ServingEngine(params, cfg, slots=2, capacity=64)
+    (rb,) = eng_b.run([Request(prompt=p2,
+                               image_embeds=vision.encode_image(cfg, img),
+                               image_mask=np.arange(len(p2)) < n,
+                               max_new_tokens=5)])
+    assert ra.tokens == rb.tokens
+    assert ra.prompt_len == rb.prompt_len == n + len(prompt)
+
+
+def test_encode_image_contract():
+    cfg = reduced(ARCHS["phi-3-vision-4.2b"])
+    img = np.random.default_rng(1).standard_normal((17, 23, 3))
+    emb = vision.encode_image(cfg, img)
+    assert emb.shape == (cfg.n_image_tokens, cfg.d_model)
+    assert emb.dtype == np.float32
+    # deterministic: admission-time encoding is reproducible
+    np.testing.assert_array_equal(emb, vision.encode_image(cfg, img))
+    # distinct images produce distinct embeddings
+    other = vision.encode_image(cfg, img + 1.0)
+    assert not np.allclose(emb, other)
+    # grayscale input is accepted
+    assert vision.encode_image(cfg, img[..., 0]).shape == emb.shape
+    with pytest.raises(ValueError, match="image"):
+        vision.encode_image(cfg, np.zeros((4,)))
+
+
+def test_conv_family_has_no_decode_path():
+    """The decode contract stays honest: conv exposes an (empty) decode
+    state for slot surgery, but prefill/decode_step still refuse."""
+    cfg = CONV_CFG
+    st = models.init_decode_state(cfg, 3, 16)
+    assert st.cache == {} and st.pos.tolist() == [0, 0, 0]
+    st2 = models.write_slots(
+        st, models.DecodeState(cache={}, pos=jnp.ones((1,), jnp.int32)),
+        [2])
+    assert st2.pos.tolist() == [0, 0, 1]
+    with pytest.raises(NotImplementedError):
+        models.prefill(None, cfg, jnp.zeros((1, 4), jnp.int32), 16)
+    with pytest.raises(NotImplementedError):
+        models.decode_step(None, cfg, st, jnp.zeros((1, 1), jnp.int32))
+
+
+def test_mesh_conv_engine_matches_single_device():
+    """2-device replica mesh serves images identically to 1 device."""
+    run_child("""
+import dataclasses
+import jax, numpy as np
+from repro import models
+from repro.configs import ALEXNET_FAITHFUL_SMOKE
+from repro.kernels.common import KernelPolicy
+from repro.launch.mesh import make_replica_mesh
+from repro.serving import Request, ServingEngine
+
+cfg = dataclasses.replace(ALEXNET_FAITHFUL_SMOKE,
+                          kernels=KernelPolicy(backend='xla'))
+params = models.init(jax.random.PRNGKey(0), cfg)
+rs = np.random.default_rng(0)
+imgs = [rs.standard_normal((cfg.image_size, cfg.image_size,
+                            cfg.in_channels)) for _ in range(6)]
+
+def run(mesh):
+    eng = ServingEngine(params, cfg, slots=2, capacity=16, mesh=mesh)
+    res = eng.run([Request(image=im) for im in imgs])
+    assert eng.decode_steps == 0
+    return {r.rid: r.tokens for r in res}
+
+a = run(make_replica_mesh(2))
+b = run(None)
+assert a == b, (a, b)
+print('mesh-vision OK')
+""", devices=2)

@@ -1,0 +1,126 @@
+"""Golden-trace regression: 20-step fp32 loss traces for four zoo
+members, pinned to committed JSON files.  ANY numerics change — a kernel
+edit, an init reshuffle, an op-ordering 'refactor' — shows up as drift
+here before it can silently corrupt a training run.
+
+Regenerate deliberately with::
+
+    REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/train_loop/test_golden_traces.py
+
+and commit the diff with an explanation of WHY the numbers moved.
+
+The traces are recorded on the XLA backend.  ``REPRO_GOLDEN_PALLAS=1``
+(the CI vision job) re-runs every trace through the Pallas kernel path —
+same golden files, looser tolerance (fp32 formulation noise between the
+fused kernels and lax), proving the two backends train the same model.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import (ALEXNET_FAITHFUL_SMOKE, ALEXNET_SMOKE, ARCHS,
+                           reduced)
+from repro.kernels.common import KernelPolicy
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "golden")
+UPDATE = bool(os.environ.get("REPRO_UPDATE_GOLDEN"))
+PALLAS = bool(os.environ.get("REPRO_GOLDEN_PALLAS"))
+
+STEPS = 20
+LR, MOMENTUM = 0.01, 0.9
+
+# fp32 smoke-sized members: the paper's own net in both flavours plus a
+# dense-attention and a recurrent LM
+IMAGE_SIZE = 48     # smallest hw the smoke conv stack supports cleanly
+
+
+def _alexnet(cfg):
+    return dataclasses.replace(cfg, image_size=IMAGE_SIZE, dtype="float32")
+
+
+def _lm(name):
+    return dataclasses.replace(reduced(ARCHS[name]), dtype="float32")
+
+
+TRACES = {
+    "alexnet_legacy": lambda: _alexnet(ALEXNET_SMOKE),
+    "alexnet_faithful": lambda: _alexnet(ALEXNET_FAITHFUL_SMOKE),
+    "olmo_1b": lambda: _lm("olmo-1b"),
+    "rwkv6_7b": lambda: _lm("rwkv6-7b"),
+}
+
+
+def _batch(cfg, rng, step):
+    k = jax.random.fold_in(rng, step)
+    if cfg.family == "conv":
+        return {"images": jax.random.normal(
+                    k, (4, cfg.image_size, cfg.image_size,
+                        cfg.in_channels), jnp.float32),
+                "labels": jax.random.randint(jax.random.fold_in(k, 1),
+                                             (4,), 0, cfg.n_classes)}
+    toks = jax.random.randint(k, (4, 32), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+def _trace(cfg):
+    """Plain jitted SGD-momentum — deliberately none of the param-avg
+    machinery, so this pins MODEL numerics, not engine numerics."""
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    mom = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, mom, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: models.loss_fn(p, cfg, batch))(params)
+        mom = jax.tree.map(lambda m, d: MOMENTUM * m + d, mom, g)
+        params = jax.tree.map(lambda p, m: p - LR * m, params, mom)
+        return params, mom, loss
+
+    rng = jax.random.PRNGKey(7)
+    losses = []
+    for i in range(STEPS):
+        params, mom, loss = step(params, mom, _batch(cfg, rng, i))
+        losses.append(float(loss))
+    return losses
+
+
+def _golden_path(name):
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_golden_trace(name):
+    backend = "pallas" if PALLAS else "xla"
+    cfg = dataclasses.replace(TRACES[name](),
+                              kernels=KernelPolicy(backend=backend))
+    losses = _trace(cfg)
+    assert all(np.isfinite(losses)), losses
+    path = _golden_path(name)
+    if UPDATE:
+        with open(path, "w") as f:
+            json.dump({"name": name, "steps": STEPS, "lr": LR,
+                       "momentum": MOMENTUM, "backend": "xla",
+                       "losses": losses}, f, indent=1)
+            f.write("\n")
+        pytest.skip(f"regenerated {path}")
+    if not os.path.exists(path):
+        pytest.fail(f"{path} missing — run with REPRO_UPDATE_GOLDEN=1 "
+                    "and commit the trace")
+    with open(path) as f:
+        golden = json.load(f)
+    drift = float(np.max(np.abs(np.asarray(losses)
+                                - np.asarray(golden["losses"]))))
+    # xla must reproduce the recorded trace to 1e-4; the pallas rerun of
+    # the SAME files tolerates fused-vs-lax fp32 formulation noise
+    tol = 5e-3 if PALLAS else 1e-4
+    assert drift <= tol, \
+        (f"{name}: max loss drift {drift:.2e} > {tol:.0e} over {STEPS} "
+         f"steps (backend={backend}) — if this change is intentional, "
+         "regenerate with REPRO_UPDATE_GOLDEN=1 and justify it")
