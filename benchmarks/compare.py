@@ -1,0 +1,84 @@
+"""Diff the two newest BENCH_<date>.json trajectory files.
+
+    PYTHONPATH=src python -m benchmarks.compare [--threshold 0.10]
+    PYTHONPATH=src python -m benchmarks.compare OLD.json NEW.json
+
+Rows are matched by name; each one reports the us_per_call ratio
+new/old.  Rows slower by more than ``--threshold`` (default 10%) are
+flagged as regressions and the exit code is 1 — the same contract the
+bench suites themselves use, applied across PRs instead of within one
+run.  Added/removed rows are listed but never fail the diff (suites
+grow every PR; absolute times on shared CI hosts drift, which is why
+the threshold is generous and the flag is advisory — a flagged row
+means "explain or re-measure", not "revert").
+
+``.partial.json`` files (fast/--only runs) are skipped when globbing:
+they are subsets measured under different iteration counts, so ratios
+against them are meaningless.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def newest_pair() -> tuple:
+    files = sorted(f for f in glob.glob(os.path.join(HERE, "BENCH_*.json"))
+                   if not f.endswith(".partial.json"))
+    if len(files) < 2:
+        sys.exit("need two BENCH_<date>.json files to compare; found "
+                 f"{[os.path.basename(f) for f in files]}")
+    return files[-2], files[-1]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="OLD.json NEW.json (default: two newest)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="flag rows slower by more than this fraction")
+    args = ap.parse_args()
+    if args.files and len(args.files) != 2:
+        ap.error("pass exactly two files (or none for the newest pair)")
+    old_path, new_path = args.files or newest_pair()
+    old, new = load_rows(old_path), load_rows(new_path)
+    print(f"# old: {os.path.basename(old_path)}  ({len(old)} rows)")
+    print(f"# new: {os.path.basename(new_path)}  ({len(new)} rows)")
+
+    regressions = []
+    print(f"{'row':44s} {'old_us':>12s} {'new_us':>12s} {'ratio':>7s}")
+    for name in sorted(old.keys() & new.keys()):
+        o, n = old[name]["us_per_call"], new[name]["us_per_call"]
+        ratio = n / o if o else float("inf")
+        mark = ""
+        if ratio > 1 + args.threshold:
+            mark = "  <-- REGRESSION"
+            regressions.append((name, ratio))
+        print(f"{name:44s} {o:12.1f} {n:12.1f} {ratio:6.2f}x{mark}")
+    for name in sorted(new.keys() - old.keys()):
+        print(f"{name:44s} {'-':>12s} {new[name]['us_per_call']:12.1f}   new")
+    for name in sorted(old.keys() - new.keys()):
+        print(f"{name:44s} {old[name]['us_per_call']:12.1f} {'-':>12s}   removed")
+
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed more than "
+              f"{args.threshold:.0%}:")
+        for name, ratio in sorted(regressions, key=lambda r: -r[1]):
+            print(f"  {name}  {ratio:.2f}x")
+        sys.exit(1)
+    print(f"\nno regressions above {args.threshold:.0%}")
+
+
+if __name__ == "__main__":
+    main()

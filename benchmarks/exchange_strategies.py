@@ -1,13 +1,27 @@
 """Paper Fig. 2 analogue: weight exchange-and-average strategies.
 
-Two tables over ``REPRO_DEVICES`` host-device replicas (default 4):
+Three tables:
 
 1. bare exchange of an AlexNet-sized pytree per strategy — wall time + the
    collective ops each lowers to (from compiled HLO), the communication-
    schedule axis the paper explored with P2P copies on a PCIe switch;
 2. full mesh-engine train step (shard_map, AlexNet-smoke) per strategy —
    end-to-end step time with the exchange on the critical path, the
-   Table 1-style number.
+   Table 1-style number — plus the (delay, compression) grid on the
+   all_reduce strategy: delay=1 (one-step-stale overlapped exchange) x
+   {none, bf16, topk} wire compression;
+3. ``exchange_scaling`` — the replica-scaling curve this PR exists for:
+   reference engine, sequential per-replica execution
+   (``replica_exec="scan"``), fixed global batch, R in {1, 2, 4}.  At
+   fixed global batch each replica's fwd/bwd runs at batch G/R, whose
+   smaller working set is more cache-resident — the host analogue of
+   the paper's multi-GPU scaling.  Timing is min-of-reps with the
+   configs interleaved round-robin inside each rep, so background-load
+   drift hits every config equally instead of whichever one ran during
+   a busy window.
+
+Tables 1-2 run over ``REPRO_DEVICES`` host-device replicas (default 4);
+table 3 runs the reference engine in a single-device child.
 
     REPRO_DEVICES=4 PYTHONPATH=src python -m benchmarks.run \
         --only exchange_strategies
@@ -61,8 +75,8 @@ for strat in strats:
 CHILD_STEP = """
 import time, jax, jax.numpy as jnp, numpy as np
 from repro.configs import ALEXNET_SMOKE
-from repro.core import (init_param_avg_state, make_mesh_param_avg_step,
-                        reshape_for_replicas)
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_mesh_param_avg_step, reshape_for_replicas)
 from repro.launch.mesh import make_replica_mesh
 from repro.models import alexnet
 from repro.optim import schedules
@@ -82,16 +96,23 @@ batch = reshape_for_replicas(
     R)
 strats = ("all_reduce", "ring", "pairwise", "none") if R & (R - 1) == 0 \
     else ("all_reduce", "ring", "none")
-for strat in strats:
+grid = [(s, ExchangeConfig(strategy=s)) for s in strats]
+# the overlapped/compressed variants on the all_reduce strategy
+grid += [("all_reduce/delay1/" + c.compression, c) for c in (
+    ExchangeConfig(delay=1),
+    ExchangeConfig(delay=1, compression="bf16"),
+    ExchangeConfig(delay=1, compression="topk", topk_frac=0.01))]
+for name, exch in grid:
     state = init_param_avg_state(jax.random.PRNGKey(0),
-                                 lambda r: alexnet.init(r, cfg), opt, R)
+                                 lambda r: alexnet.init(r, cfg), opt, R,
+                                 exchange=exch)
     state = jax.device_put(state, replica_sharding(state, mesh,
                                                    replica_axes=("data",)))
     b = jax.device_put(batch, replica_sharding(batch, mesh,
                                                replica_axes=("data",)))
     step = jax.jit(make_mesh_param_avg_step(loss, opt,
                                             schedules.constant(0.01),
-                                            mesh=mesh, strategy=strat,
+                                            mesh=mesh, strategy=exch,
                                             replica_axes=("data",)),
                    donate_argnums=0)   # state updates in place
     state, _ = step(state, b)          # compile + warm
@@ -101,7 +122,63 @@ for strat in strats:
         state, l = step(state, b)
     jax.block_until_ready(state)
     us = (time.time() - t0) / 5 * 1e6
-    print(f"STEP,{strat},{us:.1f},replicas={R};engine=mesh")
+    print(f"STEP,{name},{us:.1f},replicas={R};engine=mesh")
+"""
+
+CHILD_SCALING = """
+import os, time, jax, numpy as np
+from repro.configs import ALEXNET_SMOKE
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_param_avg_step, reshape_for_replicas)
+from repro.models import alexnet
+from repro.optim.optimizers import sgd_momentum
+
+FAST = os.environ.get("REPRO_BENCH_FAST") == "1"
+G = 128 if FAST else 512          # global batch, fixed across R
+REPS, ITERS = (3, 1) if FAST else (8, 2)
+R_GRID = (1, 4) if FAST else (1, 2, 4)
+COMPS = ("none",) if FAST else ("none", "bf16", "topk")
+
+cfg = ALEXNET_SMOKE
+opt = sgd_momentum()
+loss_fn = lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"])
+rng = np.random.default_rng(0)
+
+grid = [("delay0/none", 1, ExchangeConfig())]
+for comp in COMPS:
+    exch = ExchangeConfig(delay=1, compression=comp,
+                          topk_frac=0.01 if comp == "topk" else 1.0)
+    for R in R_GRID:
+        grid.append((f"delay1/{comp}", R, exch))
+
+runs = []
+for desc, R, exch in grid:
+    host = {"images": rng.normal(size=(G, cfg.image_size, cfg.image_size,
+                                       3)).astype(np.float32),
+            "labels": rng.integers(0, cfg.n_classes, G).astype(np.int32)}
+    state = init_param_avg_state(jax.random.PRNGKey(0),
+                                 lambda r: alexnet.init(r, cfg), opt, R,
+                                 exchange=exch)
+    batch = jax.device_put(reshape_for_replicas(host, R))
+    step = jax.jit(make_param_avg_step(loss_fn, opt, lambda s: 0.01,
+                                       strategy=exch, replica_exec="scan"),
+                   donate_argnums=0)
+    state, _ = step(state, batch)          # compile + warm
+    jax.block_until_ready(state.params)
+    runs.append([desc, R, step, state, batch, []])
+# interleaved min-of-reps (see module docstring)
+for rep in range(REPS):
+    for r in runs:
+        t0 = time.perf_counter()
+        for _ in range(ITERS):
+            r[3], l = r[2](r[3], r[4])
+        jax.block_until_ready(r[3].params)
+        r[5].append((time.perf_counter() - t0) / ITERS)
+base = min(runs[0][5])
+for desc, R, _, _, _, ts in runs:
+    t = min(ts)
+    print(f"SCALE,{desc}/{R}rep,{t * 1e6:.1f},"
+          f"speedup_vs_sync_1rep={base / t:.3f}x;G={G};exec=scan")
 """
 
 
@@ -123,10 +200,17 @@ def main():
             rows.append((strat, float(us)))
     if rows:                      # human-readable per-strategy table
         base = dict(rows).get("none")
-        print("# strategy     step_us    exchange_overhead_vs_none")
+        print("# strategy                     step_us  overhead_vs_none")
         for strat, us in rows:
             ovh = f"{us - base:+.1f}us" if base else "n/a"
-            print(f"# {strat:12s} {us:9.1f}  {ovh}")
+            print(f"# {strat:28s} {us:9.1f}  {ovh}")
+    # replica-scaling curve (single-device child; the reference engine
+    # lays replicas on a leading axis, no fake XLA devices needed)
+    out = run_subprocess_bench(CHILD_SCALING, devices=1, timeout=900)
+    for line in out.splitlines():
+        if line.startswith("SCALE"):
+            _, name, us, derived = line.split(",", 3)
+            emit(f"exchange_scaling/{name}", float(us), derived)
 
 
 if __name__ == "__main__":

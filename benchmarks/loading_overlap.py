@@ -1,8 +1,13 @@
 """Paper Fig. 1 analogue: parallel data loading overlap, isolated.
 
 Measures steady-state step time with the loader (fetch + preprocess +
-device_put) either overlapped (prefetch=2, the paper's double buffer) or
-serial (prefetch=0).  derived reports the hidden-latency fraction.
+device_put) serial (prefetch=0), overlapped through the handoff queue
+(prefetch=2, the paper's double buffer), or overlapped into rotating
+preallocated pinned buffers (``staging="pinned"``, the paper's Fig. 1
+taken literally — see data.pipeline.StagedPinnedLoader).  derived
+reports the hidden-latency fraction plus the trainer-side stall
+(``stall_ms``, time blocked in ``next(loader)`` per step — the same
+quantity the session logs as ``stage_wait_ms``).
 
 Also times the crop+flip host transform both ways (``loading/crop_*``):
 the per-image block-copy loop vs the vectorized fancy-indexing gather.
@@ -20,12 +25,13 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.configs import ALEXNET_SMOKE
-from repro.data import PrefetchLoader, synthetic
+from repro.data import make_loader, synthetic
 from repro.data.preprocess import make_image_preprocess, random_crop_flip
 from repro.models import alexnet
 
 
-def run(prefetch: int, steps: int = 15) -> float:
+def run(prefetch: int, steps: int = 15, staging: str = "queue"):
+    """Returns (s_per_step, trainer_stall_ms_per_step)."""
     cfg = ALEXNET_SMOKE
     params = alexnet.init(jax.random.PRNGKey(0), cfg)
 
@@ -39,18 +45,24 @@ def run(prefetch: int, steps: int = 15) -> float:
     mean = synthetic.mean_image(
         synthetic.blob_images(10, 64, cfg.image_size + 8, seed=1), 2)
     prep = make_image_preprocess(mean, cfg.image_size, seed=0)
-    loader = PrefetchLoader(
+    loader = make_loader(
         synthetic.blob_images(10, 64, cfg.image_size + 8, seed=0),
-        prefetch=prefetch, preprocess=prep,
+        prefetch=prefetch, staging=staging, preprocess=prep,
         device_put=lambda b: jax.device_put(
             {k: jnp.asarray(v) for k, v in b.items()}))
-    jax.block_until_ready(fwd(params, next(loader)))      # compile
+    loss = fwd(params, next(loader))                      # compile
+    loader.fence(loss)
+    jax.block_until_ready(loss)
+    wait0 = loader.wait_ms_total
     t0 = time.time()
     for i, batch in zip(range(steps), loader):
-        jax.block_until_ready(fwd(params, batch))
+        loss = fwd(params, batch)
+        loader.fence(loss)
+        jax.block_until_ready(loss)
     dt = (time.time() - t0) / steps
+    stall = (loader.wait_ms_total - wait0) / steps
     loader.close()
-    return dt
+    return dt, stall
 
 
 def crop_bench(batch: int = 256, size: int = 235, crop: int = 227):
@@ -67,11 +79,14 @@ def crop_bench(batch: int = 256, size: int = 235, crop: int = 227):
 
 
 def main():
-    serial = run(prefetch=0)
-    overlap = run(prefetch=2)
-    emit("loading/serial", serial * 1e6, "")
+    serial, s_stall = run(prefetch=0)
+    overlap, o_stall = run(prefetch=2)
+    pinned, p_stall = run(prefetch=2, staging="pinned")
+    emit("loading/serial", serial * 1e6, f"stall_ms={s_stall:.1f}")
     emit("loading/overlapped", overlap * 1e6,
-         f"overlap_gain={serial / overlap:.2f}x")
+         f"overlap_gain={serial / overlap:.2f}x;stall_ms={o_stall:.1f}")
+    emit("loading/staged_pinned", pinned * 1e6,
+         f"overlap_gain={serial / pinned:.2f}x;stall_ms={p_stall:.1f}")
     crop_bench()
 
 

@@ -16,6 +16,17 @@ A donation A/B pair (same config, ``donate_argnums=0`` on vs off) is
 also emitted: the donated step must be no slower than the non-donated
 baseline.  Set ``REPRO_BENCH_FAST=1`` for a 1-replica prefetch-only
 smoke (CI) — both backends still run.
+
+``table1/xla/<R>rep/overlap`` rows measure the PR 7 recipe end-to-end
+(parallel loading + pinned staging + ``delay=1`` overlapped exchange +
+sequential per-replica execution) at global batch 512 against the
+pre-PR serial/synchronous 1-replica path at the same batch;
+``table1/speedup_overlap/<R>rep/parload`` carries the derived speedup
+(CI asserts the 4-replica row stays above 1.0 in fast mode).  All
+overlap configs run interleaved in ONE child process with min-of-reps
+timing: this host has a single physical core under background load, so
+two configs measured in separate subprocesses can land in differently
+loaded windows and drown the few-percent locality signal in noise.
 """
 from __future__ import annotations
 
@@ -27,8 +38,9 @@ CHILD = """
 import time, jax, jax.numpy as jnp
 import numpy as np
 from repro.configs import ALEXNET_SMOKE, ALEXNET_FAITHFUL_SMOKE
-from repro.core import init_param_avg_state, make_param_avg_step, reshape_for_replicas
-from repro.data import PrefetchLoader, synthetic
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_param_avg_step, reshape_for_replicas)
+from repro.data import make_loader, synthetic
 from repro.data.preprocess import make_image_preprocess
 from repro.models import alexnet
 from repro.optim import schedules
@@ -40,38 +52,109 @@ BACKEND = "__BACKEND__"
 DONATE = __DONATE__
 ITERS = __ITERS__
 cfg = ALEXNET_FAITHFUL_SMOKE if __FAITHFUL__ else ALEXNET_SMOKE
-GLOBAL_BATCH = 64
+GLOBAL_BATCH = __GBATCH__
+EXCH = ExchangeConfig(delay=__DELAY__)
+EXEC = "__EXEC__"
+STAGING = "__STAGING__"
 opt = sgd_momentum()
-state = init_param_avg_state(jax.random.PRNGKey(0), lambda r: alexnet.init(r, cfg), opt, R)
+state = init_param_avg_state(jax.random.PRNGKey(0), lambda r: alexnet.init(r, cfg), opt, R,
+                             exchange=EXCH)
 step = jax.jit(make_param_avg_step(
     lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"], conv_backend=BACKEND),
-    opt, schedules.constant(0.01)),
+    opt, schedules.constant(0.01), strategy=EXCH, replica_exec=EXEC),
     donate_argnums=(0,) if DONATE else ())
 mean = synthetic.mean_image(synthetic.blob_images(10, GLOBAL_BATCH, cfg.image_size + 8, seed=1), 2)
 prep = make_image_preprocess(mean, cfg.image_size, seed=0)
-src = map(lambda b: reshape_for_replicas({k: jnp.asarray(v) for k, v in prep(b).items()}, R),
+src = map(lambda b: reshape_for_replicas({k: np.asarray(v) for k, v in prep(b).items()}, R),
           synthetic.blob_images(10, GLOBAL_BATCH, cfg.image_size + 8, seed=0))
-loader = PrefetchLoader(src, prefetch=PREFETCH)
-# warmup
-state, _ = step(state, next(loader))
+loader = make_loader(src, prefetch=PREFETCH, staging=STAGING)
+# warmup; the fence token must be a non-donated output (loss), never
+# part of the state the next call donates
+state, loss = step(state, next(loader))
+loader.fence(loss)
 jax.block_until_ready(state.params)
 t0 = time.time()
 for i in range(ITERS):
     state, loss = step(state, next(loader))
+    loader.fence(loss)
 jax.block_until_ready(state.params)
 print("RESULT", (time.time() - t0) * 20 / ITERS)
 loader.close()
 """
 
 
+CHILD_OVERLAP = """
+import os, time, jax, numpy as np
+from repro.configs import ALEXNET_SMOKE
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_param_avg_step, reshape_for_replicas)
+from repro.data import make_loader, synthetic
+from repro.data.preprocess import make_image_preprocess
+from repro.models import alexnet
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+
+FAST = os.environ.get("REPRO_BENCH_FAST") == "1"
+G = 512                              # per-replica batch G/R spans the
+R_GRID = (1, 4) if FAST else (1, 2, 4)   # cache-locality cliff
+REPS, ITERS = (4, 2)
+cfg = ALEXNET_SMOKE
+opt = sgd_momentum()
+mean = synthetic.mean_image(
+    synthetic.blob_images(4, G, cfg.image_size + 8, seed=1), 2)
+prep = make_image_preprocess(mean, cfg.image_size, seed=0)
+N_BATCH = REPS * ITERS + 2           # warmup + timed draws per config
+
+configs = [("base", 1, 0, "queue", ExchangeConfig(), "vmap")]
+for R in R_GRID:
+    configs.append((str(R), R, 2, "pinned", ExchangeConfig(delay=1),
+                    "scan"))
+runs = []
+for name, R, prefetch, staging, exch, exec_ in configs:
+    state = init_param_avg_state(jax.random.PRNGKey(0),
+                                 lambda r: alexnet.init(r, cfg), opt, R,
+                                 exchange=exch)
+    step = jax.jit(make_param_avg_step(
+        lambda p, b: alexnet.loss_fn(p, cfg, b["images"], b["labels"]),
+        opt, schedules.constant(0.01), strategy=exch, replica_exec=exec_),
+        donate_argnums=0)
+    src = map(lambda b, R=R: reshape_for_replicas(prep(b), R),
+              synthetic.blob_images(N_BATCH, G, cfg.image_size + 8, seed=0))
+    loader = make_loader(src, prefetch=prefetch, staging=staging)
+    state, loss = step(state, next(loader))      # compile + warm
+    loader.fence(loss)
+    jax.block_until_ready(state.params)
+    runs.append([name, step, state, loader, []])
+for rep in range(REPS):                          # interleaved min-of-reps
+    for r in runs:
+        name, step, state, loader, ts = r
+        t0 = time.perf_counter()
+        for _ in range(ITERS):
+            state, loss = step(state, next(loader))
+            loader.fence(loss)
+        jax.block_until_ready(state.params)
+        ts.append((time.perf_counter() - t0) / ITERS)
+        r[2] = state
+for name, _, _, loader, ts in runs:
+    loader.close()
+    print("OVR,%s,%.4f" % (name, min(ts) * 20))   # s per 20 iterations
+"""
+
+
 def _run(backend: str, replicas: int, prefetch: int, donate: bool = True,
-         iters: int = 20, faithful: bool = False) -> float:
+         iters: int = 20, faithful: bool = False, gbatch: int = 64,
+         delay: int = 0, exec_: str = "vmap",
+         staging: str = "queue") -> float:
     code = (CHILD.replace("__REPLICAS__", str(replicas))
             .replace("__PREFETCH__", str(prefetch))
             .replace("__BACKEND__", backend)
             .replace("__DONATE__", str(int(donate)))
             .replace("__ITERS__", str(iters))
-            .replace("__FAITHFUL__", str(int(faithful))))
+            .replace("__FAITHFUL__", str(int(faithful)))
+            .replace("__GBATCH__", str(gbatch))
+            .replace("__DELAY__", str(delay))
+            .replace("__EXEC__", exec_)
+            .replace("__STAGING__", staging))
     out = run_subprocess_bench(code, devices=replicas)
     return float([ln for ln in out.splitlines()
                   if ln.startswith("RESULT")][0].split()[1])
@@ -103,6 +186,30 @@ def main():
             emit(f"table1/speedup/{r}rep/"
                  f"{'parload' if p else 'serial'}",
                  secs / 20 * 1e6, f"speedup_vs_serial1={base / secs:.2f}x")
+
+    # overlap rows: the PR's combined recipe — parallel loading + pinned
+    # double-buffered staging + one-step-stale exchange + sequential
+    # per-replica execution — against the pre-PR path (1 replica, serial
+    # loading, synchronous exchange) at the SAME global batch.  One
+    # interleaved child (see module docstring).
+    out = run_subprocess_bench(CHILD_OVERLAP, devices=1, timeout=900)
+    o_base = None
+    for line in out.splitlines():
+        if not line.startswith("OVR,"):
+            continue
+        _, name, secs = line.split(",", 2)
+        secs = float(secs)
+        if name == "base":
+            o_base = secs
+            emit("table1/xla/1rep/overlap_base", o_base / 20 * 1e6,
+                 "s_per_20it=%.2f;G=512;serial+sync" % o_base)
+        else:
+            r = int(name)
+            emit(f"table1/xla/{r}rep/overlap", secs / 20 * 1e6,
+                 f"s_per_20it={secs:.2f};G=512;delay1+pinned+scan",
+                 replicas=r)
+            emit(f"table1/speedup_overlap/{r}rep/parload", secs / 20 * 1e6,
+                 f"speedup_vs_serial1={o_base / secs:.2f}x")
 
     # faithful-vs-legacy: the paper's grouped net (conv2/4/5 split into
     # 2 groups + LRN) against the legacy ungrouped smoke net — grouping

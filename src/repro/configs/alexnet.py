@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from repro.core.param_avg import ExchangeConfig
 from repro.kernels.common import KernelPolicy
 
 
@@ -68,6 +69,8 @@ class AlexNetConfig:
     # same KernelPolicy the LM zoo carries: conv2d resolves xla|pallas|
     # pallas_im2col_ref through it when the forward gets no explicit backend
     kernels: KernelPolicy = KernelPolicy()
+    # replica exchange policy, same carriage as ModelConfig.exchange
+    exchange: ExchangeConfig = ExchangeConfig()
     dtype: str = "float32"
     citation: str = "Krizhevsky et al. 2012; Ding et al. ICLR 2015 (this paper)"
 

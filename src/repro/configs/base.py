@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.core.param_avg import ExchangeConfig
 from repro.kernels.common import KernelPolicy
 
 
@@ -76,6 +77,12 @@ class ModelConfig:
     # per run with dataclasses.replace(cfg, kernels=...) — the launchers'
     # --kernel-backend / --attn-impl flags do exactly that.
     kernels: KernelPolicy = KernelPolicy()
+    # replica exchange policy (core.param_avg.ExchangeConfig): strategy,
+    # wire compression, delay (0 = synchronous, 1 = one-step-stale
+    # overlapped) and sync_every, carried on the config the same way the
+    # kernel policy is — the launchers' --strategy / --exchange-* flags
+    # dataclasses.replace it per run.
+    exchange: ExchangeConfig = ExchangeConfig()
     dtype: str = "bfloat16"
     citation: str = ""
     notes: str = ""

@@ -1,9 +1,11 @@
 """The paper's contribution: data parallelism by parameter averaging."""
-from repro.core.param_avg import (EXPECTED_COLLECTIVE, STRATEGIES, Exchanger,
+from repro.core.param_avg import (COMPRESSIONS, EXPECTED_COLLECTIVE,
+                                  STRATEGIES, ExchangeConfig, Exchanger,
                                   as_exchanger, exchange_average, replicate,
                                   replica_spread, unreplicate)
-from repro.core.steps import (TrainState, init_grad_avg_state,
-                              init_param_avg_state, make_eval_step,
-                              make_grad_avg_step, make_mesh_param_avg_step,
-                              make_param_avg_step, make_serve_step,
-                              replica_specs, reshape_for_replicas)
+from repro.core.steps import (TrainState, init_exchange_state,
+                              init_grad_avg_state, init_param_avg_state,
+                              make_eval_step, make_grad_avg_step,
+                              make_mesh_param_avg_step, make_param_avg_step,
+                              make_serve_step, replica_specs,
+                              reshape_for_replicas)

@@ -28,25 +28,56 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.param_avg import (AxisName, Exchanger, as_exchanger,
-                                  replicate, shard_map)
+from repro.core.param_avg import (AxisName, ExchangeConfig, Exchanger,
+                                  as_exchanger, replicate, shard_map)
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TrainState:
+    """``exchange`` is the overlapped-exchange auxiliary state (None for
+    the synchronous delay=0 path and for uncompressed delay=1): the
+    replica-identical consensus ``base`` the compressed deltas are taken
+    against, and the per-replica error-feedback ``residual``.  It rides on
+    the donated TrainState so the in-flight buffers update in place."""
     params: Any
     opt_state: Any
     step: jnp.ndarray
+    exchange: Any = None
+
+
+def init_exchange_state(params_r, opt_r, exchanger: Exchanger,
+                        delay: int = 0):
+    """Auxiliary state for the delayed compressed exchange (None when the
+    exchange is stateless).  ``base`` starts as a copy of the initial
+    replicated state (all replicas identical at init, so it IS the
+    consensus); ``residual`` starts at zero (nothing dropped yet).  Copies,
+    not aliases: the TrainState is donated, and a leaf donated twice
+    would force a silent defensive copy every step."""
+    if delay == 0 or not exchanger.is_stateful \
+            or exchanger.strategy == "none":
+        return None
+    tree = (params_r, opt_r)
+    base = jax.tree.map(jnp.copy, tree)
+    residual = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32) if x.ndim else
+        jnp.zeros((), jnp.float32), tree)
+    return {"base": base, "residual": residual}
 
 
 def init_param_avg_state(rng, init_fn, optimizer: Optimizer,
-                         n_replicas: int) -> TrainState:
+                         n_replicas: int, *,
+                         exchange: Union[ExchangeConfig, None] = None
+                         ) -> TrainState:
     params = init_fn(rng)
     params_r = replicate(params, n_replicas)
     opt_r = jax.vmap(optimizer.init)(params_r)
-    return TrainState(params_r, opt_r, jnp.zeros((), jnp.int32))
+    aux = None
+    if exchange is not None:
+        aux = init_exchange_state(params_r, opt_r, exchange.exchanger(),
+                                  exchange.delay)
+    return TrainState(params_r, opt_r, jnp.zeros((), jnp.int32), aux)
 
 
 def init_grad_avg_state(rng, init_fn, optimizer: Optimizer) -> TrainState:
@@ -120,46 +151,142 @@ def _synced(exchanger: Exchanger, params, opt_state, step, sync_every: int):
     return params, opt_state
 
 
+def _delayed_synced(exchanger: Exchanger, prev_params, prev_opt,
+                    new_params, new_opt, aux, step, sync_every: int):
+    """One-step-stale overlapped exchange (delay=1).
+
+    The collective runs on the *incoming* (pre-update) parameters, which
+    have no data dependency on this step's forward/backward — XLA is free
+    to schedule the communication concurrently with the compute instead of
+    serializing it after the update.  The local progress is then grafted
+    onto the fresh consensus::
+
+        w_{t+1} = avg(w_t) + (new_t - w_t)
+
+    (exact for the paper's every-step averaging up to one step of
+    staleness; scalars — optimizer step counts — take the local value).
+    With a stateful (compressed) exchanger the consensus comes from
+    ``average_delta`` against ``aux["base"]`` with error-feedback
+    residuals, and ``aux`` is rolled forward.  Returns
+    ``(params, opt_state, aux)``."""
+    if exchanger.strategy == "none":
+        return new_params, new_opt, aux
+
+    def exchange(operand):
+        pp, po, np_, no_, ax = operand
+        if exchanger.is_stateful:
+            (avg_p, avg_o), new_res = exchanger.average_delta(
+                (pp, po), ax["base"], ax["residual"])
+            ax = {"base": (avg_p, avg_o), "residual": new_res}
+        else:
+            avg_p = exchanger.average(pp)
+            avg_o = exchanger.average(po)
+
+        def graft(a, n, w):
+            return a + (n - w) if a.ndim else n
+
+        return (jax.tree.map(graft, avg_p, np_, pp),
+                jax.tree.map(graft, avg_o, no_, po), ax)
+
+    operand = (prev_params, prev_opt, new_params, new_opt, aux)
+    if sync_every == 1:
+        return exchange(operand)
+    # cond (not where) for the same reason as _synced: the predicate is
+    # replica-identical, so gated-off steps really skip the collectives.
+    do_sync = (step + 1) % sync_every == 0
+    return jax.lax.cond(do_sync, exchange,
+                        lambda t: (t[2], t[3], t[4]), operand)
+
+
 def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
                         schedule: Callable, *,
-                        strategy: Union[str, Exchanger] = "all_reduce",
-                        sync_every: int = 1, microbatch: int = 1):
+                        strategy: Union[str, Exchanger,
+                                        ExchangeConfig] = "all_reduce",
+                        sync_every: int = 1, microbatch: int = 1,
+                        delay: int = 0, replica_exec: str = "vmap"):
     """Reference engine.  loss_fn(params, batch) -> scalar; returns
     step(state, batch).  batch leaves have leading axis R matching
-    state.params.  ``strategy`` is a name or an axis-less ``Exchanger``.
+    state.params.  ``strategy`` is a name, an axis-less ``Exchanger``, or
+    an ``ExchangeConfig`` (which then supplies ``delay``/``sync_every``).
+
+    ``delay=1`` selects the one-step-stale overlapped exchange
+    (``_delayed_synced``); ``delay=0`` is the synchronous path, bit-equal
+    to the pre-policy engine.  ``replica_exec`` picks how the R
+    independent replicas execute: ``"vmap"`` (batched, the default) or
+    ``"scan"`` (sequential replicas, unrolled in the traced program; at
+    fixed global batch each replica's smaller microbatch is more
+    cache-resident, which is where replica scaling pays on hosts
+    without R-way parallel compute).
     """
+    if isinstance(strategy, ExchangeConfig):
+        sync_every = strategy.sync_every
+        delay = strategy.delay
     exchanger = as_exchanger(strategy)
     if exchanger.is_mesh:
         raise ValueError("make_param_avg_step is the axis-0 reference "
                          "engine; use make_mesh_param_avg_step for a "
                          "mesh-bound Exchanger")
+    if delay not in (0, 1):
+        raise ValueError(f"delay must be 0 or 1, got {delay}")
+    if replica_exec not in ("vmap", "scan"):
+        raise ValueError(f"replica_exec must be 'vmap' or 'scan', "
+                         f"got {replica_exec!r}")
+    if exchanger.is_stateful and delay == 0 \
+            and exchanger.compression == "topk":
+        raise ValueError("topk compression requires delay=1 (its "
+                         "base+residual state rides the delayed exchange)")
     loss_and_grad = _make_loss_and_grad(loss_fn, microbatch)
 
-    def step(state: TrainState, batch) -> tuple:
-        lr = schedule(state.step)
+    def _single_replica_update(state, batch, lr):
+        # degenerate single-replica case: skip vmap entirely — the
+        # size-1 batched axis confuses GSPMD sharding propagation
+        # (observed as "involuntary full rematerialization" resharding)
+        p0 = jax.tree.map(lambda x: x[0], state.params)
+        o0 = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
+                          state.opt_state)
+        b0 = jax.tree.map(lambda x: x[0], batch)
+        loss, grads = loss_and_grad(p0, b0)
+        updates, o0 = optimizer.update(grads, o0, p0, lr)
+        p0 = apply_updates(p0, updates)
+        params = jax.tree.map(lambda x: x[None], p0)
+        opt_state = jax.tree.map(
+            lambda x: x[None] if x.ndim > 0 else x, o0)
+        # re-attach scalar leaves' replica axis bookkeeping
+        opt_state = jax.tree.map(
+            lambda new, old: new if new.ndim == old.ndim else
+            jnp.broadcast_to(new, old.shape),
+            opt_state, state.opt_state)
+        return params, opt_state, loss
 
-        n_rep = jax.tree.leaves(batch)[0].shape[0]
-        if n_rep == 1:
-            # degenerate single-replica case: skip vmap entirely — the
-            # size-1 batched axis confuses GSPMD sharding propagation
-            # (observed as "involuntary full rematerialization" resharding)
-            p0 = jax.tree.map(lambda x: x[0], state.params)
-            o0 = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
-                              state.opt_state)
-            b0 = jax.tree.map(lambda x: x[0], batch)
-            loss, grads = loss_and_grad(p0, b0)
-            updates, o0 = optimizer.update(grads, o0, p0, lr)
-            p0 = apply_updates(p0, updates)
-            params = jax.tree.map(lambda x: x[None], p0)
+    def _replica_update(state, batch, lr):
+        """Independent per-replica update -> (params_r, opt_r, mean loss)."""
+        if replica_exec == "scan":
+            # sequential replicas, unrolled: replica i's op sequence is
+            # emitted after replica i-1's, so each forward/backward runs
+            # at per-replica batch size with a cache-resident working
+            # set.  lax.map would also sequence, but its while-loop
+            # lowering defeats XLA:CPU fusion (measured ~7x slower than
+            # this unroll); vmap fuses replicas back into global-batch
+            # ops and loses the locality entirely.
+            n_rep = jax.tree.leaves(batch)[0].shape[0]
+            outs = []
+            for ri in range(n_rep):
+                p = jax.tree.map(lambda x: x[ri], state.params)
+                o = jax.tree.map(lambda x: x[ri] if x.ndim else x,
+                                 state.opt_state)
+                b = jax.tree.map(lambda x: x[ri], batch)
+                loss, grads = loss_and_grad(p, b)
+                updates, o = optimizer.update(grads, o, p, lr)
+                outs.append((apply_updates(p, updates), o, loss))
+            params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[t[0] for t in outs])
+            # scalar opt leaves are replica-identical bookkeeping; keep
+            # them unstacked so the state layout matches the vmap path
             opt_state = jax.tree.map(
-                lambda x: x[None] if x.ndim > 0 else x, o0)
-            # re-attach scalar leaves' replica axis bookkeeping
-            opt_state = jax.tree.map(
-                lambda new, old: new if new.ndim == old.ndim else
-                jnp.broadcast_to(new, old.shape),
-                opt_state, state.opt_state)
-            return TrainState(params, opt_state, state.step + 1), loss
-
+                lambda old, *xs: jnp.stack(xs) if old.ndim else xs[0],
+                state.opt_state, *[t[1] for t in outs])
+            return (params, opt_state,
+                    jnp.mean(jnp.stack([t[2] for t in outs])))
         # 1) independent per-replica grads — no cross-replica communication
         losses, grads = jax.vmap(loss_and_grad, in_axes=(0, 0))(
             state.params, batch)
@@ -168,13 +295,40 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
             lambda g, s, p: optimizer.update(g, s, p, lr))(
                 grads, state.opt_state, state.params)
         params = jax.vmap(apply_updates)(state.params, updates)
+        return params, opt_state, jnp.mean(losses)
 
-        # 3) exchange & average params AND optimizer state (paper fn. 3)
-        params, opt_state = _synced(exchanger, params, opt_state,
-                                    state.step, sync_every)
+    def step(state: TrainState, batch) -> tuple:
+        lr = schedule(state.step)
+        n_rep = jax.tree.leaves(batch)[0].shape[0]
 
-        new_state = TrainState(params, opt_state, state.step + 1)
-        return new_state, jnp.mean(losses)
+        if delay == 0 and replica_exec == "vmap":
+            # the pre-policy synchronous path, unchanged
+            if n_rep == 1:
+                params, opt_state, loss = _single_replica_update(
+                    state, batch, lr)
+                return TrainState(params, opt_state, state.step + 1), loss
+            params, opt_state, loss = _replica_update(state, batch, lr)
+            # 3) exchange & average params AND optimizer state (paper fn. 3)
+            params, opt_state = _synced(exchanger, params, opt_state,
+                                        state.step, sync_every)
+            return TrainState(params, opt_state, state.step + 1), loss
+
+        if n_rep == 1 and replica_exec == "vmap":
+            params, opt_state, loss = _single_replica_update(
+                state, batch, lr)
+        else:
+            params, opt_state, loss = _replica_update(state, batch, lr)
+
+        if delay == 0:
+            params, opt_state = _synced(exchanger, params, opt_state,
+                                        state.step, sync_every)
+            return TrainState(params, opt_state, state.step + 1,
+                              state.exchange), loss
+
+        params, opt_state, aux = _delayed_synced(
+            exchanger, state.params, state.opt_state, params, opt_state,
+            state.exchange, state.step, sync_every)
+        return TrainState(params, opt_state, state.step + 1, aux), loss
 
     return step
 
@@ -188,9 +342,11 @@ def replica_specs(tree, axis: AxisName):
 
 def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
                              schedule: Callable, *, mesh,
-                             strategy: Union[str, Exchanger] = "all_reduce",
+                             strategy: Union[str, Exchanger,
+                                             ExchangeConfig] = "all_reduce",
                              replica_axes=("pod", "data"),
-                             sync_every: int = 1, microbatch: int = 1):
+                             sync_every: int = 1, microbatch: int = 1,
+                             delay: int = 0):
     """Mesh-native engine: the whole train step is one ``shard_map``
     program over ``replica_axes`` of ``mesh``; each shard owns exactly one
     replica and the exchange is a real collective (all-reduce /
@@ -201,7 +357,18 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
     not implemented in the pinned jax, so tensor-parallel inner axes cannot
     yet be delegated to GSPMD inside the manual region — combine replicas
     with TP via the reference engine instead (launch/dryrun.py does).
+
+    ``delay=1``: one-step-stale overlapped exchange.  The collective's
+    input is the shard's *incoming* parameters — independent of this
+    step's forward/backward — so XLA's latency-hiding scheduler can run
+    the all-reduce / permute chain concurrently with the compute instead
+    of after it (see ``_delayed_synced``).  ``delay=0`` is unchanged.
     """
+    if isinstance(strategy, ExchangeConfig):
+        sync_every = strategy.sync_every
+        delay = strategy.delay
+    if delay not in (0, 1):
+        raise ValueError(f"delay must be 0 or 1, got {delay}")
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     axes = tuple(a for a in replica_axes if a in mesh.axis_names)
     if not axes:
@@ -216,25 +383,41 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
     axis = axes if len(axes) > 1 else axes[0]
     n_rep = math.prod(sizes[a] for a in axes)
     exchanger = as_exchanger(strategy, axis=axis)
+    if exchanger.is_stateful and delay == 0 \
+            and exchanger.compression == "topk":
+        raise ValueError("topk compression requires delay=1 (its "
+                         "base+residual state rides the delayed exchange)")
     loss_and_grad = _make_loss_and_grad(loss_fn, microbatch)
 
     def shard_step(state: TrainState, batch) -> tuple:
         # per-shard leaves keep a leading local-replica axis of size 1
         lr = schedule(state.step)
-        p0 = jax.tree.map(lambda x: x[0], state.params)
-        o0 = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
-                          state.opt_state)
+        p_prev = jax.tree.map(lambda x: x[0], state.params)
+        o_prev = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
+                              state.opt_state)
         b0 = jax.tree.map(lambda x: x[0], batch)
-        loss, grads = loss_and_grad(p0, b0)
-        updates, o0 = optimizer.update(grads, o0, p0, lr)
-        p0 = apply_updates(p0, updates)
-        p0, o0 = _synced(exchanger, p0, o0, state.step, sync_every)
+        loss, grads = loss_and_grad(p_prev, b0)
+        updates, o0 = optimizer.update(grads, o_prev, p_prev, lr)
+        p0 = apply_updates(p_prev, updates)
+        aux = state.exchange
+        if delay == 0:
+            p0, o0 = _synced(exchanger, p0, o0, state.step, sync_every)
+        else:
+            if aux is not None:
+                aux = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
+                                   aux)
+            p0, o0, aux = _delayed_synced(exchanger, p_prev, o_prev,
+                                          p0, o0, aux, state.step,
+                                          sync_every)
+            if aux is not None:
+                aux = jax.tree.map(
+                    lambda x: x[None] if x.ndim > 0 else x, aux)
         params = jax.tree.map(lambda x: x[None], p0)
         opt_state = jax.tree.map(
             lambda new, old: new[None] if old.ndim > new.ndim else new,
             o0, state.opt_state)
         loss = jax.lax.pmean(loss, axis)
-        return TrainState(params, opt_state, state.step + 1), loss
+        return TrainState(params, opt_state, state.step + 1, aux), loss
 
     def step(state: TrainState, batch) -> tuple:
         r = jax.tree.leaves(batch)[0].shape[0]

@@ -1,2 +1,3 @@
-from repro.data.pipeline import PrefetchLoader
+from repro.data.pipeline import (PrefetchLoader, StagedPinnedLoader,
+                                 make_loader)
 from repro.data import preprocess, synthetic  # noqa: F401

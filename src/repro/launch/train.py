@@ -43,7 +43,7 @@ import numpy as np
 from repro import models
 from repro.configs import (ALEXNET, ALEXNET_FAITHFUL, ALEXNET_FAITHFUL_SMOKE,
                            ALEXNET_SMOKE, get_config, reduced)
-from repro.core import (init_param_avg_state, make_eval_step,
+from repro.core import (ExchangeConfig, init_param_avg_state, make_eval_step,
                         make_mesh_param_avg_step, make_param_avg_step,
                         replica_spread, reshape_for_replicas)
 from repro.kernels.common import KernelPolicy
@@ -205,6 +205,31 @@ def main():
                     "(supports replicas < devices via tensor parallelism); "
                     "auto: mesh when replicas == devices > 1")
     ap.add_argument("--sync-every", type=int, default=1)
+    ap.add_argument("--exchange-delay", type=int, default=0, choices=[0, 1],
+                    help="0: synchronous exchange after the update (the "
+                    "paper's path); 1: one-step-stale overlapped exchange "
+                    "— the collective for step t's params runs inside step "
+                    "t+1's program, concurrent with its forward/backward")
+    ap.add_argument("--exchange-compression", default="none",
+                    choices=["none", "bf16", "topk"],
+                    help="wire compression for the exchange: bf16 halves "
+                    "the moved bytes; topk sends the top-k-magnitude "
+                    "entries of the delta-from-consensus with error-"
+                    "feedback residuals (needs --exchange-delay 1)")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="kept fraction per leaf for --exchange-"
+                    "compression topk (1.0 = identity, bit-equal to none)")
+    ap.add_argument("--replica-exec", default="vmap",
+                    choices=["vmap", "scan"],
+                    help="reference engine only: how the R independent "
+                    "replicas execute — vmap (batched) or scan "
+                    "(sequential lax.map; each replica's smaller batch is "
+                    "more cache-resident on CPU hosts)")
+    ap.add_argument("--staging", default="queue",
+                    choices=["queue", "pinned"],
+                    help="batch staging: queue = prefetch handoff queue; "
+                    "pinned = double-buffered preallocated host buffers "
+                    "with fence-gated reuse (data/pipeline.py)")
     ap.add_argument("--optimizer", default="sgd_momentum")
     ap.add_argument("--schedule", default="constant",
                     choices=["constant", "wsd", "cosine", "plateau"],
@@ -267,21 +292,36 @@ def main():
                      f"{n_rep * mp} devices, have {n_dev} "
                      "(set REPRO_DEVICES)")
 
+    try:
+        exch = ExchangeConfig(strategy=args.strategy,
+                              compression=args.exchange_compression,
+                              topk_frac=args.topk_frac,
+                              delay=args.exchange_delay,
+                              sync_every=args.sync_every)
+    except ValueError as e:
+        ap.error(str(e))
+
     if args.arch == "alexnet":
         build = build_alexnet(args, ap.error)
     else:
         build = build_lm(args)
+    build.cfg = dataclasses.replace(build.cfg, exchange=exch)
 
     opt = get_optimizer(args.optimizer)
     controller = make_controller(args)
 
     engine = args.engine
     if engine == "auto":
-        engine = "mesh" if (n_dev > 1 and n_rep == n_dev and mp == 1) \
+        engine = "mesh" if (n_dev > 1 and n_rep == n_dev and mp == 1
+                            and args.replica_exec == "vmap") \
             else "reference"
+    if engine == "mesh" and args.replica_exec == "scan":
+        ap.error("--replica-exec scan is a reference-engine execution mode "
+                 "(the mesh engine runs one replica per device); use "
+                 "--engine reference")
 
     rng = jax.random.PRNGKey(args.seed)
-    state = init_param_avg_state(rng, build.init, opt, n_rep)
+    state = init_param_avg_state(rng, build.init, opt, n_rep, exchange=exch)
 
     sharding = None
     if engine == "mesh":
@@ -297,8 +337,8 @@ def main():
             # donate the TrainState: params/opt-state update in place
             # instead of allocating a fresh copy of the state every step
             return jax.jit(make_mesh_param_avg_step(
-                build.loss, opt, sched, mesh=mesh, strategy=args.strategy,
-                replica_axes=("data",), sync_every=args.sync_every),
+                build.loss, opt, sched, mesh=mesh, strategy=exch,
+                replica_axes=("data",)),
                 donate_argnums=0)
     else:
         out_shardings = None
@@ -331,10 +371,10 @@ def main():
         def build_step(sched):
             kw = {} if out_shardings is None else \
                 {"out_shardings": out_shardings}
-            return jax.jit(make_param_avg_step(build.loss, opt, sched,
-                                               strategy=args.strategy,
-                                               sync_every=args.sync_every),
-                           donate_argnums=0, **kw)
+            return jax.jit(make_param_avg_step(
+                build.loss, opt, sched, strategy=exch,
+                replica_exec=args.replica_exec),
+                donate_argnums=0, **kw)
 
     session = TrainSession(
         state=state, build_step=build_step,
@@ -348,17 +388,20 @@ def main():
         eval_every=args.eval_every, eval_batches=args.eval_batches,
         plateau_metric=build.plateau_metric,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        resume=args.resume, prefetch=args.prefetch,
+        resume=args.resume, prefetch=args.prefetch, staging=args.staging,
         log_every=args.log_every, images_per_step=args.batch,
         metrics_path=args.metrics_out,
         run_meta={"kernels": make_policy(args).describe(),
                   "engine": engine, "strategy": args.strategy,
+                  "exchange": exch.describe(),
+                  "replica_exec": args.replica_exec,
+                  "staging": args.staging,
                   "model_parallel": mp})
 
     print(f"arch={getattr(build.cfg, 'name', args.arch)} replicas={n_rep} "
           f"devices={n_dev} model_parallel={mp} "
-          f"engine={engine} strategy={args.strategy} "
-          f"sync_every={args.sync_every} "
+          f"engine={engine} exchange={exch.describe()} "
+          f"replica_exec={args.replica_exec} staging={args.staging} "
           f"kernels={make_policy(args).describe()}"
           + (f" resume_from={args.ckpt_dir}" if args.resume else ""))
     result = session.run()

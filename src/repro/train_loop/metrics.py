@@ -71,6 +71,7 @@ class MetricsWriter:
         self._f = None
         self._images = images_per_step
         self._times_ms: list = []
+        self._stage_ms: list = []
         if path is None:
             return
         if resume_step is not None and os.path.exists(path):
@@ -93,14 +94,21 @@ class MetricsWriter:
             self._f.flush()
 
     def train(self, step: int, loss: float, lr: float, step_time_s: float,
-              *, timed: bool = True):
+              *, timed: bool = True, stage_wait_ms: Optional[float] = None):
         """``timed=False`` marks a compile step: logged, but excluded from
-        the throughput percentiles (it would dominate p99)."""
+        the throughput percentiles (it would dominate p99).
+        ``stage_wait_ms`` is how long the trainer was blocked waiting for
+        this step's batch to be staged (loader stall — observable loading
+        overlap, not inferred)."""
         ms = step_time_s * 1e3
         if timed:
             self._times_ms.append(ms)
         rec = {"kind": "train", "step": step, "loss": loss, "lr": lr,
                "step_time_ms": round(ms, 3)}
+        if stage_wait_ms is not None:
+            rec["stage_wait_ms"] = round(stage_wait_ms, 3)
+            if timed:
+                self._stage_ms.append(stage_wait_ms)
         if not timed:
             rec["compile"] = True
         if self._images and timed and step_time_s > 0:
@@ -121,6 +129,11 @@ class MetricsWriter:
                "step_ms_p50": round(percentile(ts, 50), 3),
                "step_ms_p90": round(percentile(ts, 90), 3),
                "step_ms_p99": round(percentile(ts, 99), 3)}
+        if self._stage_ms:
+            out["stage_wait_ms_mean"] = round(
+                sum(self._stage_ms) / len(self._stage_ms), 3)
+            out["stage_wait_ms_p90"] = round(
+                percentile(sorted(self._stage_ms), 90), 3)
         if self._images and total_s > 0:
             out["images_per_sec"] = round(len(ts) * self._images / total_s, 1)
         self._write(out)

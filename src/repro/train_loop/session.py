@@ -88,7 +88,8 @@ class TrainSession:
                  eval_step=None, make_eval_batches=None, eval_every: int = 0,
                  eval_batches: int = 2, plateau_metric: str = "loss",
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-                 resume: bool = False, prefetch: int = 2, log_every: int = 10,
+                 resume: bool = False, prefetch: int = 2,
+                 staging: str = "queue", log_every: int = 10,
                  images_per_step: int = 0, metrics_path: Optional[str] = None,
                  run_meta: Optional[dict] = None):
         self.state = state
@@ -109,6 +110,7 @@ class TrainSession:
         self.ckpt_every = ckpt_every
         self.resume = resume
         self.prefetch = prefetch
+        self.staging = staging
         self.log_every = log_every
         self.images_per_step = images_per_step
         self.metrics_path = metrics_path
@@ -186,7 +188,7 @@ class TrainSession:
 
     # ------------------------------------------------------------------
     def run(self) -> SessionResult:
-        from repro.data import PrefetchLoader     # local: keeps import light
+        from repro.data import make_loader        # local: keeps import light
 
         start = self._try_restore() if self.ckpt_dir else 0
         result = SessionResult(start, start, self.state, [], [], [], {})
@@ -207,8 +209,9 @@ class TrainSession:
                 next(stream)
             # loader construction starts the worker thread, so everything
             # from here on runs under the finally that closes it
-            loader = PrefetchLoader(stream, prefetch=self.prefetch,
-                                    device_put=self.device_put)
+            loader = make_loader(stream, prefetch=self.prefetch,
+                                 staging=self.staging,
+                                 device_put=self.device_put)
             sched_fn = self.controller.schedule()
             step_fn = self.build_step(sched_fn)
             # a metrics trace needs the loss + honest wall time every step,
@@ -218,7 +221,12 @@ class TrainSession:
             for i in range(start, self.steps):
                 t0 = time.perf_counter()
                 batch = next(loader)
+                stage_wait_ms = loader.last_wait_ms
                 self.state, loss = step_fn(self.state, batch)
+                # pinned staging: the slot this batch occupies may be
+                # overwritten only after this step's reads finish — hand
+                # the loader a fence token of the dispatched step
+                loader.fence(loss)
                 at_log = (i + 1) % self.log_every == 0 or i == start
                 if per_step_sync or at_log:
                     loss_f = float(loss)          # blocks on the device
@@ -227,7 +235,8 @@ class TrainSession:
                     # compile steps are logged, excluded from percentiles
                     writer.train(i + 1, loss_f, float(sched_fn(i)),
                                  time.perf_counter() - t0,
-                                 timed=not compiling)
+                                 timed=not compiling,
+                                 stage_wait_ms=stage_wait_ms)
                 compiling = False
                 if at_log:
                     print(f"step {i + 1:5d} loss {loss_f:.4f} "

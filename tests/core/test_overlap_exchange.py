@@ -1,0 +1,332 @@
+"""The delay=1 one-step-stale overlapped exchange + wire compression.
+
+What this file locks down (ISSUE PR 7):
+
+* ``delay=0`` through ``ExchangeConfig`` is BIT-equal to the pre-PR
+  synchronous path (plain strategy string) — reference engine in-process
+  at R = 1/2/4, mesh engine in 1/2/4-device subprocesses.
+* ``delay=1`` converges on a task the synchronous path converges on,
+  within a documented tolerance (one step of staleness, not divergence).
+* The delayed exchange does not DOUBLE the collectives: the compiled
+  delay=1 program carries exactly as many weight all-reduces as the
+  delay=0 program (one collective per exchange interval), including
+  under ``sync_every`` gating.
+* Compression: bf16 stays within round-trip bounds of the dense
+  trajectory; topk with ``topk_frac=1.0`` is bitwise the dense path;
+  the top-k error-feedback residual carries exactly what the compressor
+  dropped; skipped local-SGD steps leave the compression state
+  untouched.
+* ``replica_exec="scan"`` (sequential unrolled replicas) matches vmap.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_param_avg_step, reshape_for_replicas)
+from repro.core.param_avg import Exchanger
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def run_child(code: str, devices: int, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _linear_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def _init_fn(r):
+    return {"w": jax.random.normal(r, (6, 3)) * 0.3, "b": jnp.zeros((3,))}
+
+
+def _batches(n, R, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(6, 3)).astype(np.float32)
+    out = []
+    for _ in range(n):
+        x = rng.normal(size=(4 * R, 6)).astype(np.float32)
+        out.append(reshape_for_replicas(
+            {"x": jnp.asarray(x), "y": jnp.asarray(x @ w)}, R))
+    return out
+
+
+def _run_steps(exchange, R, n=6, replica_exec="vmap", strategy=None,
+               seed=0):
+    """Full trajectory under the reference engine; returns (losses, state)."""
+    opt = sgd_momentum(momentum=0.9)
+    state = init_param_avg_state(jax.random.PRNGKey(0), _init_fn, opt, R,
+                                 exchange=exchange)
+    step = jax.jit(make_param_avg_step(
+        _linear_loss, opt, schedules.constant(0.05),
+        strategy=strategy if strategy is not None else exchange,
+        replica_exec=replica_exec))
+    losses = []
+    for b in _batches(n, R, seed):
+        state, loss = step(state, b)
+        losses.append(float(loss))
+    return losses, state
+
+
+def _assert_tree_equal(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# --------------------------------------------------------------- delay=0 --
+
+@pytest.mark.parametrize("R", [1, 2, 4])
+def test_delay0_bit_equal_pre_pr_reference(R):
+    """ExchangeConfig(delay=0) is the pre-PR path, bit for bit."""
+    l_old, s_old = _run_steps(None, R, strategy="all_reduce")
+    l_new, s_new = _run_steps(ExchangeConfig(), R)
+    assert l_old == l_new, (l_old, l_new)
+    _assert_tree_equal(s_old.params, s_new.params, "params")
+    _assert_tree_equal(s_old.opt_state, s_new.opt_state, "opt")
+
+
+CHILD_DELAY0_MESH = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_mesh_param_avg_step, reshape_for_replicas)
+from repro.launch.mesh import make_replica_mesh
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+
+R = jax.device_count()
+mesh = make_replica_mesh(R)
+init_fn = lambda r: {"w": jax.random.normal(r, (6, 3)) * 0.3,
+                     "b": jnp.zeros((3,))}
+loss = lambda p, b: jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+opt = sgd_momentum(momentum=0.9)
+sch = schedules.constant(0.05)
+rng = np.random.default_rng(0)
+s_old = init_param_avg_state(jax.random.PRNGKey(0), init_fn, opt, R)
+s_new = init_param_avg_state(jax.random.PRNGKey(0), init_fn, opt, R,
+                             exchange=ExchangeConfig())
+old = jax.jit(make_mesh_param_avg_step(loss, opt, sch, mesh=mesh,
+                                       strategy="all_reduce",
+                                       replica_axes=("data",)))
+new = jax.jit(make_mesh_param_avg_step(loss, opt, sch, mesh=mesh,
+                                       strategy=ExchangeConfig(),
+                                       replica_axes=("data",)))
+for i in range(5):
+    b = reshape_for_replicas(
+        {"x": jnp.asarray(rng.normal(size=(4 * R, 6)), jnp.float32),
+         "y": jnp.asarray(rng.normal(size=(4 * R, 3)), jnp.float32)}, R)
+    s_old, l_old = old(s_old, b)
+    s_new, l_new = new(s_new, b)
+    assert float(l_old) == float(l_new), (i, l_old, l_new)   # bit-equal
+for a, c in zip(jax.tree.leaves(s_old.params), jax.tree.leaves(s_new.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_delay0_bit_equal_pre_pr_mesh(devices):
+    out = run_child(CHILD_DELAY0_MESH, devices=devices)
+    assert "OK" in out
+
+
+# --------------------------------------------------------------- delay=1 --
+
+def test_delay1_converges_within_tolerance():
+    """One step of staleness must not break convergence: both traces
+    descend, and the delayed final loss lands within 25% (documented
+    tolerance, docs/architecture.md) of the synchronous one."""
+    R, n = 4, 20
+    l_sync, _ = _run_steps(ExchangeConfig(), R, n=n)
+    l_stale, _ = _run_steps(ExchangeConfig(delay=1), R, n=n)
+    assert l_stale[-1] < 0.5 * l_stale[0], l_stale          # it learns
+    assert abs(l_stale[-1] - l_sync[-1]) <= 0.25 * max(l_sync[-1], 1e-3), \
+        (l_sync[-1], l_stale[-1])
+
+
+def test_delay1_first_step_matches_sync():
+    """Step 0 has no previous exchange in flight — identical to sync."""
+    l_sync, _ = _run_steps(ExchangeConfig(), 4, n=1)
+    l_stale, _ = _run_steps(ExchangeConfig(delay=1), 4, n=1)
+    assert l_sync == l_stale
+
+
+CHILD_HLO_COUNT = """
+import re, jax, jax.numpy as jnp
+from repro.core import (ExchangeConfig, init_param_avg_state,
+                        make_mesh_param_avg_step, reshape_for_replicas)
+from repro.launch.mesh import make_replica_mesh
+from repro.optim import schedules
+from repro.optim.optimizers import sgd_momentum
+
+R = jax.device_count()
+mesh = make_replica_mesh(R)
+init_fn = lambda r: {"w": jax.random.normal(r, (6, 3))}
+loss = lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+opt = sgd_momentum()
+sch = schedules.constant(0.05)
+batch = reshape_for_replicas({"x": jnp.ones((4 * R, 6)),
+                              "y": jnp.ones((4 * R, 3))}, R)
+
+def n_all_reduce(exch):
+    state = init_param_avg_state(jax.random.PRNGKey(0), init_fn, opt, R,
+                                 exchange=exch)
+    step = jax.jit(make_mesh_param_avg_step(loss, opt, sch, mesh=mesh,
+                                            strategy=exch,
+                                            replica_axes=("data",)))
+    txt = step.lower(state, batch).compile().as_text()
+    return len(re.findall(r"all-reduce(?:-start)?\\(", txt))
+
+n0 = n_all_reduce(ExchangeConfig())
+n1 = n_all_reduce(ExchangeConfig(delay=1))
+# one collective per exchange interval: the overlapped program must not
+# carry the exchange twice (once stale + once fresh would double it)
+assert n0 == n1, (n0, n1)
+n0g = n_all_reduce(ExchangeConfig(sync_every=2))
+n1g = n_all_reduce(ExchangeConfig(delay=1, sync_every=2))
+assert n0g == n1g, (n0g, n1g)
+print("OK", n0, n1, n0g, n1g)
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_delay1_single_collective_per_interval(devices):
+    out = run_child(CHILD_HLO_COUNT, devices=devices)
+    assert "OK" in out
+
+
+# ------------------------------------------------------------ compression --
+
+def test_bf16_within_roundtrip_bounds():
+    """bf16 wire compression: same descent, losses within bf16 mantissa
+    bounds of the dense delayed trajectory at every step."""
+    l_dense, s_dense = _run_steps(ExchangeConfig(delay=1), 4, n=8)
+    l_bf16, s_bf16 = _run_steps(
+        ExchangeConfig(delay=1, compression="bf16"), 4, n=8)
+    np.testing.assert_allclose(l_bf16, l_dense, rtol=2e-2, atol=1e-3)
+    for a, b in zip(jax.tree.leaves(s_dense.params),
+                    jax.tree.leaves(s_bf16.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-2, atol=1e-2)
+
+
+def test_topk_full_fraction_is_bitwise_dense():
+    """topk_frac=1.0 routes through the dense arithmetic — bit-equal."""
+    l_dense, s_dense = _run_steps(ExchangeConfig(delay=1), 4, n=8)
+    l_full, s_full = _run_steps(
+        ExchangeConfig(delay=1, compression="topk", topk_frac=1.0), 4, n=8)
+    assert l_dense == l_full
+    _assert_tree_equal(s_dense.params, s_full.params)
+    # and the residual never accumulates anything
+    for leaf in jax.tree.leaves(s_full.exchange["residual"]):
+        assert float(np.abs(np.asarray(leaf)).max()) == 0.0
+
+
+def test_topk_error_feedback_residual_math():
+    """average_delta per the spec: d = (x-base)+res; c = top-k(d);
+    out = base + mean(c); res' = d - c (nothing is lost, only delayed)."""
+    ex = Exchanger("all_reduce", compression="topk", topk_frac=0.5)
+    R, n = 2, 4                       # k = 2 of 4
+    x = jnp.asarray(np.array([[1.0, -3.0, 0.5, 2.0],
+                              [0.25, 1.5, -0.75, -0.5]], np.float32))
+    base = jnp.zeros((R, n)) + jnp.asarray([0.5, 0.0, 0.0, 0.0])
+    res = jnp.asarray(np.array([[0.1, 0.0, 0.0, 0.0],
+                                [0.0, 0.2, 0.0, 0.0]], np.float32))
+    out, new_res = ex.average_delta((x,), (base,), (res,))
+    out, new_res = out[0], new_res[0]
+    d = np.asarray(x) - np.asarray(base) + np.asarray(res)
+    # top-2 by |.| per replica: replica 0 -> [-3.0, 2.0]; replica 1 -> [1.7, -0.75]
+    kept = np.zeros_like(d)
+    for r in range(R):
+        idx = np.argsort(-np.abs(d[r]))[:2]
+        kept[r, idx] = d[r, idx]
+    expect_out = np.asarray(base) + kept.sum(0) / R
+    np.testing.assert_allclose(np.asarray(out), expect_out, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_res), d - kept, rtol=1e-6)
+    # conservation: transmitted + residual == full owed delta
+    np.testing.assert_allclose(kept + np.asarray(new_res), d, rtol=1e-6)
+
+
+def test_topk_trains_and_carries_residual():
+    """Sparse exchange still converges; the residual is live (non-zero)."""
+    l_topk, s_topk = _run_steps(
+        ExchangeConfig(delay=1, compression="topk", topk_frac=0.25), 4,
+        n=20)
+    assert l_topk[-1] < 0.5 * l_topk[0], l_topk
+    total = sum(float(np.abs(np.asarray(leaf)).sum())
+                for leaf in jax.tree.leaves(s_topk.exchange["residual"]))
+    assert total > 0.0
+
+
+def test_topk_requires_delay():
+    with pytest.raises(ValueError, match="delay=1"):
+        ExchangeConfig(compression="topk")
+    with pytest.raises(ValueError, match="all-gather"):
+        ExchangeConfig(strategy="ring", compression="topk", delay=1)
+
+
+def test_sync_every_skips_leave_compression_state_untouched():
+    """Local-SGD gating composes with the stateful exchange: on skipped
+    steps base AND residual must ride through unchanged (a cond that
+    half-updated them would corrupt the consensus)."""
+    exch = ExchangeConfig(delay=1, compression="topk", topk_frac=0.25,
+                          sync_every=2)
+    R = 4
+    opt = sgd_momentum(momentum=0.9)
+    state = init_param_avg_state(jax.random.PRNGKey(0), _init_fn, opt, R,
+                                 exchange=exch)
+    step = jax.jit(make_param_avg_step(_linear_loss, opt,
+                                       schedules.constant(0.05),
+                                       strategy=exch))
+    prev_aux = state.exchange
+    for i, b in enumerate(_batches(6, R)):
+        state, _ = step(state, b)
+        synced = (i + 1) % 2 == 0
+        if not synced:
+            _assert_tree_equal(state.exchange, prev_aux,
+                               f"aux moved on skipped step {i}")
+        prev_aux = state.exchange
+    # the sync steps DID move the consensus base
+    assert any(float(np.abs(np.asarray(a) - np.asarray(b)).max()) > 0
+               for a, b in zip(jax.tree.leaves(prev_aux["base"]),
+                               jax.tree.leaves(
+                                   init_param_avg_state(
+                                       jax.random.PRNGKey(0), _init_fn,
+                                       opt, R,
+                                       exchange=exch).exchange["base"])))
+
+
+# -------------------------------------------------------------- scan exec --
+
+@pytest.mark.parametrize("delay", [0, 1])
+def test_scan_exec_matches_vmap(delay):
+    """Sequential unrolled replicas = batched replicas, same numbers."""
+    exch = ExchangeConfig(delay=delay)
+    l_vmap, s_vmap = _run_steps(exch, 4, n=5, replica_exec="vmap")
+    l_scan, s_scan = _run_steps(exch, 4, n=5, replica_exec="scan")
+    np.testing.assert_allclose(l_scan, l_vmap, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(s_vmap.params),
+                    jax.tree.leaves(s_scan.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_scan_exec_single_replica():
+    l_vmap, _ = _run_steps(ExchangeConfig(), 1, n=3, replica_exec="vmap")
+    l_scan, _ = _run_steps(ExchangeConfig(), 1, n=3, replica_exec="scan")
+    np.testing.assert_allclose(l_scan, l_vmap, rtol=1e-6)

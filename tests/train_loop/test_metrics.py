@@ -45,6 +45,33 @@ def test_read_jsonl_strict_raises_on_garbage(tmp_path):
     assert [r["step"] for r in read_jsonl(str(p), tolerant=True)] == [1]
 
 
+def test_stage_wait_ms_logged_and_summarized(tmp_path):
+    """Per-step loader stall lands in the train records and the summary
+    aggregates it (mean + p90) over TIMED steps only."""
+    p = tmp_path / "m.jsonl"
+    w = MetricsWriter(str(p), images_per_step=4)
+    w.train(1, 1.0, 0.1, 5.0, timed=False, stage_wait_ms=900.0)  # compile
+    w.train(2, 1.0, 0.1, 0.01, stage_wait_ms=2.0)
+    w.train(3, 1.0, 0.1, 0.01, stage_wait_ms=4.0)
+    w.train(4, 1.0, 0.1, 0.01)                 # loader without the metric
+    s = w.summary(4)
+    w.close()
+    recs = read_jsonl(str(p), "train")
+    assert recs[0]["stage_wait_ms"] == 900.0   # logged even on compile...
+    assert [r.get("stage_wait_ms") for r in recs[1:]] == [2.0, 4.0, None]
+    assert s["stage_wait_ms_mean"] == 3.0      # ...but excluded here
+    assert s["stage_wait_ms_p90"] == 4.0
+
+
+def test_summary_omits_stage_wait_when_never_reported(tmp_path):
+    p = tmp_path / "m.jsonl"
+    w = MetricsWriter(str(p), images_per_step=4)
+    w.train(1, 1.0, 0.1, 0.01)
+    s = w.summary(1)
+    w.close()
+    assert "stage_wait_ms_mean" not in s
+
+
 def test_summary_excludes_compile_steps(tmp_path):
     p = tmp_path / "m.jsonl"
     w = MetricsWriter(str(p), images_per_step=4)
