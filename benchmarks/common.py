@@ -15,6 +15,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
 
 import jax
@@ -58,13 +59,20 @@ def write_bench_json(path: str = None, extra: dict = None,
                      partial: bool = False) -> str:
     """Persist this run's rows as a BENCH_<date>.json trajectory file.
 
-    ``partial`` runs get a ``.partial.json`` suffix (gitignored) so they
-    never overwrite the committed full-suite baseline for the day.
+    ``partial`` runs (``--only`` / fast mode) land in the system tempdir
+    — NOT in benchmarks/ — so a scratch run can never leave a stray
+    ``.partial.json`` in the working tree next to the committed
+    full-suite baseline (``*.partial.json`` is also gitignored as a
+    belt-and-braces guard for REPRO_BENCH_OUT overrides).
     """
     date = time.strftime("%Y-%m-%d")
-    suffix = ".partial.json" if partial else ".json"
-    path = path or os.environ.get("REPRO_BENCH_OUT") or os.path.normpath(
-        os.path.join(REPO, "benchmarks", f"BENCH_{date}{suffix}"))
+    if path is None:
+        path = os.environ.get("REPRO_BENCH_OUT")
+    if path is None:
+        path = (os.path.join(tempfile.gettempdir(),
+                             f"BENCH_{date}.partial.json") if partial
+                else os.path.normpath(
+                    os.path.join(REPO, "benchmarks", f"BENCH_{date}.json")))
     payload = {"date": date, "jax": jax.__version__,
                "backend": jax.default_backend(),
                "device_count": jax.device_count(), "rows": _ROWS}

@@ -1,0 +1,160 @@
+"""NumericsPolicy benchmark: what each precision axis buys (or costs).
+
+Two families of rows (docs/numerics.md):
+
+  numerics/train_step/<arch>/<policy>
+      one full param-avg train step (fwd+bwd+update+exchange) under the
+      default fp32 policy vs bf16 compute with fp32 master weights +
+      dynamic loss scaling — the mixed-precision tax/win is HOST
+      DEPENDENT (CPU hosts emulate bf16, accelerators win big), so the
+      trajectory row is what matters, not the absolute sign.
+  numerics/kv_bytes_per_slot/<dtype>  and  numerics/serve_tps/...
+      the int8 KV cache's capacity claim, measured not asserted from
+      theory: bytes of decode state per slot at fixed ring capacity,
+      fp32 vs int8 (scales included).  The suite HARD-ASSERTS the
+      headline — int8 fits >= 2x the slots of fp32 in equal ring bytes —
+      and then serves the same request mix through the engine at equal
+      slot counts to show the quality/throughput side.
+
+Rows carry arch/numerics/kv metadata into BENCH_<date>.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro import models
+from repro.configs import ALEXNET_SMOKE, ARCHS, reduced
+from repro.core import (init_param_avg_state, make_param_avg_step,
+                        reshape_for_replicas)
+from repro.models import alexnet as alexnet_mod
+from repro.numerics import get_policy
+from repro.optim import schedules
+from repro.optim.optimizers import for_numerics, sgd_momentum
+from repro.serving import Request, ServingEngine
+
+CAPACITY = 64
+REPLICAS = 2
+
+
+def _lm_cfg():
+    return reduced(ARCHS["olmo-1b"], n_layers=2, d_model=256)
+
+
+def _train_case(arch):
+    """(cfg, loss_fn, batch) for one arch of the step-time sweep."""
+    if arch == "alexnet":
+        cfg = ALEXNET_SMOKE
+        rng = np.random.default_rng(0)
+        batch = {"images": jnp.asarray(rng.normal(size=(
+            16, cfg.image_size, cfg.image_size, cfg.in_channels)),
+            jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.n_classes, 16))}
+        loss = lambda p, b, c=None: alexnet_mod.loss_fn(  # noqa: E731
+            p, c, b["images"], b["labels"])
+        init = alexnet_mod.init
+    else:
+        cfg = _lm_cfg()
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 64)),
+                           jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        loss = lambda p, b, c=None: models.loss_fn(p, c, b)  # noqa: E731
+        init = models.init
+    return cfg, init, loss, batch
+
+
+def _step_time(arch, policy_name):
+    cfg, init, loss, batch = _train_case(arch)
+    npol = get_policy(policy_name)
+    cfg = dataclasses.replace(cfg, numerics=npol)
+    opt = for_numerics(sgd_momentum(), npol)
+    state = init_param_avg_state(jax.random.PRNGKey(0),
+                                 lambda r: init(r, cfg), opt, REPLICAS,
+                                 numerics=npol)
+    step = jax.jit(make_param_avg_step(
+        lambda p, b: loss(p, b, cfg), opt, schedules.constant(0.01),
+        numerics=npol))
+    rb = reshape_for_replicas(batch, REPLICAS)
+
+    def one(s):
+        s, _ = step(s, rb)
+        return s
+
+    # time_fn's warmup covers the compile; state threads through so the
+    # donated buffers never alias a dead value
+    return time_fn(one, state, warmup=2, iters=5)
+
+
+def _cache_bytes(cfg, kv):
+    c = dataclasses.replace(
+        cfg, numerics=dataclasses.replace(cfg.numerics, kv_cache_dtype=kv))
+    state = models.init_decode_state(c, 1, CAPACITY)
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(state.cache))
+
+
+def _serve(cfg, params, kv, slots, reqs):
+    c = dataclasses.replace(
+        cfg, numerics=dataclasses.replace(cfg.numerics, kv_cache_dtype=kv))
+    eng = ServingEngine(params, c, slots=slots, capacity=CAPACITY,
+                        buckets=(8,))
+    t0 = time.perf_counter()
+    results = eng.run(list(reqs))
+    wall = time.perf_counter() - t0
+    return sum(len(r.tokens) for r in results), wall
+
+
+def main():
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
+
+    # --- train-step time: fp32 vs bf16+master, per arch -----------------
+    for arch in (("alexnet",) if fast else ("alexnet", "olmo-1b")):
+        base = _step_time(arch, "fp32")
+        emit(f"numerics/train_step/{arch}/fp32", base, "baseline",
+             arch=arch, numerics="fp32", replicas=REPLICAS)
+        mixed = _step_time(arch, "bf16")
+        emit(f"numerics/train_step/{arch}/bf16_master", mixed,
+             f"vs_fp32={mixed / base:.2f}x",
+             arch=arch, numerics="bf16", replicas=REPLICAS)
+
+    # --- int8 KV: bytes per slot + the >=2x capacity claim --------------
+    cfg = _lm_cfg()
+    b_fp32 = _cache_bytes(cfg, "fp32")
+    b_int8 = _cache_bytes(cfg, "int8")
+    ratio = b_fp32 / b_int8
+    emit("numerics/kv_bytes_per_slot/fp32", b_fp32, "bytes",
+         arch=cfg.name, kv="fp32", capacity=CAPACITY)
+    emit("numerics/kv_bytes_per_slot/int8", b_int8,
+         f"slots_at_equal_bytes={ratio:.2f}x",
+         arch=cfg.name, kv="int8", capacity=CAPACITY)
+    # the headline claim, measured on the real state pytree (scales and
+    # positions included) — fail the suite if quantization ever bloats
+    assert ratio >= 2.0, (
+        f"int8 KV fits only {ratio:.2f}x the slots of fp32 at equal ring "
+        f"bytes (expected >= 2x): fp32={b_fp32}B int8={b_int8}B per slot")
+
+    # --- serving throughput at equal slot counts, fp32 vs int8 KV -------
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 8 if fast else 16
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=8),
+                    max_new_tokens=8) for _ in range(n_req)]
+    for kv in ("fp32", "int8"):
+        for slots in ((4,) if fast else (2, 4)):
+            _serve(cfg, params, kv, slots, reqs[:2])      # warm
+            toks, wall = _serve(cfg, params, kv, slots, reqs)
+            emit(f"numerics/serve_tps/{kv}/slots{slots}",
+                 wall / toks * 1e6, f"tok/s={toks / wall:.1f}",
+                 arch=cfg.name, kv=kv, slots=slots, capacity=CAPACITY)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import write_bench_json
+    main()
+    write_bench_json(partial=True)

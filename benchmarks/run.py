@@ -24,8 +24,8 @@ import sys
 import traceback
 
 from benchmarks import (common, exchange_strategies, kernel_backends,
-                        loading_overlap, local_sgd_ablation, parity_training,
-                        serving_latency, session_throughput,
+                        loading_overlap, local_sgd_ablation, numerics_bench,
+                        parity_training, serving_latency, session_throughput,
                         table1_throughput)
 
 SUITES = {
@@ -37,6 +37,7 @@ SUITES = {
     "local_sgd_ablation": local_sgd_ablation.main,
     "session_throughput": session_throughput.main,
     "serving_latency": serving_latency.main,
+    "numerics_bench": numerics_bench.main,
 }
 
 
@@ -59,7 +60,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"# FAILED {name}: {e}", flush=True)
     # a partial run (--only / fast mode) must not clobber the committed
-    # full-suite baseline for the day — it gets a .partial name instead
+    # full-suite baseline for the day — it goes to the tempdir instead
     partial = bool(args.only) or os.environ.get("REPRO_BENCH_FAST") == "1"
     path = common.write_bench_json(partial=partial,
                                    extra={"suites": ran, "failed": failed,

@@ -26,6 +26,7 @@ from typing import Tuple
 
 from repro.core.param_avg import ExchangeConfig
 from repro.kernels.common import KernelPolicy
+from repro.numerics import NumericsPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +72,8 @@ class AlexNetConfig:
     kernels: KernelPolicy = KernelPolicy()
     # replica exchange policy, same carriage as ModelConfig.exchange
     exchange: ExchangeConfig = ExchangeConfig()
+    # precision policy, same carriage as ModelConfig.numerics
+    numerics: NumericsPolicy = NumericsPolicy()
     dtype: str = "float32"
     citation: str = "Krizhevsky et al. 2012; Ding et al. ICLR 2015 (this paper)"
 

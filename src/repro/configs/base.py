@@ -12,6 +12,7 @@ from typing import Optional, Tuple
 
 from repro.core.param_avg import ExchangeConfig
 from repro.kernels.common import KernelPolicy
+from repro.numerics import NumericsPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +84,13 @@ class ModelConfig:
     # kernel policy is — the launchers' --strategy / --exchange-* flags
     # dataclasses.replace it per run.
     exchange: ExchangeConfig = ExchangeConfig()
+    # precision policy (repro.numerics.NumericsPolicy): param/compute
+    # dtypes, fp32 master weights, loss scaling, KV-cache quantization —
+    # carried like ``kernels:`` so every layer resolves precision without
+    # kwarg threading; the launchers' --numerics / --kv-cache-dtype flags
+    # dataclasses.replace it per run.  ``dtype`` below stays the legacy
+    # default the policy inherits when param_dtype is None.
+    numerics: NumericsPolicy = NumericsPolicy()
     dtype: str = "bfloat16"
     citation: str = ""
     notes: str = ""

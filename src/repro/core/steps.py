@@ -30,6 +30,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.param_avg import (AxisName, ExchangeConfig, Exchanger,
                                   as_exchanger, replicate, shard_map)
+from repro.numerics import (NumericsPolicy, all_finite, cast_floats,
+                            init_loss_scale_state, next_loss_scale_state)
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
@@ -40,11 +42,17 @@ class TrainState:
     the synchronous delay=0 path and for uncompressed delay=1): the
     replica-identical consensus ``base`` the compressed deltas are taken
     against, and the per-replica error-feedback ``residual``.  It rides on
-    the donated TrainState so the in-flight buffers update in place."""
+    the donated TrainState so the in-flight buffers update in place.
+
+    ``numerics`` is the loss-scaling state (None unless the
+    ``NumericsPolicy`` enables static/dynamic scaling): the current
+    scale, the clean-step counter, and the skipped-step count — scalars,
+    replica-identical bookkeeping like the optimizer's ``count``."""
     params: Any
     opt_state: Any
     step: jnp.ndarray
     exchange: Any = None
+    numerics: Any = None
 
 
 def init_exchange_state(params_r, opt_r, exchanger: Exchanger,
@@ -68,7 +76,8 @@ def init_exchange_state(params_r, opt_r, exchanger: Exchanger,
 
 def init_param_avg_state(rng, init_fn, optimizer: Optimizer,
                          n_replicas: int, *,
-                         exchange: Union[ExchangeConfig, None] = None
+                         exchange: Union[ExchangeConfig, None] = None,
+                         numerics: Union[NumericsPolicy, None] = None
                          ) -> TrainState:
     params = init_fn(rng)
     params_r = replicate(params, n_replicas)
@@ -77,16 +86,21 @@ def init_param_avg_state(rng, init_fn, optimizer: Optimizer,
     if exchange is not None:
         aux = init_exchange_state(params_r, opt_r, exchange.exchanger(),
                                   exchange.delay)
-    return TrainState(params_r, opt_r, jnp.zeros((), jnp.int32), aux)
+    return TrainState(params_r, opt_r, jnp.zeros((), jnp.int32), aux,
+                      init_loss_scale_state(numerics))
 
 
-def init_grad_avg_state(rng, init_fn, optimizer: Optimizer) -> TrainState:
+def init_grad_avg_state(rng, init_fn, optimizer: Optimizer, *,
+                        numerics: Union[NumericsPolicy, None] = None
+                        ) -> TrainState:
     params = init_fn(rng)
     return TrainState(params, optimizer.init(params),
-                      jnp.zeros((), jnp.int32))
+                      jnp.zeros((), jnp.int32), None,
+                      init_loss_scale_state(numerics))
 
 
-def _make_loss_and_grad(loss_fn: Callable, microbatch: int):
+def _make_loss_and_grad(loss_fn: Callable, microbatch: int,
+                        compute_dtype=None):
     """Shared by both engines.  loss_fn(params, batch) -> scalar.
 
     ``loss_fn`` must be differentiable END TO END for whatever kernel
@@ -98,11 +112,33 @@ def _make_loss_and_grad(loss_fn: Callable, microbatch: int):
     ``microbatch`` > 1 accumulates gradients over that many slices of the
     per-replica batch (fp32 accumulator) — bounds activation memory at the
     cost of re-reading params per slice.
-    """
 
-    def loss_and_grad(params, batch):
+    ``compute_dtype`` (NumericsPolicy.compute_dtype, when it differs from
+    the params' own dtype) casts float params at the loss boundary; the
+    returned ``loss_and_grad(params, batch, scale=None)`` multiplies the
+    loss by ``scale`` inside the differentiated function, so the grads
+    come out scaled — callers unscale in fp32 (loss-scaling contract).
+    """
+    cdt = None if compute_dtype is None else jnp.dtype(compute_dtype)
+
+    def run_loss(params, batch, scale):
+        if cdt is not None:
+            # float inputs (images, frames, patch embeds) follow the
+            # params to the compute dtype — mixed-dtype conv/matmul
+            # operands are a lax type error, not an implicit upcast
+            params = cast_floats(params, cdt)
+            batch = cast_floats(batch, cdt)
+        loss = loss_fn(params, batch)
+        if scale is not None:
+            loss = loss * scale.astype(loss.dtype)
+        return loss
+
+    def loss_and_grad(params, batch, scale=None):
         if microbatch == 1:
-            return jax.value_and_grad(loss_fn)(params, batch)
+            if cdt is None and scale is None:
+                # the pre-policy trace, bit-equal
+                return jax.value_and_grad(loss_fn)(params, batch)
+            return jax.value_and_grad(run_loss)(params, batch, scale)
         from repro.models._unroll import scan_or_unroll
         # split as (b/m, m) then move m to the front: microbatch i takes the
         # i-th row of each contiguous group, so a batch dim sharded over
@@ -118,7 +154,7 @@ def _make_loss_and_grad(loss_fn: Callable, microbatch: int):
 
         def mstep(carry, mbatch):
             lsum, gsum = carry
-            li, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            li, g = jax.value_and_grad(run_loss)(params, mbatch, scale)
             gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
                                 gsum, g)
             return (lsum + li, gsum), None
@@ -128,6 +164,14 @@ def _make_loss_and_grad(loss_fn: Callable, microbatch: int):
         return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
 
     return loss_and_grad
+
+
+def _select_step(finite, new_tree, old_tree):
+    """Per-leaf ``where``: keep the candidate update only on finite steps
+    (the loss-scaling skip — both branches are already computed, so the
+    select is free next to a cond)."""
+    return jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                        new_tree, old_tree)
 
 
 def _synced(exchanger: Exchanger, params, opt_state, step, sync_every: int):
@@ -203,7 +247,8 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
                         strategy: Union[str, Exchanger,
                                         ExchangeConfig] = "all_reduce",
                         sync_every: int = 1, microbatch: int = 1,
-                        delay: int = 0, replica_exec: str = "vmap"):
+                        delay: int = 0, replica_exec: str = "vmap",
+                        numerics: Union[NumericsPolicy, None] = None):
     """Reference engine.  loss_fn(params, batch) -> scalar; returns
     step(state, batch).  batch leaves have leading axis R matching
     state.params.  ``strategy`` is a name, an axis-less ``Exchanger``, or
@@ -217,6 +262,15 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
     fixed global batch each replica's smaller microbatch is more
     cache-resident, which is where replica scaling pays on hosts
     without R-way parallel compute).
+
+    ``numerics`` (NumericsPolicy) engages mixed precision: a
+    ``compute_dtype`` casts params at the loss boundary, and loss scaling
+    multiplies the loss before the backward pass, unscales the grads in
+    fp32, and SKIPS the whole update (params, optimizer state, scale
+    growth) when any replica's grads go non-finite — the finite check is
+    ANDed across all replicas so they stay in lockstep.  Pair with
+    ``optim.optimizers.for_numerics`` so fp32 masters ride the optimizer
+    state.  A default/fp32 policy leaves the pre-policy trace bit-equal.
     """
     if isinstance(strategy, ExchangeConfig):
         sync_every = strategy.sync_every
@@ -235,9 +289,24 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
             and exchanger.compression == "topk":
         raise ValueError("topk compression requires delay=1 (its "
                          "base+residual state rides the delayed exchange)")
-    loss_and_grad = _make_loss_and_grad(loss_fn, microbatch)
+    active = numerics is not None and not numerics.is_training_default
+    scaling = active and numerics.loss_scale != "none"
+    loss_and_grad = _make_loss_and_grad(
+        loss_fn, microbatch,
+        compute_dtype=(numerics.compute_dtype or numerics.param_dtype)
+        if active else None)
 
-    def _single_replica_update(state, batch, lr):
+    def _unscaled(loss, grads, scale):
+        """Undo the loss scale in fp32 + the cross-replica finite check."""
+        if scale is None:
+            return loss, grads, jnp.asarray(True)
+        inv = 1.0 / scale
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+        # one scalar over EVERY replica's grads: the skip decision must be
+        # replica-identical or the replicas fall out of lockstep
+        return loss * inv, grads, all_finite(grads)
+
+    def _single_replica_update(state, batch, lr, scale=None):
         # degenerate single-replica case: skip vmap entirely — the
         # size-1 batched axis confuses GSPMD sharding propagation
         # (observed as "involuntary full rematerialization" resharding)
@@ -245,7 +314,8 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
         o0 = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
                           state.opt_state)
         b0 = jax.tree.map(lambda x: x[0], batch)
-        loss, grads = loss_and_grad(p0, b0)
+        loss, grads = loss_and_grad(p0, b0, scale)
+        loss, grads, finite = _unscaled(loss, grads, scale)
         updates, o0 = optimizer.update(grads, o0, p0, lr)
         p0 = apply_updates(p0, updates)
         params = jax.tree.map(lambda x: x[None], p0)
@@ -256,10 +326,11 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
             lambda new, old: new if new.ndim == old.ndim else
             jnp.broadcast_to(new, old.shape),
             opt_state, state.opt_state)
-        return params, opt_state, loss
+        return params, opt_state, loss, finite
 
-    def _replica_update(state, batch, lr):
-        """Independent per-replica update -> (params_r, opt_r, mean loss)."""
+    def _replica_update(state, batch, lr, scale=None):
+        """Independent per-replica update -> (params_r, opt_r, mean loss,
+        all-replica finite flag)."""
         if replica_exec == "scan":
             # sequential replicas, unrolled: replica i's op sequence is
             # emitted after replica i-1's, so each forward/backward runs
@@ -275,9 +346,10 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
                 o = jax.tree.map(lambda x: x[ri] if x.ndim else x,
                                  state.opt_state)
                 b = jax.tree.map(lambda x: x[ri], batch)
-                loss, grads = loss_and_grad(p, b)
+                loss, grads = loss_and_grad(p, b, scale)
+                loss, grads, finite = _unscaled(loss, grads, scale)
                 updates, o = optimizer.update(grads, o, p, lr)
-                outs.append((apply_updates(p, updates), o, loss))
+                outs.append((apply_updates(p, updates), o, loss, finite))
             params = jax.tree.map(lambda *xs: jnp.stack(xs),
                                   *[t[0] for t in outs])
             # scalar opt leaves are replica-identical bookkeeping; keep
@@ -286,49 +358,68 @@ def make_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
                 lambda old, *xs: jnp.stack(xs) if old.ndim else xs[0],
                 state.opt_state, *[t[1] for t in outs])
             return (params, opt_state,
-                    jnp.mean(jnp.stack([t[2] for t in outs])))
+                    jnp.mean(jnp.stack([t[2] for t in outs])),
+                    jnp.stack([t[3] for t in outs]).all())
         # 1) independent per-replica grads — no cross-replica communication
-        losses, grads = jax.vmap(loss_and_grad, in_axes=(0, 0))(
-            state.params, batch)
+        losses, grads = jax.vmap(
+            lambda p, b: loss_and_grad(p, b, scale),
+            in_axes=(0, 0))(state.params, batch)
+        loss = jnp.mean(losses)
+        finite = jnp.asarray(True)
+        if scale is not None:
+            inv = 1.0 / scale
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv,
+                                 grads)
+            # the (R, ...) grads reduce to ONE flag — the AND over replicas
+            loss, finite = loss * inv, all_finite(grads)
         # 2) independent per-replica optimizer updates
         updates, opt_state = jax.vmap(
             lambda g, s, p: optimizer.update(g, s, p, lr))(
                 grads, state.opt_state, state.params)
         params = jax.vmap(apply_updates)(state.params, updates)
-        return params, opt_state, jnp.mean(losses)
+        return params, opt_state, loss, finite
 
     def step(state: TrainState, batch) -> tuple:
         lr = schedule(state.step)
         n_rep = jax.tree.leaves(batch)[0].shape[0]
+        scale = state.numerics["scale"] if scaling else None
 
-        if delay == 0 and replica_exec == "vmap":
+        if delay == 0 and replica_exec == "vmap" and not active:
             # the pre-policy synchronous path, unchanged
             if n_rep == 1:
-                params, opt_state, loss = _single_replica_update(
+                params, opt_state, loss, _ = _single_replica_update(
                     state, batch, lr)
                 return TrainState(params, opt_state, state.step + 1), loss
-            params, opt_state, loss = _replica_update(state, batch, lr)
+            params, opt_state, loss, _ = _replica_update(state, batch, lr)
             # 3) exchange & average params AND optimizer state (paper fn. 3)
             params, opt_state = _synced(exchanger, params, opt_state,
                                         state.step, sync_every)
             return TrainState(params, opt_state, state.step + 1), loss
 
         if n_rep == 1 and replica_exec == "vmap":
-            params, opt_state, loss = _single_replica_update(
-                state, batch, lr)
+            params, opt_state, loss, finite = _single_replica_update(
+                state, batch, lr, scale)
         else:
-            params, opt_state, loss = _replica_update(state, batch, lr)
+            params, opt_state, loss, finite = _replica_update(
+                state, batch, lr, scale)
+
+        ns = state.numerics
+        if scaling:
+            # poisoned step: keep the incoming state, halve the scale
+            params = _select_step(finite, params, state.params)
+            opt_state = _select_step(finite, opt_state, state.opt_state)
+            ns = next_loss_scale_state(numerics, ns, finite)
 
         if delay == 0:
             params, opt_state = _synced(exchanger, params, opt_state,
                                         state.step, sync_every)
             return TrainState(params, opt_state, state.step + 1,
-                              state.exchange), loss
+                              state.exchange, ns), loss
 
         params, opt_state, aux = _delayed_synced(
             exchanger, state.params, state.opt_state, params, opt_state,
             state.exchange, state.step, sync_every)
-        return TrainState(params, opt_state, state.step + 1, aux), loss
+        return TrainState(params, opt_state, state.step + 1, aux, ns), loss
 
     return step
 
@@ -346,7 +437,8 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
                                              ExchangeConfig] = "all_reduce",
                              replica_axes=("pod", "data"),
                              sync_every: int = 1, microbatch: int = 1,
-                             delay: int = 0):
+                             delay: int = 0,
+                             numerics: Union[NumericsPolicy, None] = None):
     """Mesh-native engine: the whole train step is one ``shard_map``
     program over ``replica_axes`` of ``mesh``; each shard owns exactly one
     replica and the exchange is a real collective (all-reduce /
@@ -363,6 +455,12 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
     step's forward/backward — so XLA's latency-hiding scheduler can run
     the all-reduce / permute chain concurrently with the compute instead
     of after it (see ``_delayed_synced``).  ``delay=0`` is unchanged.
+
+    ``numerics`` mirrors the reference engine: compute-dtype cast at the
+    loss boundary, loss scaling with the skip decision ANDed across the
+    replica axes via ``jax.lax.pmin`` — every shard must agree or the
+    replicas fall out of lockstep.  Default/fp32 policy: pre-policy
+    trace, bit-equal.
     """
     if isinstance(strategy, ExchangeConfig):
         sync_every = strategy.sync_every
@@ -387,7 +485,12 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
             and exchanger.compression == "topk":
         raise ValueError("topk compression requires delay=1 (its "
                          "base+residual state rides the delayed exchange)")
-    loss_and_grad = _make_loss_and_grad(loss_fn, microbatch)
+    active = numerics is not None and not numerics.is_training_default
+    scaling = active and numerics.loss_scale != "none"
+    loss_and_grad = _make_loss_and_grad(
+        loss_fn, microbatch,
+        compute_dtype=(numerics.compute_dtype or numerics.param_dtype)
+        if active else None)
 
     def shard_step(state: TrainState, batch) -> tuple:
         # per-shard leaves keep a leading local-replica axis of size 1
@@ -396,9 +499,26 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
         o_prev = jax.tree.map(lambda x: x[0] if x.ndim > 0 else x,
                               state.opt_state)
         b0 = jax.tree.map(lambda x: x[0], batch)
-        loss, grads = loss_and_grad(p_prev, b0)
+        scale = state.numerics["scale"] if scaling else None
+        loss, grads = loss_and_grad(p_prev, b0, scale)
+        ns = state.numerics
+        finite = None
+        if scaling:
+            inv = 1.0 / scale
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv,
+                                 grads)
+            loss = loss * inv
+            # the skip decision must be identical on every shard: AND the
+            # local flags across the replica axes (min over 0/1 ints)
+            finite = jax.lax.pmin(
+                all_finite(grads).astype(jnp.int32), axis) > 0
         updates, o0 = optimizer.update(grads, o_prev, p_prev, lr)
         p0 = apply_updates(p_prev, updates)
+        if scaling:
+            # poisoned step: keep the incoming state, halve the scale
+            p0 = _select_step(finite, p0, p_prev)
+            o0 = _select_step(finite, o0, o_prev)
+            ns = next_loss_scale_state(numerics, ns, finite)
         aux = state.exchange
         if delay == 0:
             p0, o0 = _synced(exchanger, p0, o0, state.step, sync_every)
@@ -417,7 +537,7 @@ def make_mesh_param_avg_step(loss_fn: Callable, optimizer: Optimizer,
             lambda new, old: new[None] if old.ndim > new.ndim else new,
             o0, state.opt_state)
         loss = jax.lax.pmean(loss, axis)
-        return TrainState(params, opt_state, state.step + 1, aux), loss
+        return TrainState(params, opt_state, state.step + 1, aux, ns), loss
 
     def step(state: TrainState, batch) -> tuple:
         r = jax.tree.leaves(batch)[0].shape[0]
@@ -458,17 +578,39 @@ def make_eval_step(metric_fn: Callable, *, replica_axis: bool = True):
 
 
 def make_grad_avg_step(loss_fn: Callable, optimizer: Optimizer,
-                       schedule: Callable):
+                       schedule: Callable, *,
+                       numerics: Union[NumericsPolicy, None] = None):
     """Modern baseline: loss is a mean over the global batch, so XLA
-    all-reduces gradients inside the backward pass."""
+    all-reduces gradients inside the backward pass.  ``numerics`` engages
+    the same mixed-precision contract as the param-avg engines (single
+    param copy, so the finite check needs no cross-replica reduction)."""
+    active = numerics is not None and not numerics.is_training_default
+    scaling = active and numerics.loss_scale != "none"
+    loss_and_grad = _make_loss_and_grad(
+        loss_fn, 1, compute_dtype=(numerics.compute_dtype or numerics.param_dtype)
+        if active else None)
 
     def step(state: TrainState, batch) -> tuple:
         lr = schedule(state.step)
-        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        scale = state.numerics["scale"] if scaling else None
+        loss, grads = loss_and_grad(state.params, batch, scale)
+        ns = state.numerics
+        finite = None
+        if scaling:
+            inv = 1.0 / scale
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv,
+                                 grads)
+            loss = loss * inv
+            finite = all_finite(grads)
         updates, opt_state = optimizer.update(grads, state.opt_state,
                                               state.params, lr)
         params = apply_updates(state.params, updates)
-        return TrainState(params, opt_state, state.step + 1), loss
+        if scaling:
+            params = _select_step(finite, params, state.params)
+            opt_state = _select_step(finite, opt_state, state.opt_state)
+            ns = next_loss_scale_state(numerics, ns, finite)
+        return TrainState(params, opt_state, state.step + 1,
+                          state.exchange, ns), loss
 
     return step
 

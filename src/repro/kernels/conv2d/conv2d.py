@@ -137,9 +137,10 @@ def matmul_bias(x, w, b, *, bm: int = None, bk: int = None, bn: int = None,
     if bm is None or bk is None or bn is None:
         m, k = x.shape
         n = w.shape[1]
+        wd = None if w.dtype == x.dtype else w.dtype
         tbm, tbk, tbn = tune.matmul_blocks(m, k, n, x.dtype,
                                            interpret=interpret,
-                                           autotune=autotune)
+                                           autotune=autotune, w_dtype=wd)
         bm, bk, bn = bm or tbm, bk or tbk, bn or tbn
     return _matmul_bias_core(x, w, b, bm, bk, bn, relu, interpret)
 
@@ -317,9 +318,11 @@ def conv2d_fused(x, w, *, stride: int, padding: int, bias=None,
     oh = (hp - k) // stride + 1
     ow = (wp - k) // stride + 1
     if bm is None or bn is None:
+        wd = None if w.dtype == x.dtype else w.dtype
         tbm, tbn = tune.conv_blocks(b_, oh, ow, k, cin, cout, stride,
                                     x.dtype, groups=groups,
-                                    interpret=interpret, autotune=autotune)
+                                    interpret=interpret, autotune=autotune,
+                                    w_dtype=wd)
         bm, bn = bm or tbm, bn or tbn
     if bias is None:
         bias = jnp.zeros((cout,), x.dtype)

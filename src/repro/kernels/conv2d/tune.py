@@ -46,10 +46,17 @@ def _autotune_enabled(interpret: bool, override: bool = None) -> bool:
 
 
 def matmul_blocks(m: int, k: int, n: int, dtype, *, interpret: bool,
-                  autotune: bool = None) -> Tuple[int, int, int]:
-    """(bm, bk, bn) for the blocked matmul; autotuned on compiled backends."""
+                  autotune: bool = None,
+                  w_dtype=None) -> Tuple[int, int, int]:
+    """(bm, bk, bn) for the blocked matmul; autotuned on compiled backends.
+
+    ``w_dtype`` widens the cache key to the (x, w) dtype tuple when the
+    operands differ (a NumericsPolicy mixing precisions): winners are
+    measured per byte-traffic profile, so mixed-dtype problems must not
+    share entries with same-dtype ones."""
     default = (pow2_clip(m, LANE), pow2_clip(k, LANE), pow2_clip(n, LANE))
-    key = ("matmul", m, k, n, str(dtype))
+    dt_key = str(dtype) if w_dtype is None else (str(dtype), str(w_dtype))
+    key = ("matmul", m, k, n, dt_key)
     if not _autotune_enabled(interpret, autotune):
         return common.autotune(key, [default], None)
 
@@ -61,8 +68,8 @@ def matmul_blocks(m: int, k: int, n: int, dtype, *, interpret: bool,
     import numpy as np
     from repro.kernels.conv2d import conv2d as _k
     x = np.random.default_rng(0).normal(size=(m, k)).astype(dtype)
-    w = np.random.default_rng(1).normal(size=(k, n)).astype(dtype)
-    b = np.zeros((n,), dtype)
+    w = np.random.default_rng(1).normal(size=(k, n)).astype(w_dtype or dtype)
+    b = np.zeros((n,), w_dtype or dtype)
 
     def measure(c):
         bm, bk, bn = c
@@ -80,15 +87,18 @@ _CONV_BM_CAP = 512
 
 def conv_blocks(b: int, oh: int, ow: int, kernel: int, cin: int, cout: int,
                 stride: int, dtype, *, groups: int = 1, interpret: bool,
-                autotune: bool = None) -> Tuple[int, int]:
+                autotune: bool = None, w_dtype=None) -> Tuple[int, int]:
     """(bm, bn) for the fused implicit-GEMM conv (reduction is unrolled
     in-kernel, so there is no bk).  ``groups`` is part of the cache key —
     a grouped layer tiles N per diagonal block (Cout/G wide), so its
     winning blocking is NOT the ungrouped layer's — and bn defaults to
-    the per-group output width, never a whole-Cout tile."""
+    the per-group output width, never a whole-Cout tile.  ``w_dtype``
+    widens the key to the (x, w) dtype tuple for mixed-precision calls
+    (see ``matmul_blocks``)."""
     m = oh * ow
     default = (pow2_clip(m, _CONV_BM_CAP), pow2_clip(cout // groups, LANE))
-    key = ("conv", b, oh, ow, kernel, cin, cout, stride, groups, str(dtype))
+    dt_key = str(dtype) if w_dtype is None else (str(dtype), str(w_dtype))
+    key = ("conv", b, oh, ow, kernel, cin, cout, stride, groups, dt_key)
     if not _autotune_enabled(interpret, autotune):
         return common.autotune(key, [default], None)
 
@@ -102,7 +112,7 @@ def conv_blocks(b: int, oh: int, ow: int, kernel: int, cin: int, cout: int,
     w_sz = (ow - 1) * stride + kernel
     x = np.random.default_rng(0).normal(size=(b, h, w_sz, cin)).astype(dtype)
     wt = np.random.default_rng(1).normal(
-        size=(kernel, kernel, cin // groups, cout)).astype(dtype)
+        size=(kernel, kernel, cin // groups, cout)).astype(w_dtype or dtype)
 
     def measure(c):
         bm, bn = c

@@ -38,9 +38,14 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 NEG = -1e30
 
 
-def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-                   acc_scr, *, bk: int, gp: int, window, scale: float,
-                   n_k: int, n_kv_heads: int, cap: int):
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, *refs, bk: int, gp: int,
+                   window, scale: float, n_k: int, n_kv_heads: int,
+                   cap: int, quant: bool):
+    if quant:
+        # int8 cache: per-slot fp32 scales ride as two extra (1, bk) blocks
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
     i = pl.program_id(0)                   # b * Hkv + kv-head
     ki = pl.program_id(1)
     p = pos_ref[i // n_kv_heads]           # this row's absolute position
@@ -64,6 +69,11 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        if quant:
+            # dequantize in the score domain: s[g,c] needs k[c]*ks[c], and
+            # q.k_int scaled per COLUMN is a free (1, bk) lane broadcast —
+            # no (bk, 1) relayout of the cache tile
+            s = s * ks_ref[...]
         cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (gp, bk), 1)
         slot_pos = p - jnp.mod(p - cols, cap)
         mask = (cols < cap) & (slot_pos >= 0)
@@ -77,6 +87,9 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         alpha = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=1,
                                                   keepdims=True)
+        if quant:
+            # v dequant folds the same way: (pexp @ diag(vs)) @ v_int
+            pexp = pexp * vs_ref[...]
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
             pexp.astype(v.dtype), v, preferred_element_type=jnp.float32)
         m_scr[...] = m_new
@@ -89,21 +102,29 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 @functools.partial(jax.jit, static_argnames=("n_kv_heads", "window", "scale",
                                              "bk", "interpret", "cap"))
-def _decode_impl(q, k, v, pos, n_kv_heads, window, scale, bk, interpret,
-                 cap):
+def _decode_impl(q, k, v, ks, vs, pos, n_kv_heads, window, scale, bk,
+                 interpret, cap):
     """Folded padded inputs: q (B*Hkv, gp, hd), k/v (B*Hkv, Wp, hd),
+    ks/vs (B*Hkv, Wp) fp32 dequant scales or None (unquantized cache),
     pos (B,) int32 -> o (B*Hkv, gp, hd)."""
     bh, gp, hd = q.shape
     wp = k.shape[1]
     assert wp % bk == 0, (wp, bk)
     n_k = wp // bk
+    quant = ks is not None
 
+    in_specs = [pl.BlockSpec((1, gp, hd), lambda i, ki, pos_ref: (i, 0, 0)),
+                pl.BlockSpec((1, bk, hd), lambda i, ki, pos_ref: (i, ki, 0)),
+                pl.BlockSpec((1, bk, hd), lambda i, ki, pos_ref: (i, ki, 0))]
+    args = [q, k, v]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bk), lambda i, ki, pos_ref: (i, ki)),
+                     pl.BlockSpec((1, bk), lambda i, ki, pos_ref: (i, ki))]
+        args += [ks, vs]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(bh, n_k),
-        in_specs=[pl.BlockSpec((1, gp, hd), lambda i, ki, pos_ref: (i, 0, 0)),
-                  pl.BlockSpec((1, bk, hd), lambda i, ki, pos_ref: (i, ki, 0)),
-                  pl.BlockSpec((1, bk, hd), lambda i, ki, pos_ref: (i, ki, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, gp, hd), lambda i, ki, pos_ref: (i, 0, 0)),
         scratch_shapes=[pltpu.VMEM((gp, 1), jnp.float32),
                         pltpu.VMEM((gp, 1), jnp.float32),
@@ -112,21 +133,27 @@ def _decode_impl(q, k, v, pos, n_kv_heads, window, scale, bk, interpret,
     return pl.pallas_call(
         functools.partial(_decode_kernel, bk=bk, gp=gp, window=window,
                           scale=scale, n_k=n_k, n_kv_heads=n_kv_heads,
-                          cap=cap),
+                          cap=cap, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, gp, hd), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(pos, q, k, v)
+    )(pos, *args)
 
 
 def decode_blocks(cap: int, hd: int, dtype, *, interpret: bool,
-                  autotune: bool = None):
-    """(bk,) KV tile size, shared-autotuned on compiled backends."""
+                  autotune: bool = None, kv_dtype=None):
+    """(bk,) KV tile size, shared-autotuned on compiled backends.
+
+    ``kv_dtype`` widens the cache key when the ring cache's storage dtype
+    differs from the query's (bf16/int8 KV under a NumericsPolicy): tile
+    timing depends on the bytes swept, so mixed-dtype calls must not
+    share winners with same-dtype ones."""
     from repro.kernels import common
     default = (pow2_clip(cap, 128),)
-    key = ("decode_attn", cap, hd, str(dtype))
+    dt_key = str(dtype) if kv_dtype is None else (str(dtype), str(kv_dtype))
+    key = ("decode_attn", cap, hd, dt_key)
     if not common.autotune_enabled(interpret, autotune):
         return common.autotune(key, [default], None)
     cands = {default} | {(bk,) for bk in (64, 128, 256)
@@ -134,20 +161,30 @@ def decode_blocks(cap: int, hd: int, dtype, *, interpret: bool,
     import numpy as np
     rng = np.random.default_rng(0)
     q = rng.normal(size=(4, 2, 4, hd)).astype(dtype)
-    kv = rng.normal(size=(4, cap, 2, hd)).astype(dtype)
+    kwargs = {}
+    if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+        kv = rng.integers(-127, 128, size=(4, cap, 2, hd)).astype(np.int8)
+        sc = (np.abs(rng.normal(size=(4, cap, 2))) + 1e-3).astype(np.float32)
+        kwargs = {"k_scale": sc, "v_scale": sc}
+    else:
+        kv = rng.normal(size=(4, cap, 2, hd)).astype(kv_dtype or dtype)
     pos = np.full((4,), cap - 1, np.int32)
 
     def measure(c):
         return common.time_call(
             lambda: decode_attention_pallas(
-                q, kv, kv, pos, scale=hd ** -0.5, bk=c[0], interpret=False))
+                q, kv, kv, pos, scale=hd ** -0.5, bk=c[0], interpret=False,
+                **kwargs))
     return common.autotune(key, sorted(cands), measure)
 
 
 def decode_attention_pallas(q, k, v, pos, *, window=None, scale=1.0,
                             bk: int = None, interpret: bool = None,
-                            autotune: bool = None):
+                            autotune: bool = None, k_scale=None,
+                            v_scale=None):
     """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd) ring cache; pos (B,) int32.
+    ``k_scale``/``v_scale`` (B,W,Hkv) fp32 mark an int8-quantized cache —
+    dequantized in-kernel (see ``_decode_kernel``).
 
     Returns (B,Hkv,G,hd).  NOT differentiable (inference fast path).
     """
@@ -155,8 +192,9 @@ def decode_attention_pallas(q, k, v, pos, *, window=None, scale=1.0,
     cap = k.shape[1]
     interpret = resolve_interpret(interpret)
     if bk is None:
+        kvd = None if k.dtype == q.dtype else k.dtype
         (bk,) = decode_blocks(cap, hd, q.dtype, interpret=interpret,
-                              autotune=autotune)
+                              autotune=autotune, kv_dtype=kvd)
     bk = min(bk, pow2_clip(cap, bk))
     gp = -(-g // SUBLANE) * SUBLANE
     qf = q.reshape(b * hkv, g, hd)
@@ -168,6 +206,15 @@ def decode_attention_pallas(q, k, v, pos, *, window=None, scale=1.0,
     if wp != cap:
         pad = ((0, 0), (0, wp - cap), (0, 0))
         kf, vf = jnp.pad(kf, pad), jnp.pad(vf, pad)
-    o = _decode_impl(qf, kf, vf, jnp.asarray(pos, jnp.int32), hkv, window,
-                     scale, bk, interpret, cap)
+    ksf = vsf = None
+    if k_scale is not None:
+        ksf = jnp.asarray(k_scale, jnp.float32).transpose(0, 2, 1) \
+            .reshape(b * hkv, cap)
+        vsf = jnp.asarray(v_scale, jnp.float32).transpose(0, 2, 1) \
+            .reshape(b * hkv, cap)
+        if wp != cap:
+            ksf = jnp.pad(ksf, ((0, 0), (0, wp - cap)))
+            vsf = jnp.pad(vsf, ((0, 0), (0, wp - cap)))
+    o = _decode_impl(qf, kf, vf, ksf, vsf, jnp.asarray(pos, jnp.int32),
+                     hkv, window, scale, bk, interpret, cap)
     return o[:, :g].reshape(b, hkv, g, hd)

@@ -20,14 +20,18 @@ from repro.kernels.decode_attention.decode_attention import (
 
 def decode_attention(q, k, v, pos, *, window=None, scale=1.0,
                      impl: str = "pallas", bk: int = None,
-                     interpret: bool = None, autotune: bool = None):
-    """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd); pos (B,) int32 -> (B,Hkv,G,hd)."""
+                     interpret: bool = None, autotune: bool = None,
+                     k_scale=None, v_scale=None):
+    """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd); pos (B,) int32 -> (B,Hkv,G,hd).
+    ``k_scale``/``v_scale`` (B,W,Hkv) fp32: int8-quantized cache."""
     if impl == "xla":
         return ref.decode_attention_ref(q, k, v, pos, window=window,
-                                        scale=scale)
+                                        scale=scale, k_scale=k_scale,
+                                        v_scale=v_scale)
     return decode_attention_pallas(q, k, v, pos, window=window, scale=scale,
                                    bk=bk, interpret=interpret,
-                                   autotune=autotune)
+                                   autotune=autotune, k_scale=k_scale,
+                                   v_scale=v_scale)
 
 
 def _example(seed: int = 0):

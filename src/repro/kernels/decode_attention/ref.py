@@ -21,11 +21,20 @@ def slot_positions(pos, cap: int):
     return pos[:, None] - jnp.mod(pos[:, None] - idx[None, :], cap)
 
 
-def decode_attention_ref(q, k, v, pos, *, window=None, scale=1.0):
+def decode_attention_ref(q, k, v, pos, *, window=None, scale=1.0,
+                         k_scale=None, v_scale=None):
     """q (B,Hkv,G,hd) one token per row; k,v (B,W,Hkv,hd) ring cache AFTER
     the current token's K/V was written; pos (B,) int32.  Returns
-    (B,Hkv,G,hd) float32-accumulated attention output in q.dtype."""
+    (B,Hkv,G,hd) float32-accumulated attention output in q.dtype.
+
+    ``k_scale``/``v_scale`` (B,W,Hkv) fp32 mark an int8 cache: values
+    dequantize as ``int8 * scale`` before the fp32 attention math."""
     cap = k.shape[1]
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale.astype(jnp.float32)[..., None]
+        v = v * v_scale.astype(jnp.float32)[..., None]
     sp = slot_positions(pos, cap)                       # (B, W)
     valid = sp >= 0
     if window is not None:

@@ -370,11 +370,14 @@ _flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
 # ----------------------------------------------------------------- entry ----
 
 def flash_blocks(s: int, hd: int, dtype, *, interpret: bool,
-                 autotune: bool = None):
-    """(bq, bk) tile sizes, shared-autotuned on compiled backends."""
+                 autotune: bool = None, kv_dtype=None):
+    """(bq, bk) tile sizes, shared-autotuned on compiled backends.
+    ``kv_dtype`` widens the cache key to the (q, kv) dtype tuple when the
+    operands differ (mixed-precision NumericsPolicy)."""
     from repro.kernels import common
     default = (pow2_clip(s, 128), pow2_clip(s, 128))
-    key = ("flash", s, hd, str(dtype))
+    dt_key = str(dtype) if kv_dtype is None else (str(dtype), str(kv_dtype))
+    key = ("flash", s, hd, dt_key)
     if not common.autotune_enabled(interpret, autotune):
         return common.autotune(key, [default], None)
     cap = pow2_clip(s, 256)
@@ -384,7 +387,7 @@ def flash_blocks(s: int, hd: int, dtype, *, interpret: bool,
     import numpy as np
     rng = np.random.default_rng(0)
     q = rng.normal(size=(4, s, hd)).astype(dtype)
-    kv = rng.normal(size=(4, s, hd)).astype(dtype)
+    kv = rng.normal(size=(4, s, hd)).astype(kv_dtype or dtype)
 
     def measure(c):
         bq, bk = c
@@ -408,8 +411,9 @@ def flash_attention_folded(q, k, v, *, n_q_heads: int, n_kv_heads: int,
     bhq, s, hd = q.shape
     interpret = resolve_interpret(interpret)
     if bq is None or bk is None:
+        kvd = None if k.dtype == q.dtype else k.dtype
         tbq, tbk = flash_blocks(s, hd, q.dtype, interpret=interpret,
-                                autotune=autotune)
+                                autotune=autotune, kv_dtype=kvd)
         bq, bk = bq or tbq, bk or tbk
     bq = min(bq, pow2_clip(s, bq))
     bk = min(bk, pow2_clip(s, bk))

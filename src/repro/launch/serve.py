@@ -37,6 +37,7 @@ from repro import models
 from repro.configs import ALEXNET, ALEXNET_SMOKE, get_config, reduced
 from repro.kernels.common import KernelPolicy
 from repro.launch.mesh import make_replica_mesh
+from repro.numerics import get_policy
 from repro.serving import Request, ServingEngine
 
 
@@ -64,6 +65,15 @@ def main():
                     choices=["auto", "xla", "pallas"],
                     help="KernelPolicy backend — pallas engages the "
                     "flash-decode kernel (interpret mode on CPU hosts)")
+    ap.add_argument("--numerics", default="fp32",
+                    choices=["fp32", "bf16"],
+                    help="NumericsPolicy preset for the served model "
+                    "(docs/numerics.md)")
+    ap.add_argument("--kv-cache-dtype", default="auto",
+                    choices=["auto", "fp32", "bf16", "int8"],
+                    help="KV-cache storage dtype: auto follows the model "
+                    "dtype; int8 quantizes per head/slot with fp32 scales "
+                    "— 2x decode slots at equal ring bytes")
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--d-model", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -76,8 +86,12 @@ def main():
         if args.smoke:
             cfg = reduced(cfg, n_layers=args.layers or 2,
                           d_model=args.d_model or 256)
+    npol = get_policy(args.numerics)
+    if args.kv_cache_dtype != "auto":
+        npol = dataclasses.replace(npol, kv_cache_dtype=args.kv_cache_dtype)
     cfg = dataclasses.replace(cfg,
-                              kernels=KernelPolicy(backend=args.kernel_backend))
+                              kernels=KernelPolicy(backend=args.kernel_backend),
+                              numerics=npol)
     if args.images and cfg.family != "vlm":
         raise SystemExit(f"--images needs a vlm arch, {cfg.name} is "
                          f"{cfg.family}")
@@ -117,7 +131,7 @@ def main():
 
     print(f"arch={cfg.name} family={cfg.family} devices={n_dev} "
           f"slots={args.slots} capacity={args.capacity} "
-          f"kernels={cfg.kernels.describe()}")
+          f"kernels={cfg.kernels.describe()} numerics={npol.describe()}")
     t0 = time.perf_counter()
     results = engine.run(reqs)
     wall = time.perf_counter() - t0

@@ -48,11 +48,12 @@ from repro.core import (ExchangeConfig, init_param_avg_state, make_eval_step,
                         replica_spread, reshape_for_replicas)
 from repro.kernels.common import KernelPolicy
 from repro.launch.mesh import make_replica_mesh
+from repro.numerics import get_policy
 from repro.sharding.specs import replica_sharding, state_sharding
 from repro.data import synthetic
 from repro.models import alexnet as alexnet_mod
 from repro.optim import schedules
-from repro.optim.optimizers import get_optimizer
+from repro.optim.optimizers import for_numerics, get_optimizer
 from repro.train_loop import (EVAL_SEED_OFFSET, TrainSession, alexnet_metrics,
                               lm_metrics)
 
@@ -79,12 +80,16 @@ def make_policy(args) -> KernelPolicy:
                         conv2d=args.conv_backend)
 
 
-def build_lm(args) -> Build:
+def build_lm(args, numerics) -> Build:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg, n_layers=args.layers or 2,
                       d_model=args.d_model or 256)
-    cfg = dataclasses.replace(cfg, kernels=make_policy(args))
+    # numerics must land on cfg HERE, before the init/loss closures below
+    # capture it — a later dataclasses.replace on build.cfg rebinds the
+    # field but leaves the closures training fp32 params
+    cfg = dataclasses.replace(cfg, kernels=make_policy(args),
+                              numerics=numerics)
 
     def add_extras(b):
         out = {"tokens": b["tokens"], "labels": b["labels"]}
@@ -118,12 +123,14 @@ def build_lm(args) -> Build:
                  plateau_metric="loss")
 
 
-def build_alexnet(args, error) -> Build:
+def build_alexnet(args, error, numerics) -> Build:
     if args.faithful:
         cfg = ALEXNET_FAITHFUL_SMOKE if args.smoke else ALEXNET_FAITHFUL
     else:
         cfg = ALEXNET_SMOKE if args.smoke else ALEXNET
-    cfg = dataclasses.replace(cfg, kernels=make_policy(args))
+    # see build_lm: the closures capture cfg now, so numerics goes on now
+    cfg = dataclasses.replace(cfg, kernels=make_policy(args),
+                              numerics=numerics)
     if args.image_size is not None:
         try:
             cfg.feature_hw(args.image_size)   # conv/pool windows must fit
@@ -256,6 +263,18 @@ def main():
                     "pallas = fused implicit-GEMM kernel; "
                     "pallas_im2col_ref = two-stage XLA-im2col + Pallas "
                     "GEMM parity path")
+    ap.add_argument("--numerics", default="fp32",
+                    choices=["fp32", "bf16"],
+                    help="NumericsPolicy preset: fp32 = the pre-policy "
+                    "default (bit-equal); bf16 = bf16 params/compute with "
+                    "fp32 master weights in the optimizer state and "
+                    "dynamic loss scaling (docs/numerics.md)")
+    ap.add_argument("--kv-cache-dtype", default="auto",
+                    choices=["auto", "fp32", "bf16", "int8"],
+                    help="decode KV-cache storage dtype (serving only "
+                    "matters for --arch LMs; auto follows the model "
+                    "dtype, int8 quantizes per head/slot — 2x slots per "
+                    "byte)")
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -301,13 +320,17 @@ def main():
     except ValueError as e:
         ap.error(str(e))
 
+    npol = get_policy(args.numerics)
+    if args.kv_cache_dtype != "auto":
+        npol = dataclasses.replace(npol, kv_cache_dtype=args.kv_cache_dtype)
+
     if args.arch == "alexnet":
-        build = build_alexnet(args, ap.error)
+        build = build_alexnet(args, ap.error, npol)
     else:
-        build = build_lm(args)
+        build = build_lm(args, npol)
     build.cfg = dataclasses.replace(build.cfg, exchange=exch)
 
-    opt = get_optimizer(args.optimizer)
+    opt = for_numerics(get_optimizer(args.optimizer), npol)
     controller = make_controller(args)
 
     engine = args.engine
@@ -321,7 +344,8 @@ def main():
                  "--engine reference")
 
     rng = jax.random.PRNGKey(args.seed)
-    state = init_param_avg_state(rng, build.init, opt, n_rep, exchange=exch)
+    state = init_param_avg_state(rng, build.init, opt, n_rep, exchange=exch,
+                                 numerics=npol)
 
     sharding = None
     if engine == "mesh":
@@ -338,7 +362,7 @@ def main():
             # instead of allocating a fresh copy of the state every step
             return jax.jit(make_mesh_param_avg_step(
                 build.loss, opt, sched, mesh=mesh, strategy=exch,
-                replica_axes=("data",)),
+                replica_axes=("data",), numerics=npol),
                 donate_argnums=0)
     else:
         out_shardings = None
@@ -373,7 +397,7 @@ def main():
                 {"out_shardings": out_shardings}
             return jax.jit(make_param_avg_step(
                 build.loss, opt, sched, strategy=exch,
-                replica_exec=args.replica_exec),
+                replica_exec=args.replica_exec, numerics=npol),
                 donate_argnums=0, **kw)
 
     session = TrainSession(
@@ -392,6 +416,7 @@ def main():
         log_every=args.log_every, images_per_step=args.batch,
         metrics_path=args.metrics_out,
         run_meta={"kernels": make_policy(args).describe(),
+                  "numerics": npol.describe(),
                   "engine": engine, "strategy": args.strategy,
                   "exchange": exch.describe(),
                   "replica_exec": args.replica_exec,
@@ -402,7 +427,8 @@ def main():
           f"devices={n_dev} model_parallel={mp} "
           f"engine={engine} exchange={exch.describe()} "
           f"replica_exec={args.replica_exec} staging={args.staging} "
-          f"kernels={make_policy(args).describe()}"
+          f"kernels={make_policy(args).describe()} "
+          f"numerics={npol.describe()}"
           + (f" resume_from={args.ckpt_dir}" if args.resume else ""))
     result = session.run()
     spread = float(replica_spread(result.state.params))

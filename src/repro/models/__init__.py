@@ -219,19 +219,19 @@ def write_slots(state: DecodeState, sub: DecodeState, slots) -> DecodeState:
 def model_inputs(cfg, batch: int, seq_len: int):
     """Shape/dtype description of the training/prefill batch.  For the
     conv family ``seq_len`` is ignored — the batch is images + labels."""
+    from repro.numerics import param_dtype
+    dt = param_dtype(cfg)
     if cfg.family == "conv":
         return {"images": ((batch, cfg.image_size, cfg.image_size,
-                            cfg.in_channels), jnp.dtype(cfg.dtype)),
+                            cfg.in_channels), dt),
                 "labels": ((batch,), jnp.int32)}
     spec = {"tokens": ((batch, seq_len), jnp.int32),
             "labels": ((batch, seq_len), jnp.int32)}
     if cfg.family == "encdec":
-        spec["frames"] = ((batch, max(seq_len // 4, 8), cfg.d_model),
-                          jnp.dtype(cfg.dtype))
+        spec["frames"] = ((batch, max(seq_len // 4, 8), cfg.d_model), dt)
     if cfg.family == "vlm":
         n_img = cfg.n_image_tokens
-        spec["image_embeds"] = ((batch, n_img, cfg.d_model),
-                                jnp.dtype(cfg.dtype))
+        spec["image_embeds"] = ((batch, n_img, cfg.d_model), dt)
         spec["image_mask"] = ((batch, seq_len), jnp.bool_)
     return spec
 

@@ -62,12 +62,16 @@ def conv2d(x, w, b, stride: int, padding: int, backend: str = "xla", *,
                                       bias=b, relu=relu, groups=groups,
                                       interpret=interpret, autotune=autotune)
     if backend == "xla":
+        # fp32 accumulation via operand upcast, not preferred_element_type:
+        # this jax's conv TRANSPOSE rejects mixed (bf16, f32-cotangent)
+        # operands, while the casts' own vjps convert cotangents cleanly.
+        # For fp32 inputs the casts are no-ops — bit-equal to the old form.
         y = jax.lax.conv_general_dilated(
-            x, w, window_strides=(stride, stride),
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            window_strides=(stride, stride),
             padding=[(padding, padding), (padding, padding)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            feature_group_count=groups,
-            preferred_element_type=jnp.float32).astype(x.dtype)
+            feature_group_count=groups).astype(x.dtype)
         y = y + b.astype(y.dtype)
         return jax.nn.relu(y) if relu else y
     raise ValueError(f"unknown conv backend {backend!r}")
@@ -93,7 +97,8 @@ def maxpool(x, size: int = 3, stride: int = 2):
 
 
 def init(rng, cfg):
-    dt = jnp.dtype(cfg.dtype)
+    from repro.numerics import param_dtype
+    dt = param_dtype(cfg)
     params = {"convs": [], "fcs": []}
     c_in, hw = cfg.in_channels, cfg.image_size
     for i, cs in enumerate(cfg.convs):

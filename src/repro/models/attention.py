@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import policy_of
 from repro.models.layers import apply_rope, dense_init, rope_freqs
+from repro.numerics import kv_cache_spec
 
 NEG_INF = -1e30
 
@@ -248,10 +249,32 @@ def cache_capacity(cfg, seq_len: int, window=None) -> int:
 
 
 def init_cache(cfg, batch: int, capacity: int, dtype):
-    return {
-        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
-    }
+    """Ring-buffer KV cache.  The storage dtype resolves through the
+    config's ``NumericsPolicy`` (``kv_cache_dtype``): ``auto`` stores the
+    model dtype; ``bf16`` halves the ring; ``int8`` quantizes per
+    (row, slot, head) with fp32 ``k_scale``/``v_scale`` leaves riding
+    next to the data — 2x/4x decode slots per byte of cache."""
+    store, quant = kv_cache_spec(cfg, dtype)
+    shape = (batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, store), "v": jnp.zeros(shape, store)}
+    if quant:
+        cache["k_scale"] = jnp.zeros(shape[:3], jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:3], jnp.float32)
+    return cache
+
+
+def _kv_quant(x):
+    """Symmetric per-(..., head) int8 quantization over the hd axis:
+    x (..., hd) float -> (int8 values, fp32 scale (...)).  amax is clamped
+    so all-zero slots (the unwritten ring tail) get scale eps, not 0."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _kv_dequant(q, scale):
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
 
 
 def cross_decode(params, cfg, x, cross_cache):
@@ -291,12 +314,20 @@ def fill_cache(params, cfg, x, cache, *, window=None, rope=True,
         inv = rope_freqs(cfg)
         k = apply_rope(k, jnp.arange(s), inv)
     take = min(cap, s)
+    quant = "k_scale" in cache
     if length is None:
         positions = jnp.arange(s - take, s)
         slots = positions % cap
-        k_new = cache["k"].at[:, slots].set(k[:, s - take:].astype(dt))
-        v_new = cache["v"].at[:, slots].set(v[:, s - take:].astype(dt))
-        return {"k": k_new, "v": v_new}
+        kw, vw = k[:, s - take:], v[:, s - take:]
+        if quant:
+            kw, ks = _kv_quant(kw)
+            vw, vs = _kv_quant(vw)
+        out = {"k": cache["k"].at[:, slots].set(kw.astype(dt)),
+               "v": cache["v"].at[:, slots].set(vw.astype(dt))}
+        if quant:
+            out["k_scale"] = cache["k_scale"].at[:, slots].set(ks)
+            out["v_scale"] = cache["v_scale"].at[:, slots].set(vs)
+        return out
     # per-row: the last `take` positions RELATIVE to each row's length.
     # `take` consecutive ints stay distinct mod cap, so the row scatter
     # never collides; positions < 0 write their slot's previous value
@@ -307,12 +338,22 @@ def fill_cache(params, cfg, x, cache, *, window=None, rope=True,
     pclip = jnp.clip(positions, 0, s - 1)
     rows = jnp.arange(b)[:, None]
     slots = jnp.mod(positions, cap)
-    k_g = jnp.where(valid[..., None, None], k[rows, pclip].astype(dt),
+    kw, vw = k[rows, pclip], v[rows, pclip]
+    if quant:
+        kw, ks = _kv_quant(kw)
+        vw, vs = _kv_quant(vw)
+    k_g = jnp.where(valid[..., None, None], kw.astype(dt),
                     cache["k"][rows, slots])
-    v_g = jnp.where(valid[..., None, None], v[rows, pclip].astype(dt),
+    v_g = jnp.where(valid[..., None, None], vw.astype(dt),
                     cache["v"][rows, slots])
-    return {"k": cache["k"].at[rows, slots].set(k_g),
-            "v": cache["v"].at[rows, slots].set(v_g)}
+    out = {"k": cache["k"].at[rows, slots].set(k_g),
+           "v": cache["v"].at[rows, slots].set(v_g)}
+    if quant:
+        out["k_scale"] = cache["k_scale"].at[rows, slots].set(
+            jnp.where(valid[..., None], ks, cache["k_scale"][rows, slots]))
+        out["v_scale"] = cache["v_scale"].at[rows, slots].set(
+            jnp.where(valid[..., None], vs, cache["v_scale"][rows, slots]))
+    return out
 
 
 def resolve_decode_impl(cfg) -> str:
@@ -348,17 +389,28 @@ def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
         k_new = apply_rope(k_new, pv[:, None], inv)
     slot = pv % cap
     rows = jnp.arange(b)
-    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
-    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    quant = "k_scale" in cache
+    kw, vw = k_new[:, 0], v_new[:, 0]
+    if quant:
+        kw, ks = _kv_quant(kw)                        # scale (B, Hkv)
+        vw, vs = _kv_quant(vw)
+    k = cache["k"].at[rows, slot].set(kw.astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(vw.astype(cache["v"].dtype))
+    new_cache = {"k": k, "v": v}
+    if quant:
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks)
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs)
     qg = _group(q, cfg.n_kv_heads)                    # (B,1,Hkv,G,hd)
     scale = cfg.head_dim ** -0.5
     impl = resolve_decode_impl(cfg) if impl is None else impl
     if impl == "pallas":
         from repro.kernels.decode_attention import ops as da_ops
         pol = policy_of(cfg)
-        o = da_ops.decode_attention(qg[:, 0], k, v, pv, window=window,
-                                    scale=scale, interpret=pol.interpret,
-                                    autotune=pol.autotune)
+        o = da_ops.decode_attention(
+            qg[:, 0], k, v, pv, window=window, scale=scale,
+            interpret=pol.interpret, autotune=pol.autotune,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"))
         o = o.astype(x.dtype)[:, None]                # (B,1,Hkv,G,hd)
     else:
         # slot i holds absolute position pos - ((pos - i) mod W); valid
@@ -368,11 +420,15 @@ def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
         valid = slot_pos >= 0
         if window is not None and window < cap:
             valid &= slot_pos > pv[:, None] - window
-        s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k,
+        ka, va = k, v
+        if quant:
+            ka = _kv_dequant(k, new_cache["k_scale"])
+            va = _kv_dequant(v, new_cache["v_scale"])
+        s = jnp.einsum("bqhgk,bshk->bhgqs", qg, ka,
                        preferred_element_type=jnp.float32) * scale
         s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
-        o = jnp.einsum("bhgqs,bshk->bqhgk", p, v,
+        o = jnp.einsum("bhgqs,bshk->bqhgk", p, va,
                        preferred_element_type=jnp.float32).astype(x.dtype)
     o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim)
-    return _out(params, cfg, o), {"k": k, "v": v}
+    return _out(params, cfg, o), new_cache

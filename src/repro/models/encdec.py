@@ -22,7 +22,8 @@ from repro.models.layers import (embed_apply, embed_init, mlp_apply, mlp_init,
 
 
 def _dtype(cfg):
-    return jnp.dtype(cfg.dtype)
+    from repro.numerics import param_dtype
+    return param_dtype(cfg)
 
 
 def init(rng, cfg):

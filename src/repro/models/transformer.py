@@ -43,7 +43,10 @@ def block_kinds(cfg) -> Tuple[str, ...]:
 
 
 def _dtype(cfg):
-    return jnp.dtype(cfg.dtype)
+    # NumericsPolicy-aware: policy param_dtype wins, else the config's
+    # legacy dtype field
+    from repro.numerics import param_dtype
+    return param_dtype(cfg)
 
 
 def _split(cfg):

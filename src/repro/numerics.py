@@ -1,0 +1,224 @@
+"""NumericsPolicy: precision as a first-class policy axis.
+
+The paper squeezed AlexNet-scale training out of limited GPU memory by
+being ruthless about where bytes live; this module is that discipline as
+a policy object.  Mirroring ``KernelPolicy`` (PR 4), a frozen
+``NumericsPolicy`` rides on every config (``cfg.numerics``) so each
+layer resolves the same precision decisions without kwarg threading:
+
+* **models/** read ``param_dtype(cfg)`` at init (None = inherit the
+  config's legacy ``dtype`` field, which stops being dead weight).
+* **core/steps.py + optim/** read ``compute_dtype`` / ``master_weights``
+  / ``loss_scale``: bf16 compute with fp32 master weights held in
+  optimizer state, and static/dynamic loss scaling whose non-finite
+  detection SKIPS the update and halves the scale (see
+  ``next_loss_scale_state``).
+* **serving/ + models/attention.py** read ``kv_cache_dtype``: the ring
+  KV cache stores bf16 or int8 (per-head-per-slot scales, dequantized
+  in-kernel) — 2x/4x decode slots per byte of HBM.
+* **checkpoint/ + train_loop/** stash ``describe()`` in the manifest's
+  ``run_meta`` so resuming under a different policy warns loudly.
+
+The default policy is inert by construction: ``is_training_default``
+gates every train-step change, so ``numerics=fp32`` is bit-equal to the
+pre-policy engine (golden-trace suite holds the line).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LOSS_SCALES = ("none", "static", "dynamic")
+KV_CACHE_DTYPES = ("auto", "fp32", "bf16", "int8")
+
+_KV_JNP = {"fp32": "float32", "bf16": "bfloat16", "int8": "int8"}
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """Per-run precision policy; carried on configs next to ``kernels:``
+    and ``exchange:``.
+
+    ``param_dtype``/``compute_dtype`` are dtype names or None:
+    param None = inherit ``cfg.dtype``; compute None = params' own dtype
+    (no cast inserted).  ``accum_dtype`` documents the reduction dtype —
+    every kernel epilogue and optimizer already accumulates fp32 and
+    asserting it here keeps that a contract, not an accident.
+
+    ``master_weights`` keeps an fp32 master copy of the params in
+    optimizer state (``optim.optimizers.with_master_weights``); the
+    replica exchange averages optimizer state too (paper footnote 3), so
+    the consensus — and PR 7's error-feedback residuals — stay exact
+    fp32 math even when the live params are bf16.
+
+    ``loss_scale``: ``none`` | ``static`` (fixed multiplier, non-finite
+    steps still skipped) | ``dynamic`` (halve on non-finite, grow 2x
+    after ``growth_interval`` clean steps).
+
+    ``kv_cache_dtype``: ``auto`` (model dtype) | ``fp32`` | ``bf16`` |
+    ``int8`` (quantized ring cache with per-head-per-slot fp32 scales).
+    """
+
+    param_dtype: Optional[str] = None
+    compute_dtype: Optional[str] = None
+    accum_dtype: str = "float32"
+    master_weights: bool = False
+    loss_scale: str = "none"
+    loss_scale_init: float = 2.0 ** 15
+    growth_interval: int = 200
+    kv_cache_dtype: str = "auto"
+
+    def __post_init__(self):
+        for name in ("param_dtype", "compute_dtype", "accum_dtype"):
+            val = getattr(self, name)
+            if val is not None:
+                jnp.dtype(val)                      # raises on unknown names
+        if self.accum_dtype != "float32":
+            raise ValueError("accum_dtype is a contract, not a knob: every "
+                             "kernel epilogue and optimizer accumulates "
+                             f"float32 (got {self.accum_dtype!r})")
+        if self.loss_scale not in LOSS_SCALES:
+            raise ValueError(f"loss_scale must be one of {LOSS_SCALES}, "
+                             f"got {self.loss_scale!r}")
+        if self.kv_cache_dtype not in KV_CACHE_DTYPES:
+            raise ValueError(f"kv_cache_dtype must be one of "
+                             f"{KV_CACHE_DTYPES}, got "
+                             f"{self.kv_cache_dtype!r}")
+        if self.loss_scale_init <= 0:
+            raise ValueError(f"loss_scale_init must be > 0, got "
+                             f"{self.loss_scale_init}")
+
+    # ------------------------------------------------------------------
+    @property
+    def is_training_default(self) -> bool:
+        """True when the TRAIN-side policy is inert — the step builders
+        take the pre-policy code path verbatim, keeping ``numerics=fp32``
+        bit-equal to earlier PRs (kv_cache_dtype is serve-side only and
+        does not disturb training)."""
+        return (self.compute_dtype is None and not self.master_weights
+                and self.loss_scale == "none")
+
+    def describe(self) -> str:
+        """Compact string for logs / checkpoint run_meta drift checks."""
+        if self == NumericsPolicy():
+            return "fp32"
+        parts = []
+        if self.param_dtype:
+            parts.append(f"param={self.param_dtype}")
+        if self.compute_dtype:
+            parts.append(f"compute={self.compute_dtype}")
+        if self.master_weights:
+            parts.append("master_fp32")
+        if self.loss_scale != "none":
+            parts.append(f"loss_scale={self.loss_scale}")
+        if self.kv_cache_dtype != "auto":
+            parts.append(f"kv={self.kv_cache_dtype}")
+        return ",".join(parts) or "fp32"
+
+
+PRESETS = {
+    # bit-equal to the pre-policy engine (the acceptance bar)
+    "fp32": NumericsPolicy(),
+    # the mixed-precision recipe: bf16 live params/compute, fp32 masters
+    # in optimizer state, dynamic loss scaling, bf16 KV at serve time
+    "bf16": NumericsPolicy(param_dtype="bfloat16", master_weights=True,
+                           loss_scale="dynamic", kv_cache_dtype="bf16"),
+}
+
+
+def get_policy(name) -> NumericsPolicy:
+    """Preset name -> policy (a NumericsPolicy passes through)."""
+    if isinstance(name, NumericsPolicy):
+        return name
+    if name not in PRESETS:
+        raise ValueError(f"unknown numerics preset {name!r}; known: "
+                         f"{sorted(PRESETS)}")
+    return PRESETS[name]
+
+
+def numerics_of(cfg) -> NumericsPolicy:
+    """The config's policy (default policy for configs without the field
+    — stubs and tests predating this axis)."""
+    pol = getattr(cfg, "numerics", None)
+    return pol if pol is not None else NumericsPolicy()
+
+
+def param_dtype(cfg):
+    """Init/storage dtype for model parameters (and model inputs)."""
+    pol = numerics_of(cfg)
+    return jnp.dtype(pol.param_dtype or getattr(cfg, "dtype", "float32"))
+
+
+def compute_dtype(cfg):
+    """Dtype activations run in (falls back to the param dtype)."""
+    pol = numerics_of(cfg)
+    return jnp.dtype(pol.compute_dtype or pol.param_dtype
+                     or getattr(cfg, "dtype", "float32"))
+
+
+def kv_cache_spec(cfg, model_dtype):
+    """(storage dtype, quantized?) for the ring KV cache."""
+    sel = numerics_of(cfg).kv_cache_dtype
+    if sel == "auto":
+        return jnp.dtype(model_dtype), False
+    return jnp.dtype(_KV_JNP[sel]), sel == "int8"
+
+
+# ---------------------------------------------------------------- trees ----
+
+def cast_floats(tree, dtype):
+    """Cast inexact (float) leaves; integer/bool leaves pass through."""
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.inexact)
+        else x, tree)
+
+
+def all_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every float leaf is fully finite.  Reduces each leaf
+    to its sum first — one cheap scalar isfinite per leaf instead of a
+    full-size predicate tensor (inf/nan propagate through sums)."""
+    leaves = [jnp.isfinite(jnp.sum(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.inexact)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.stack(leaves).all()
+
+
+# ----------------------------------------------------------- loss scale ----
+
+def init_loss_scale_state(policy: NumericsPolicy):
+    """TrainState.numerics pytree: None when scaling is off.  Scalars are
+    replica-identical bookkeeping (like optimizer ``count``), so both
+    engines carry them unreplicated/replicated-P()."""
+    if policy is None or policy.loss_scale == "none":
+        return None
+    return {"scale": jnp.asarray(policy.loss_scale_init, jnp.float32),
+            "good_steps": jnp.zeros((), jnp.int32),
+            "skipped": jnp.zeros((), jnp.int32)}
+
+
+def next_loss_scale_state(policy: NumericsPolicy, ns, finite):
+    """Roll the loss-scale state one step.
+
+    ``dynamic``: non-finite grads halve the scale (floor 1.0) and reset
+    the clean-step counter; ``growth_interval`` consecutive clean steps
+    double it (cap 2**24).  ``static``: the scale never moves.  Both
+    count skipped steps — the update itself is skipped by the caller.
+    """
+    skipped = ns["skipped"] + (1 - finite.astype(jnp.int32))
+    if policy.loss_scale == "static":
+        return {"scale": ns["scale"], "good_steps": ns["good_steps"],
+                "skipped": skipped}
+    good = jnp.where(finite, ns["good_steps"] + 1, 0)
+    grow = good >= policy.growth_interval
+    scale = jnp.where(finite,
+                      jnp.where(grow, ns["scale"] * 2.0, ns["scale"]),
+                      ns["scale"] * 0.5)
+    scale = jnp.clip(scale, 1.0, 2.0 ** 24)
+    good = jnp.where(grow, 0, good)
+    return {"scale": scale, "good_steps": good, "skipped": skipped}

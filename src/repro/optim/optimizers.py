@@ -96,6 +96,47 @@ def apply_updates(params, updates):
                         params, updates)
 
 
+def with_master_weights(inner: Optimizer) -> Optimizer:
+    """Mixed-precision wrapper: an fp32 master copy of the params lives in
+    optimizer state; the inner optimizer's update math runs against the
+    masters, and the live (possibly bf16) params become a cast of the new
+    master each step.
+
+    The returned updates are ``new_master - params_f32`` so the existing
+    ``apply_updates`` contract — ``(p_f32 + u).astype(p.dtype)`` — lands
+    the params on ``cast(new_master)`` without a new apply path.  Because
+    the masters ride in optimizer state, the paper's exchange (params AND
+    optimizer state averaged, footnote 3) and PR 7's compressed
+    error-feedback path operate on exact fp32 masters for free.
+    """
+
+    def init(params):
+        # jnp.array (not astype): astype is a no-op ALIAS for fp32 params,
+        # and a master sharing its param's buffer makes a donated
+        # TrainState donate the same buffer twice
+        return {"master": jax.tree.map(
+                    lambda p: jnp.array(p, jnp.float32), params),
+                "inner": inner.init(params)}
+
+    def update(grads, state, params, lr):
+        master = state["master"]
+        updates, inner_state = inner.update(grads, state["inner"], master,
+                                            lr)
+        new_master = jax.tree.map(lambda m, u: m + u, master, updates)
+        out = jax.tree.map(lambda nm, p: nm - p.astype(jnp.float32),
+                           new_master, params)
+        return out, {"master": new_master, "inner": inner_state}
+
+    return Optimizer(init, update, inner.name + "+master")
+
+
+def for_numerics(optimizer: Optimizer, numerics) -> Optimizer:
+    """Wrap per the NumericsPolicy (identity when masters are off)."""
+    if numerics is None or not getattr(numerics, "master_weights", False):
+        return optimizer
+    return with_master_weights(optimizer)
+
+
 def get_optimizer(name: str, **kw) -> Optimizer:
     if name == "sgd_momentum":
         return sgd_momentum(**kw)

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import models
+from repro import models, numerics
 from repro.serving import sampling
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
@@ -279,7 +279,7 @@ class ServingEngine:
                     f"request frames shape {frames.shape} != engine "
                     f"(enc_len={self.enc_len}, d_model={cfg.d_model})")
             return {"frames": jnp.asarray(frames,
-                                          jnp.dtype(cfg.dtype))[None]}
+                                          numerics.param_dtype(cfg))[None]}
         if cfg.family == "vlm":
             emb = req.image_embeds
             if emb is None:
@@ -291,7 +291,7 @@ class ServingEngine:
             else:
                 mask = np.asarray(mask, bool)
                 mask = np.pad(mask, (0, bucket - mask.shape[0]))
-            return {"image_embeds": jnp.asarray(emb, jnp.dtype(cfg.dtype))[None],
+            return {"image_embeds": jnp.asarray(emb, numerics.param_dtype(cfg))[None],
                     "image_mask": jnp.asarray(mask)[None]}
         return {}
 

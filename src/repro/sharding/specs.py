@@ -289,6 +289,13 @@ def cache_sharding(cache_shapes, cfg, mesh: Mesh, *,
                 spec = P(*lead, ba, None, model_axis, None)
             else:
                 spec = P(*lead, ba, model_axis, None, None)
+        elif re.search(r"/(k_scale|v_scale)$", ps):   # (B, S, Hkv) int8 KV
+            # co-shard with the k/v leaves they dequantize (same axis
+            # choice) so the decode kernel reads its scales locally
+            if shape[2] % m == 0:
+                spec = P(*lead, ba, None, model_axis)
+            else:
+                spec = P(*lead, ba, model_axis, None)
         elif re.search(r"/wkv$", ps):                 # (B, H, hd, hd)
             spec = P(*lead, ba, model_axis if shape[1] % m == 0 else None,
                      None, None)

@@ -232,11 +232,20 @@ class TrainSession:
                     loss_f = float(loss)          # blocks on the device
                     result.losses.append((i + 1, loss_f))
                 if per_step_sync:
+                    # loss-scaling state (NumericsPolicy) rides the
+                    # TrainState as replica-identical scalars; trace them
+                    # so a run's scale trajectory and skip count are
+                    # auditable from the JSONL alone
+                    ns = getattr(self.state, "numerics", None)
                     # compile steps are logged, excluded from percentiles
                     writer.train(i + 1, loss_f, float(sched_fn(i)),
                                  time.perf_counter() - t0,
                                  timed=not compiling,
-                                 stage_wait_ms=stage_wait_ms)
+                                 stage_wait_ms=stage_wait_ms,
+                                 loss_scale=float(ns["scale"])
+                                 if ns is not None else None,
+                                 skipped_steps=int(ns["skipped"])
+                                 if ns is not None else None)
                 compiling = False
                 if at_log:
                     print(f"step {i + 1:5d} loss {loss_f:.4f} "

@@ -1,0 +1,319 @@
+"""NumericsPolicy through the train-step builders (docs/numerics.md).
+
+The acceptance bar, as tests:
+  * the default/fp32 policy is INERT — bit-equal params and losses vs a
+    step built with no policy at all, on both engines (the golden-trace
+    suite holds the same line on real archs);
+  * bf16 compute + fp32 master weights + dynamic loss scaling learns,
+    and a poisoned (NaN) batch provably SKIPS the update — params
+    untouched, scale halved, skip counted — then recovers on the next
+    clean step;
+  * the dynamic scale grows 2x after ``growth_interval`` clean steps and
+    a static scale never moves;
+  * master-weights-on-fp32 tracks plain fp32 to float tolerance (the
+    bf16 param round-trip through ``apply_updates`` costs 1 ulp);
+  * every engine variant honors the skip: vmap, scan, mesh (real
+    collectives, subprocess-isolated devices), grad-avg.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _subproc import run_child
+
+from repro.core.steps import (init_grad_avg_state, init_param_avg_state,
+                              make_grad_avg_step, make_param_avg_step,
+                              reshape_for_replicas)
+from repro.numerics import NumericsPolicy, get_policy
+from repro.optim.optimizers import for_numerics, get_optimizer
+
+
+def init_fn(rng):
+    k1, _ = jax.random.split(rng)
+    return {"w": jax.random.normal(k1, (8, 4), jnp.float32) * 0.1,
+            "b": jnp.zeros((4,), jnp.float32)}
+
+
+def init_bf16(rng):
+    return jax.tree.map(lambda p: p.astype(jnp.bfloat16), init_fn(rng))
+
+
+def loss_fn(params, batch):
+    x, y = batch
+    logits = x @ params["w"].astype(x.dtype) + params["b"].astype(x.dtype)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+OPT = get_optimizer("sgd_momentum")
+SCHED = lambda s: 0.1  # noqa: E731
+BF16 = get_policy("bf16")
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8), jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 4)
+    return x, y
+
+
+def _poison(batch):
+    x, y = batch
+    return x.at[0, 0].set(jnp.nan), y
+
+
+# ------------------------------------------------------------ the policy ---
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="loss_scale"):
+        NumericsPolicy(loss_scale="sometimes")
+    with pytest.raises(ValueError, match="accum_dtype"):
+        NumericsPolicy(accum_dtype="bfloat16")
+    with pytest.raises(ValueError, match="kv_cache_dtype"):
+        NumericsPolicy(kv_cache_dtype="int4")
+    with pytest.raises(TypeError):
+        NumericsPolicy(param_dtype="float33")
+    with pytest.raises(ValueError, match="preset"):
+        get_policy("fp16")
+
+
+def test_policy_describe_and_default_gate():
+    assert NumericsPolicy().describe() == "fp32"
+    assert NumericsPolicy().is_training_default
+    assert get_policy("fp32") == NumericsPolicy()
+    bf = get_policy("bf16")
+    assert not bf.is_training_default
+    assert "master_fp32" in bf.describe()
+    assert "loss_scale=dynamic" in bf.describe()
+    # kv dtype is serve-side only: it must NOT disturb the training gate
+    assert NumericsPolicy(kv_cache_dtype="int8").is_training_default
+
+
+# ---------------------------------------------------- fp32 is bit-inert ----
+
+def test_fp32_preset_bit_equal_to_no_policy(batch):
+    b = reshape_for_replicas(batch, 2)
+    sa = init_param_avg_state(jax.random.PRNGKey(0), init_fn, OPT, 2)
+    sb = init_param_avg_state(jax.random.PRNGKey(0), init_fn, OPT, 2,
+                              numerics=get_policy("fp32"))
+    step_a = jax.jit(make_param_avg_step(loss_fn, OPT, SCHED))
+    step_b = jax.jit(make_param_avg_step(loss_fn, OPT, SCHED,
+                                         numerics=get_policy("fp32")))
+    for _ in range(3):
+        sa, la = step_a(sa, b)
+        sb, lb = step_b(sb, b)
+    assert float(la) == float(lb)
+    assert sb.numerics is None
+    for ka, kb in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+        np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+
+
+# ------------------------------------------- bf16 + masters + scaling ------
+
+def test_bf16_master_dynamic_learns(batch):
+    b = reshape_for_replicas(batch, 2)
+    mopt = for_numerics(OPT, BF16)
+    s = init_param_avg_state(jax.random.PRNGKey(0), init_bf16, mopt, 2,
+                             numerics=BF16)
+    step = jax.jit(make_param_avg_step(loss_fn, mopt, SCHED, numerics=BF16))
+    # the fp32 run from the same init — the acceptance bar is the bf16
+    # TRACE tracking it within a documented tolerance over 20 steps
+    sf = init_param_avg_state(jax.random.PRNGKey(0), init_fn, OPT, 2)
+    step_f = jax.jit(make_param_avg_step(loss_fn, OPT, SCHED))
+    losses, losses_f = [], []
+    for _ in range(20):
+        s, loss = step(s, b)
+        losses.append(float(loss))
+        sf, loss_f = step_f(sf, b)
+        losses_f.append(float(loss_f))
+    assert s.params["w"].dtype == jnp.bfloat16            # live params bf16
+    assert s.opt_state["master"]["w"].dtype == jnp.float32  # masters fp32
+    assert losses[-1] < losses[0], losses
+    # documented tolerance (docs/numerics.md): the bf16 loss trace stays
+    # within 5e-2 of the fp32 one at every step of the 20
+    np.testing.assert_allclose(losses, losses_f, atol=5e-2, rtol=5e-2)
+    assert int(s.numerics["skipped"]) == 0
+    assert float(s.numerics["scale"]) == 2.0 ** 15        # no halving
+
+
+def test_poisoned_step_skips_halves_and_recovers(batch):
+    b = reshape_for_replicas(batch, 2)
+    bad = reshape_for_replicas(_poison(batch), 2)
+    mopt = for_numerics(OPT, BF16)
+    s = init_param_avg_state(jax.random.PRNGKey(0), init_bf16, mopt, 2,
+                             numerics=BF16)
+    step = jax.jit(make_param_avg_step(loss_fn, mopt, SCHED, numerics=BF16))
+    for _ in range(3):
+        s, _ = step(s, b)
+    before = jax.tree.map(np.asarray, s.params)
+    s2, _ = step(s, bad)
+    for a, c in zip(jax.tree.leaves(before), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(a, np.asarray(c))   # update SKIPPED
+    assert int(s2.numerics["skipped"]) == 1
+    assert float(s2.numerics["scale"]) == 2.0 ** 14       # halved
+    assert int(s2.step) == 4                              # step still counts
+    s3, _ = step(s2, b)                                   # clean: recovers
+    moved = any(not np.array_equal(a, np.asarray(c)) for a, c in
+                zip(jax.tree.leaves(before), jax.tree.leaves(s3.params)))
+    assert moved
+    assert int(s3.numerics["skipped"]) == 1               # no new skips
+
+
+def test_dynamic_scale_growth(batch):
+    b = reshape_for_replicas(batch, 2)
+    pol = NumericsPolicy(param_dtype="bfloat16", master_weights=True,
+                         loss_scale="dynamic", growth_interval=3,
+                         loss_scale_init=2.0)
+    mopt = for_numerics(OPT, pol)
+    s = init_param_avg_state(jax.random.PRNGKey(0), init_bf16, mopt, 2,
+                             numerics=pol)
+    step = jax.jit(make_param_avg_step(loss_fn, mopt, SCHED, numerics=pol))
+    for _ in range(3):
+        s, _ = step(s, b)
+    assert float(s.numerics["scale"]) == 4.0              # doubled once
+    assert int(s.numerics["good_steps"]) == 0             # counter reset
+
+
+def test_static_scale_never_moves(batch):
+    b = reshape_for_replicas(batch, 2)
+    bad = reshape_for_replicas(_poison(batch), 2)
+    pol = NumericsPolicy(param_dtype="bfloat16", master_weights=True,
+                         loss_scale="static", loss_scale_init=256.0,
+                         growth_interval=1)
+    mopt = for_numerics(OPT, pol)
+    s = init_param_avg_state(jax.random.PRNGKey(0), init_bf16, mopt, 2,
+                             numerics=pol)
+    step = jax.jit(make_param_avg_step(loss_fn, mopt, SCHED, numerics=pol))
+    for _ in range(3):
+        s, _ = step(s, b)
+    s, _ = step(s, bad)
+    assert float(s.numerics["scale"]) == 256.0            # static stays
+    assert int(s.numerics["skipped"]) == 1                # but still skips
+
+
+def test_master_on_fp32_matches_plain_fp32(batch):
+    """Masters over fp32 live params: same trajectory to float tolerance
+    (the cast round-trip through apply_updates costs at most 1 ulp)."""
+    b = reshape_for_replicas(batch, 2)
+    pol = NumericsPolicy(master_weights=True)
+    mopt = for_numerics(OPT, pol)
+    sm = init_param_avg_state(jax.random.PRNGKey(0), init_fn, mopt, 2,
+                              numerics=pol)
+    sp = init_param_avg_state(jax.random.PRNGKey(0), init_fn, OPT, 2)
+    mstep = jax.jit(make_param_avg_step(loss_fn, mopt, SCHED, numerics=pol))
+    pstep = jax.jit(make_param_avg_step(loss_fn, OPT, SCHED))
+    for _ in range(5):
+        sm, _ = mstep(sm, b)
+        sp, _ = pstep(sp, b)
+    for a, c in zip(jax.tree.leaves(sm.params), jax.tree.leaves(sp.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------- other engine variants ---
+
+def test_scan_replica_exec_skips(batch):
+    b = reshape_for_replicas(batch, 2)
+    bad = reshape_for_replicas(_poison(batch), 2)
+    mopt = for_numerics(OPT, BF16)
+    s = init_param_avg_state(jax.random.PRNGKey(0), init_bf16, mopt, 2,
+                             numerics=BF16)
+    step = jax.jit(make_param_avg_step(loss_fn, mopt, SCHED, numerics=BF16,
+                                       replica_exec="scan"))
+    for _ in range(3):
+        s, loss = step(s, b)
+    assert np.isfinite(float(loss))
+    s2, _ = step(s, bad)
+    assert int(s2.numerics["skipped"]) == 1
+    assert float(s2.numerics["scale"]) == 2.0 ** 14
+
+
+def test_grad_avg_numerics(batch):
+    mopt = for_numerics(OPT, BF16)
+    s = init_grad_avg_state(jax.random.PRNGKey(0), init_bf16, mopt,
+                            numerics=BF16)
+    step = jax.jit(make_grad_avg_step(loss_fn, mopt, SCHED, numerics=BF16))
+    losses = []
+    for _ in range(20):
+        s, loss = step(s, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    s2, _ = step(s, _poison(batch))
+    assert int(s2.numerics["skipped"]) == 1
+
+
+_MESH_CHILD = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core.steps import (init_param_avg_state, make_mesh_param_avg_step,
+                              reshape_for_replicas)
+from repro.numerics import get_policy
+from repro.optim.optimizers import for_numerics, get_optimizer
+
+def init_fn(rng):
+    k1, _ = jax.random.split(rng)
+    return {"w": jax.random.normal(k1, (8, 4), jnp.float32) * 0.1,
+            "b": jnp.zeros((4,), jnp.float32)}
+
+def init_bf16(rng):
+    return jax.tree.map(lambda p: p.astype(jnp.bfloat16), init_fn(rng))
+
+def loss_fn(params, batch):
+    x, y = batch
+    logits = x @ params["w"].astype(x.dtype) + params["b"].astype(x.dtype)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+R = jax.device_count()
+mesh = Mesh(np.array(jax.devices()).reshape(R), ("data",))
+opt = get_optimizer("sgd_momentum")
+sched = lambda s: 0.1
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 8), jnp.float32)
+y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 4)
+batch = reshape_for_replicas((x, y), R)
+bad = reshape_for_replicas((x.at[0, 0].set(jnp.nan), y), R)
+
+# fp32 preset bit-equal to no-policy on the collective engine
+sa = init_param_avg_state(jax.random.PRNGKey(0), init_fn, opt, R)
+sb = init_param_avg_state(jax.random.PRNGKey(0), init_fn, opt, R,
+                          numerics=get_policy("fp32"))
+step_a = jax.jit(make_mesh_param_avg_step(loss_fn, opt, sched, mesh=mesh,
+                                          replica_axes=("data",)))
+step_b = jax.jit(make_mesh_param_avg_step(loss_fn, opt, sched, mesh=mesh,
+                                          replica_axes=("data",),
+                                          numerics=get_policy("fp32")))
+for _ in range(3):
+    sa, la = step_a(sa, batch)
+    sb, lb = step_b(sb, batch)
+assert float(la) == float(lb)
+for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# bf16 + dynamic scaling: learns, then a poisoned batch skips + halves
+pol = get_policy("bf16")
+mopt = for_numerics(opt, pol)
+s = init_param_avg_state(jax.random.PRNGKey(0), init_bf16, mopt, R,
+                         numerics=pol)
+step = jax.jit(make_mesh_param_avg_step(loss_fn, mopt, sched, mesh=mesh,
+                                        replica_axes=("data",),
+                                        numerics=pol))
+losses = []
+for _ in range(20):
+    s, l = step(s, batch)
+    losses.append(float(l))
+assert losses[-1] < losses[0], losses
+before = jax.tree.map(np.asarray, s.params)
+s2, _ = step(s, bad)
+for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(s2.params)):
+    np.testing.assert_array_equal(a, np.asarray(b))
+assert int(s2.numerics["skipped"]) == 1
+assert float(s2.numerics["scale"]) == 2.0 ** 14
+print("MESH-NUMERICS-OK")
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_mesh_engine_numerics(devices):
+    """The collective engine: fp32 inert + bf16 skip/halve, with the
+    finite check pmin-reduced across real device shards."""
+    assert "MESH-NUMERICS-OK" in run_child(_MESH_CHILD, devices=devices)

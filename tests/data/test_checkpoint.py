@@ -164,3 +164,62 @@ def test_train_state_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+_QUANTIZED_ROUNDTRIP = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import checkpoint, configs, models
+from repro.launch.mesh import make_replica_mesh
+from repro.numerics import NumericsPolicy
+from repro.sharding.specs import cache_sharding
+
+R = jax.device_count()
+cfg = dataclasses.replace(configs.reduced(configs.get_config("olmo-1b")),
+                          numerics=NumericsPolicy(kv_cache_dtype="int8"))
+params = models.init(jax.random.PRNGKey(0), cfg)
+toks = jax.random.randint(jax.random.PRNGKey(1), (R, 16), 0, cfg.vocab_size)
+_, st = models.prefill(params, cfg, toks, 32)
+mesh = make_replica_mesh(R)
+shard = cache_sharding(st.cache, cfg, mesh, batch_axes=("data",))
+cache = jax.device_put(st.cache, shard)
+
+# fp8 rides the same uint8 raw-bytes container (e.g. fp8 residuals or a
+# future fp8 KV) — prove the manifest dtype survives alongside the
+# sharded int8 state
+tree = {"cache": cache,
+        "fp8": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
+               .astype(jnp.float8_e4m3fn)}
+checkpoint.save("{d}", 7, tree)
+like = jax.tree.map(jnp.zeros_like, tree)
+out = checkpoint.restore("{d}", 7, like,
+                         sharding={"cache": shard, "fp8": None})
+seen = set()
+for (p1, a), (p2, b) in zip(jax.tree_util.tree_flatten_with_path(tree)[0],
+                            jax.tree_util.tree_flatten_with_path(out)[0]):
+    assert a.dtype == b.dtype, (p1, a.dtype, b.dtype)
+    seen.add(str(a.dtype))
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+assert "int8" in seen and "float8_e4m3fn" in seen and "float32" in seen, seen
+# the cache subtree must land back on the live mesh layout
+for s, b in zip(jax.tree.leaves(shard), jax.tree.leaves(out["cache"])):
+    assert b.sharding == s, (b.sharding, s)
+print("QUANT-CKPT-OK")
+"""
+
+
+def _quantized_roundtrip(tmp_path, devices):
+    out = run_child(_QUANTIZED_ROUNDTRIP.replace("{d}", str(tmp_path)),
+                    devices=devices)
+    assert "QUANT-CKPT-OK" in out
+
+
+def test_quantized_state_roundtrip_2dev(tmp_path):
+    """int8 ring KV (values + fp32 scales) and fp8 leaves round-trip with
+    dtype AND live-mesh sharding intact (2 devices)."""
+    _quantized_roundtrip(tmp_path, 2)
+
+
+def test_quantized_state_roundtrip_4dev(tmp_path):
+    _quantized_roundtrip(tmp_path, 4)

@@ -20,7 +20,9 @@ from repro.optim.optimizers import adamw, sgd_momentum
 def test_alexnet_learns_blobs():
     cfg = ALEXNET_SMOKE
     opt = sgd_momentum(momentum=0.9, weight_decay=1e-4)
-    sched = schedules.constant(0.02)
+    # lr 0.02 sat on a loss plateau (~2.3 = log 10) for this init/seed;
+    # 0.005 descends monotonically and reaches ~0.01 by step 150
+    sched = schedules.constant(0.005)
     state = init_param_avg_state(jax.random.PRNGKey(0),
                                  lambda r: alexnet.init(r, cfg), opt, 2)
     step = jax.jit(make_param_avg_step(
@@ -28,7 +30,7 @@ def test_alexnet_learns_blobs():
         opt, sched))
     src = synthetic.blob_images(cfg.n_classes, 32, cfg.image_size, seed=0)
     losses = []
-    for i in range(100):
+    for i in range(150):
         batch = next(src)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         state, loss = step(state, reshape_for_replicas(batch, 2))

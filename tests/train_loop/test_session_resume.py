@@ -118,3 +118,35 @@ def test_plateau_without_eval_errors():
          "--steps", "1", "--schedule", "plateau"],
         devices=1, timeout=120, check=False)
     assert r.returncode != 0 and "--eval-every" in r.stderr
+
+
+def test_resume_warns_on_numerics_switch(tmp_path):
+    """The NumericsPolicy describe() rides in run_meta: resuming under a
+    different policy must print the loud drift warning (the continued
+    trace will not be bit-exact), while a same-policy resume stays
+    quiet."""
+    common = BASE + ["--ckpt-every", "2", "--ckpt-dir", str(tmp_path / "ck")]
+    run_cli(common + ["--steps", "2"], devices=1)
+    quiet = run_cli(common + ["--steps", "4", "--resume"], devices=1)
+    assert "WARNING: resuming under a different configuration" not in quiet
+    out = run_cli(common + ["--steps", "6", "--resume",
+                            "--kv-cache-dtype", "int8"], devices=1)
+    assert "WARNING: resuming under a different configuration" in out
+    assert "numerics" in out and "kv=int8" in out
+
+
+def test_bf16_session_logs_loss_scale(tmp_path):
+    """--numerics bf16 end to end through the session: metrics JSONL
+    train records carry the live loss scale and skipped-step count, and
+    the summary repeats the final values."""
+    m = str(tmp_path / "m.jsonl")
+    out = run_cli(BASE + ["--steps", "3", "--numerics", "bf16",
+                          "--metrics-out", m], devices=1)
+    assert "numerics=param=bfloat16,master_fp32,loss_scale=dynamic" in out
+    recs = [json.loads(line) for line in open(m)]
+    trains = [r for r in recs if r.get("kind") == "train"]
+    assert trains and all(r["loss_scale"] == 2.0 ** 15 for r in trains)
+    assert all(r["skipped_steps"] == 0 for r in trains)
+    summ = [r for r in recs if r.get("kind") == "summary"]
+    assert summ and summ[-1]["loss_scale"] == 2.0 ** 15
+    assert summ[-1]["skipped_steps"] == 0
