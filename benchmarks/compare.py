@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.compare [--threshold 0.10]
     PYTHONPATH=src python -m benchmarks.compare OLD.json NEW.json
+    PYTHONPATH=src python -m benchmarks.compare --only serving/
 
 Rows are matched by name; each one reports the us_per_call ratio
 new/old.  Rows slower by more than ``--threshold`` (default 10%) are
@@ -48,11 +49,21 @@ def main() -> None:
                     help="OLD.json NEW.json (default: two newest)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="flag rows slower by more than this fraction")
+    ap.add_argument("--only", default=None, metavar="PREFIX[,PREFIX...]",
+                    help="restrict the diff to rows whose name starts "
+                    "with one of the given prefixes (e.g. "
+                    "'serving/engine,serving/latency' to gate the "
+                    "engine rows but not the eager static-loop "
+                    "baseline, whose wall time is host noise)")
     args = ap.parse_args()
     if args.files and len(args.files) != 2:
         ap.error("pass exactly two files (or none for the newest pair)")
     old_path, new_path = args.files or newest_pair()
     old, new = load_rows(old_path), load_rows(new_path)
+    if args.only:
+        pre = tuple(args.only.split(","))
+        old = {k: v for k, v in old.items() if k.startswith(pre)}
+        new = {k: v for k, v in new.items() if k.startswith(pre)}
     print(f"# old: {os.path.basename(old_path)}  ({len(old)} rows)")
     print(f"# new: {os.path.basename(new_path)}  ({len(new)} rows)")
 

@@ -17,6 +17,24 @@ Throughput counts useful tokens only (tokens a request actually asked
 for).  Also measured: the int-``pos`` dispatch tax the old loop paid
 (one host->device transfer per token — on this jax it does NOT recompile,
 the staging is the cost), and the engine's throughput-vs-slots curve.
+
+PR-9 rows ride on top:
+
+  engine_ticks{K}   steady-state decode tok/s at ``ticks_per_dispatch``
+                    K in {1,2,4,8} on a dispatch-dominated config (tiny
+                    per-tick compute), occupied slots, timed ``step()``
+                    loop — the host-sync amortization the multi-tick
+                    scan buys, isolated from admission noise.
+  spec_*            end-to-end speculative decoding vs the target-only
+                    engine on the same request set: the self-draft pair
+                    (acceptance 1.0 — the dispatch-amortization ceiling)
+                    and an adversarial random-weight draft (acceptance
+                    ~chance — the rejection-cost floor).
+  blocks_peak_*     shared-prefix block pool: peak blocks in use for a
+                    same-prompt burst with dedup on, vs the dedup-off
+                    control (the row VALUE is the shared peak, so
+                    compare.py flags capacity regressions).
+
 Rows carry arch/slots/backend/devices metadata into BENCH_<date>.json.
 """
 from __future__ import annotations
@@ -40,6 +58,7 @@ from repro.serving import Request, ServingEngine
 ARCH = "olmo-1b"
 CAPACITY = 64
 PROMPT = 8
+TICKS = (1, 2, 4, 8)
 
 
 def _cfg():
@@ -47,6 +66,39 @@ def _cfg():
     # the schedulers are racing on
     cfg = reduced(ARCHS[ARCH], n_layers=2, d_model=256)
     return dataclasses.replace(cfg, kernels=KernelPolicy(attention="xla"))
+
+
+def _tick_cfg():
+    # the opposite regime: per-tick compute so small that the host
+    # round-trip IS the serving hot path — the cost multi-tick (and the
+    # single-dispatch spec round) exists to amortize
+    cfg = reduced(ARCHS[ARCH], n_layers=1, d_model=128)
+    return dataclasses.replace(cfg, vocab_size=256,
+                               kernels=KernelPolicy(attention="xla"))
+
+
+def _steady_tps(params, cfg, *, ticks, measure, reps, slots=4):
+    """Steady-state decode throughput: slots stay occupied (budgets never
+    expire inside the window), compiles + prefills land before t0, and
+    only the dispatch cadence is inside the timed loop."""
+    rng = np.random.default_rng(0)
+    best = 0.0
+    for _ in range(reps):
+        eng = ServingEngine(params, cfg, slots=slots, capacity=128,
+                            buckets=(PROMPT,), ticks_per_dispatch=ticks)
+        for _ in range(slots):
+            eng.submit(Request(
+                prompt=rng.integers(0, cfg.vocab_size, size=PROMPT),
+                max_new_tokens=10 ** 6))
+        eng.step()                       # admit + prefill (+ compiles)
+        eng.step()                       # one warm decode dispatch
+        t0 = time.perf_counter()
+        n = 0
+        while n < measure:
+            eng.step()
+            n += ticks
+        best = max(best, slots * n / (time.perf_counter() - t0))
+    return best
 
 
 def _requests(n, rng):
@@ -169,6 +221,71 @@ def main():
     if eng_tps < 2 * base_tps:
         print(f"# WARNING: engine speedup {eng_tps / base_tps:.2f}x < 2x "
               "over the static loop", flush=True)
+
+    # ---- multi-tick dispatch cadence ---------------------------------
+    tcfg = _tick_cfg()
+    tparams = models.init(jax.random.PRNGKey(0), tcfg)
+    tmeta = dict(arch=tcfg.name, backend="xla", devices=jax.device_count())
+    measure, reps = (24, 2) if fast else (48, 3)
+    k1_tps = None
+    best_k4 = 0.0
+    for k in TICKS:
+        tps = _steady_tps(tparams, tcfg, ticks=k, measure=measure,
+                          reps=reps)
+        k1_tps = k1_tps or tps
+        if k >= 4:
+            best_k4 = max(best_k4, tps / k1_tps)
+        emit(f"serving/engine_ticks{k}", 1e6 / tps,
+             f"tok/s={tps:.1f};speedup_vs_k1={tps / k1_tps:.2f}x",
+             slots=4, ticks=k, **tmeta)
+    if best_k4 < 1.3:
+        print(f"# WARNING: multi-tick K>=4 only {best_k4:.2f}x over K=1",
+              flush=True)
+
+    # ---- speculative decoding ----------------------------------------
+    def _spec_reqs():
+        r = np.random.default_rng(7)
+        return [Request(prompt=r.integers(0, tcfg.vocab_size, size=PROMPT),
+                        max_new_tokens=16 if fast else 32)
+                for _ in range(8)]
+
+    def _spec_run(**kw):
+        eng = ServingEngine(tparams, tcfg, slots=4, capacity=CAPACITY,
+                            buckets=(PROMPT,), **kw)
+        eng.run(_spec_reqs()[:2])                       # warm compiles
+        eng = ServingEngine(tparams, tcfg, slots=4, capacity=CAPACITY,
+                            buckets=(PROMPT,), **kw)
+        t0 = time.perf_counter()
+        toks = sum(len(r.tokens) for r in eng.run(_spec_reqs()))
+        return eng, toks / (time.perf_counter() - t0)
+
+    _, plain_tps = _spec_run()
+    dadv = models.init(jax.random.PRNGKey(9), tcfg)
+    for row, dparams, gamma in (("spec_self_draft", tparams, 3),
+                                ("spec_adversarial_draft", dadv, 2)):
+        eng, tps = _spec_run(draft_params=dparams, draft_cfg=tcfg,
+                             spec_tokens=gamma)
+        emit(f"serving/{row}", 1e6 / tps,
+             f"tok/s={tps:.1f};speedup={tps / plain_tps:.2f}x;"
+             f"acceptance={eng.spec_accepted / eng.spec_proposed:.2f}",
+             slots=4, draft_arch=tcfg.name, target_arch=tcfg.name,
+             spec_tokens=gamma, **tmeta)
+
+    # ---- shared-prefix block capacity --------------------------------
+    burst_prompt = list(range(1, 40))           # 2 full 16-blocks + tail
+    def _burst(dedup):                                      # noqa: E306
+        eng = ServingEngine(tparams, tcfg, slots=4, capacity=CAPACITY,
+                            buckets=(CAPACITY,), block_size=16,
+                            prefix_dedup=dedup)
+        eng.run([Request(prompt=burst_prompt, max_new_tokens=8)
+                 for _ in range(4)])
+        return eng.block_mgr
+    shared, private = _burst(True), _burst(False)
+    emit("serving/blocks_peak_shared", float(shared.peak),
+         f"peak_private={private.peak};prefills_skipped="
+         f"{shared.prefills_skipped};capacity_x="
+         f"{private.peak / shared.peak:.2f}",
+         slots=4, block_size=16, **tmeta)
 
 
 if __name__ == "__main__":

@@ -142,6 +142,68 @@ def _decode_impl(q, k, v, ks, vs, pos, n_kv_heads, window, scale, bk,
     )(pos, *args)
 
 
+def _decode_kernel_table(pos_ref, tab_ref, *refs, **kw):
+    # table mode: the block table is consumed by the BlockSpec index maps
+    # (scalar prefetch); the in-kernel math is identical — logical column
+    # ki*bk + j IS ring slot position, wherever the bytes physically live
+    _decode_kernel(pos_ref, *refs, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv_heads", "window", "scale",
+                                             "interpret"))
+def _decode_impl_table(q, k, v, ks, vs, pos, table, n_kv_heads, window,
+                      scale, interpret):
+    """Block-pool variant: q (B*Hkv, gp, hd); k/v (NB*Hkv, bs, hd) pools
+    folded like the ring layout; table (B, cap/bs) int32 block ids;
+    ks/vs (NB*Hkv, bs) fp32 or None.  The KV tile size IS the block size
+    (one pool block per grid step), and the tile for grid row i, step ki
+    is fetched from folded row ``table[i // Hkv, ki] * Hkv + i % Hkv`` —
+    slot indirection via the second scalar-prefetch argument."""
+    bh, gp, hd = q.shape
+    bs = k.shape[1]
+    n_k = table.shape[1]
+    cap = n_k * bs
+    quant = ks is not None
+
+    def kvmap(i, ki, pos_ref, tab_ref):
+        return (tab_ref[i // n_kv_heads, ki] * n_kv_heads
+                + i % n_kv_heads, 0, 0)
+
+    def scmap(i, ki, pos_ref, tab_ref):
+        return (tab_ref[i // n_kv_heads, ki] * n_kv_heads
+                + i % n_kv_heads, 0)
+
+    in_specs = [pl.BlockSpec((1, gp, hd),
+                             lambda i, ki, pos_ref, tab_ref: (i, 0, 0)),
+                pl.BlockSpec((1, bs, hd), kvmap),
+                pl.BlockSpec((1, bs, hd), kvmap)]
+    args = [q, k, v]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs), scmap),
+                     pl.BlockSpec((1, bs), scmap)]
+        args += [ks, vs]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, gp, hd),
+                               lambda i, ki, pos_ref, tab_ref: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((gp, 1), jnp.float32),
+                        pltpu.VMEM((gp, 1), jnp.float32),
+                        pltpu.VMEM((gp, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel_table, bk=bs, gp=gp, window=window,
+                          scale=scale, n_k=n_k, n_kv_heads=n_kv_heads,
+                          cap=cap, quant=quant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, gp, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, table, *args)
+
+
 def decode_blocks(cap: int, hd: int, dtype, *, interpret: bool,
                   autotune: bool = None, kv_dtype=None):
     """(bk,) KV tile size, shared-autotuned on compiled backends.
@@ -181,16 +243,40 @@ def decode_blocks(cap: int, hd: int, dtype, *, interpret: bool,
 def decode_attention_pallas(q, k, v, pos, *, window=None, scale=1.0,
                             bk: int = None, interpret: bool = None,
                             autotune: bool = None, k_scale=None,
-                            v_scale=None):
+                            v_scale=None, table=None):
     """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd) ring cache; pos (B,) int32.
     ``k_scale``/``v_scale`` (B,W,Hkv) fp32 mark an int8-quantized cache —
     dequantized in-kernel (see ``_decode_kernel``).
 
+    ``table`` (B, cap/bs) int32 switches k/v to BLOCK-POOL layout
+    (NB, bs, Hkv, hd) — row b's ring slot s lives in
+    ``pool[table[b, s//bs], s%bs]``; the KV tile size becomes the block
+    size and the table rides as a second scalar-prefetch argument.
+
     Returns (B,Hkv,G,hd).  NOT differentiable (inference fast path).
     """
     b, hkv, g, hd = q.shape
-    cap = k.shape[1]
     interpret = resolve_interpret(interpret)
+    if table is not None:
+        bs = k.shape[1]
+        gp = -(-g // SUBLANE) * SUBLANE
+        qf = q.reshape(b * hkv, g, hd)
+        if gp != g:
+            qf = jnp.pad(qf, ((0, 0), (0, gp - g), (0, 0)))
+        kf = k.transpose(0, 2, 1, 3).reshape(-1, bs, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(-1, bs, hd)
+        ksf = vsf = None
+        if k_scale is not None:
+            ksf = jnp.asarray(k_scale, jnp.float32).transpose(0, 2, 1) \
+                .reshape(-1, bs)
+            vsf = jnp.asarray(v_scale, jnp.float32).transpose(0, 2, 1) \
+                .reshape(-1, bs)
+        o = _decode_impl_table(qf, kf, vf, ksf, vsf,
+                               jnp.asarray(pos, jnp.int32),
+                               jnp.asarray(table, jnp.int32),
+                               hkv, window, scale, interpret)
+        return o[:, :g].reshape(b, hkv, g, hd)
+    cap = k.shape[1]
     if bk is None:
         kvd = None if k.dtype == q.dtype else k.dtype
         (bk,) = decode_blocks(cap, hd, q.dtype, interpret=interpret,

@@ -21,17 +21,30 @@ from repro.kernels.decode_attention.decode_attention import (
 def decode_attention(q, k, v, pos, *, window=None, scale=1.0,
                      impl: str = "pallas", bk: int = None,
                      interpret: bool = None, autotune: bool = None,
-                     k_scale=None, v_scale=None):
+                     k_scale=None, v_scale=None, table=None):
     """q (B,Hkv,G,hd); k,v (B,W,Hkv,hd); pos (B,) int32 -> (B,Hkv,G,hd).
-    ``k_scale``/``v_scale`` (B,W,Hkv) fp32: int8-quantized cache."""
+    ``k_scale``/``v_scale`` (B,W,Hkv) fp32: int8-quantized cache.
+
+    ``table`` (B, cap/bs) int32: k/v are (NB, bs, Hkv, hd) block pools and
+    the table maps each row's ring slots onto pool blocks.  The Pallas
+    path indirects tiles through a second scalar-prefetch argument; the
+    xla path dereferences the pool with a gather and runs the plain ref."""
     if impl == "xla":
+        if table is not None:
+            b = q.shape[0]
+            cap = table.shape[1] * k.shape[1]
+            k = k[table].reshape((b, cap) + k.shape[2:])
+            v = v[table].reshape((b, cap) + v.shape[2:])
+            if k_scale is not None:
+                k_scale = k_scale[table].reshape(b, cap, -1)
+                v_scale = v_scale[table].reshape(b, cap, -1)
         return ref.decode_attention_ref(q, k, v, pos, window=window,
                                         scale=scale, k_scale=k_scale,
                                         v_scale=v_scale)
     return decode_attention_pallas(q, k, v, pos, window=window, scale=scale,
                                    bk=bk, interpret=interpret,
                                    autotune=autotune, k_scale=k_scale,
-                                   v_scale=v_scale)
+                                   v_scale=v_scale, table=table)
 
 
 def _example(seed: int = 0):

@@ -61,6 +61,21 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--ticks-per-dispatch", type=int, default=1,
+                    help="device-resident decode ticks per host sync: the "
+                    "drain sees a (slots, K) token block per dispatch")
+    ap.add_argument("--draft-arch", default=None,
+                    help="enable speculative decoding with this arch as "
+                    "the draft model (greedy only; reduced under --smoke)")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="draft tokens proposed per verify round (gamma)")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="> 0: shared-prefix block-pool KV cache with this "
+                    "many ring positions per block (single device, "
+                    "full-attention archs)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool size for --block-size (default: full "
+                    "private provisioning, slots*capacity/bs + trash)")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "xla", "pallas"],
                     help="KernelPolicy backend — pallas engages the "
@@ -108,10 +123,27 @@ def main():
 
     rng = jax.random.PRNGKey(args.seed)
     params = models.init(rng, cfg)
+    spec = {}
+    if args.draft_arch:
+        dcfg = get_config(args.draft_arch)
+        if args.smoke:
+            dcfg = reduced(dcfg, n_layers=args.layers or 2,
+                           d_model=args.d_model or 256)
+        dcfg = dataclasses.replace(
+            dcfg, kernels=KernelPolicy(backend=args.kernel_backend),
+            numerics=npol)
+        if dcfg.vocab_size != cfg.vocab_size:
+            dcfg = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size)
+        spec = {"draft_params": models.init(jax.random.PRNGKey(args.seed + 1),
+                                            dcfg),
+                "draft_cfg": dcfg, "spec_tokens": args.spec_tokens}
     engine = ServingEngine(params, cfg, slots=args.slots,
                            capacity=args.capacity,
                            temperature=args.temperature, top_k=args.top_k,
-                           mesh=mesh, seed=args.seed)
+                           mesh=mesh, seed=args.seed,
+                           ticks_per_dispatch=args.ticks_per_dispatch,
+                           block_size=args.block_size,
+                           num_blocks=args.num_blocks, **spec)
 
     rs = np.random.default_rng(args.seed)
     reqs = []
@@ -139,8 +171,17 @@ def main():
     lats = sorted(r.latency for r in results)
     p = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]  # noqa: E731
     print(f"served {len(results)} requests / {toks} tokens in {wall:.2f}s "
-          f"({toks / wall:.1f} tok/s, {engine.decode_steps} decode ticks, "
+          f"({toks / wall:.1f} tok/s, {engine.decode_steps} decode ticks / "
+          f"{engine.dispatches} dispatches, "
           f"{engine.prefill_compiles} prefill compiles)")
+    if engine.spec_proposed:
+        print(f"spec: {engine.spec_accepted}/{engine.spec_proposed} draft "
+              f"tokens accepted "
+              f"({engine.spec_accepted / engine.spec_proposed:.2f})")
+    if engine.block_mgr is not None:
+        print(f"blocks: peak {engine.block_mgr.peak}/{engine.block_mgr.nb} "
+              f"in use, {engine.block_mgr.prefills_skipped} prefills "
+              f"skipped")
     print(f"latency p50 {p(0.5) * 1e3:.0f}ms p99 {p(0.99) * 1e3:.0f}ms "
           f"ttft p50 {sorted(r.ttft for r in results)[len(results) // 2] * 1e3:.0f}ms")
     print("serve OK")

@@ -151,7 +151,7 @@ def prefill(params, cfg, tokens, capacity: int, *, length=None, frames=None,
     return logits, DecodeState(cache=cache, pos=pos)
 
 
-def decode_step(params, cfg, state, tokens, pos=None):
+def decode_step(params, cfg, state, tokens, pos=None, table=None):
     """One decode step for every row.  tokens (B,1) int32.
 
     New API: ``state`` is a DecodeState (leave ``pos=None``) — returns
@@ -159,23 +159,59 @@ def decode_step(params, cfg, state, tokens, pos=None):
     Low-level form: ``state`` is a bare cache pytree and ``pos`` is the
     explicit scalar-or-(B,) position — returns (logits, new_cache); the
     dry-run lowers this form directly against its sharding specs.
+
+    ``table`` (B, cap/bs) int32 switches attention cache leaves to the
+    ref-counted block-pool layout (``serving/blocks.py``): logical ring
+    slot ``s`` of row b lives at ``pool[table[b, s//bs], s%bs]``, which
+    lets rows share prefilled prefix blocks (docs/serving.md).
     """
     _check_decode_family(cfg)
+    if table is not None and cfg.family == "encdec":
+        raise NotImplementedError("block-table caches are not implemented "
+                                  "for the encdec family")
     if isinstance(state, DecodeState):
         if pos is not None:
             raise ValueError("pass positions via DecodeState.pos, not pos=")
         logits, cache = _decode_cache_step(params, cfg, state.cache, tokens,
-                                           state.pos)
+                                           state.pos, table)
         return logits, DecodeState(cache=cache, pos=state.pos + 1)
     if pos is None:
         raise ValueError("bare-cache decode_step needs an explicit pos")
-    return _decode_cache_step(params, cfg, state, tokens, pos)
+    return _decode_cache_step(params, cfg, state, tokens, pos, table)
 
 
-def _decode_cache_step(params, cfg, cache, tokens, pos):
+def _decode_cache_step(params, cfg, cache, tokens, pos, table=None):
     if cfg.family == "encdec":
         return encdec.decode_step(params, cfg, cache, tokens, pos)
-    return transformer.decode_step(params, cfg, cache, tokens, pos)
+    return transformer.decode_step(params, cfg, cache, tokens, pos, table)
+
+
+def decode_seq(params, cfg, state: DecodeState, tokens, commit_len):
+    """Chunked decode: T tokens per row in ONE call, committing only each
+    row's first ``commit_len[b]`` of them.  tokens (B,T) int32 at
+    absolute positions ``state.pos .. state.pos+T-1``; commit_len (B,)
+    int32 in [0,T] (traced).  Returns (logits (B,T,V) f32, DecodeState
+    with ``pos += commit_len``).
+
+    ``logits[:, j]`` equal what T sequential ``decode_step`` calls would
+    produce — which makes this speculative decoding's verify primitive
+    (``commit_len=0``: pure lookahead, no state change) and its commit
+    primitive (``commit_len=accepted``: rejected tokens never touch the
+    cache, so there is no rollback).  Ring writes are where-masked per
+    row; recurrent carries are length-masked the same way prefill's are
+    (serving/spec_decode.py builds the accept/commit loop on top).
+    """
+    _check_decode_family(cfg)
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "decode_seq (speculative decoding) is not implemented for the "
+            "encdec family: cross-attention caches are per-utterance and "
+            "the serving tier drafts text-only models")
+    b, t = tokens.shape
+    cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
+    logits, cache = transformer.decode_seq(params, cfg, state.cache, tokens,
+                                           state.pos, cl)
+    return logits, DecodeState(cache=cache, pos=state.pos + cl)
 
 
 # slot surgery: the continuous-batching engine swaps one request's state
@@ -239,5 +275,6 @@ def model_inputs(cfg, batch: int, seq_len: int):
 __all__ = ["alexnet", "encdec", "transformer", "vision", "init", "logits_fn",
            "loss_fn",
            "DecodeState", "DECODE_FAMILIES", "init_decode_cache",
-           "init_decode_state", "prefill", "decode_step", "write_slots",
+           "init_decode_state", "prefill", "decode_step", "decode_seq",
+           "write_slots",
            "stacked_cache_path", "model_inputs"]

@@ -356,6 +356,110 @@ def fill_cache(params, cfg, x, cache, *, window=None, rope=True,
     return out
 
 
+def decode_attention_seq(params, cfg, x, cache, pos, commit_len, *,
+                         window=None, rope=True):
+    """Chunked decode: T candidate tokens per row against an UNMUTATED
+    ring cache, with a masked commit.
+
+    x (B,T,d) holds tokens at absolute positions ``pos .. pos+T-1`` (pos
+    (B,) int32 = tokens each row has consumed, so the ring holds
+    positions <= pos-1).  Token j attends over the ring entries a
+    sequential ``decode_attention`` at step j would still see (written,
+    not yet overwritten by steps <= j, inside the window) PLUS the
+    in-flight tokens 0..j — exactly what T sequential steps compute,
+    without mutating the ring.  The write happens once at the end, only
+    for each row's first ``commit_len[b]`` tokens (0 <= commit_len <= T,
+    traced per row).
+
+    This is speculative decoding's verify/commit primitive: verify calls
+    with ``commit_len=0`` (pure lookahead), commit re-runs with the
+    accepted length — rejected tokens never touch the ring, so there is
+    nothing to roll back (docs/serving.md).
+
+    Returns (out (B,T,d), new_cache committed through commit_len).
+    """
+    b, t, _ = x.shape
+    cap = cache["k"].shape[1]
+    if t > cap:
+        raise ValueError(f"decode_seq over {t} tokens needs ring capacity "
+                         f">= {t} (distinct slots mod cap); got {cap}")
+    q, k_new, v_new = _qkv(params, cfg, x)
+    pv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
+    positions = pv[:, None] + jnp.arange(t)[None, :]          # (B, T)
+    if rope:
+        inv = rope_freqs(cfg)
+        q = apply_rope(q, positions, inv)
+        k_new = apply_rope(k_new, positions, inv)
+    quant = "k_scale" in cache
+    kw, vw = k_new, v_new
+    if quant:
+        kw, ks = _kv_quant(k_new)                 # int8 + (B,T,Hkv) scales
+        vw, vs = _kv_quant(v_new)
+        # sequential decode reads back what it wrote: use the dequantized
+        # (lossy) in-flight K/V so verify == T plain ticks under int8 too
+        k_new = _kv_dequant(kw, ks).astype(x.dtype)
+        v_new = _kv_dequant(vw, vs).astype(x.dtype)
+
+    # ring scores (read-only): slot i holds position
+    # (pos-1) - ((pos-1 - i) mod cap); visible to query j iff it exists,
+    # a sequential step <= j would not yet have overwritten it
+    # (slot_pos > p_j - cap), and it is inside the window
+    base = pv - 1
+    idx = jnp.arange(cap)
+    slot_pos = base[:, None] - jnp.mod(base[:, None] - idx[None, :], cap)
+    valid_r = (slot_pos[:, None, :] >= 0) & \
+        (slot_pos[:, None, :] > positions[:, :, None] - cap)  # (B,T,cap)
+    if window is not None:
+        valid_r &= slot_pos[:, None, :] > positions[:, :, None] - window
+    ka, va = cache["k"], cache["v"]
+    if quant:
+        ka = _kv_dequant(ka, cache["k_scale"])
+        va = _kv_dequant(va, cache["v_scale"])
+    qg = _group(q, cfg.n_kv_heads)                # (B,T,Hkv,G,hd)
+    scale = cfg.head_dim ** -0.5
+    s_r = jnp.einsum("bqhgk,bshk->bhgqs", qg, ka,
+                     preferred_element_type=jnp.float32) * scale
+    s_r = jnp.where(valid_r[:, None, None], s_r, NEG_INF)
+
+    # in-flight scores: causal over the T candidates themselves
+    j = jnp.arange(t)
+    valid_f = (j[None, :] <= j[:, None]) & ((j[:, None] - j[None, :]) < cap)
+    if window is not None:
+        valid_f &= (j[:, None] - j[None, :]) < window
+    s_f = jnp.einsum("bqhgk,bshk->bhgqs", qg, k_new,
+                     preferred_element_type=jnp.float32) * scale
+    s_f = jnp.where(valid_f[None, None, None], s_f, NEG_INF)
+
+    s = jnp.concatenate([s_r, s_f], axis=-1).astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    va_all = jnp.concatenate([va.astype(jnp.float32),
+                              v_new.astype(jnp.float32)], axis=1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", p, va_all,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # masked commit (fill_cache's where-set pattern): T consecutive
+    # positions stay distinct mod cap, so the row scatter never collides;
+    # tokens past commit_len write their slot's previous value back
+    dt = cache["k"].dtype
+    rows = jnp.arange(b)[:, None]
+    slots = jnp.mod(positions, cap)
+    wvalid = j[None, :] < cl[:, None]                         # (B, T)
+    k_g = jnp.where(wvalid[..., None, None], kw.astype(dt),
+                    cache["k"][rows, slots])
+    v_g = jnp.where(wvalid[..., None, None], vw.astype(dt),
+                    cache["v"][rows, slots])
+    new_cache = {"k": cache["k"].at[rows, slots].set(k_g),
+                 "v": cache["v"].at[rows, slots].set(v_g)}
+    if quant:
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slots].set(
+            jnp.where(wvalid[..., None], ks, cache["k_scale"][rows, slots]))
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slots].set(
+            jnp.where(wvalid[..., None], vs, cache["v_scale"][rows, slots]))
+    o = o.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    return _out(params, cfg, o), new_cache
+
+
 def resolve_decode_impl(cfg) -> str:
     """``pallas`` (flash-decode kernel) or ``xla`` from the KernelPolicy."""
     pol = policy_of(cfg)
@@ -369,7 +473,7 @@ def resolve_decode_impl(cfg) -> str:
 
 
 def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
-                     impl=None):
+                     impl=None, table=None):
     """One-token decode.  x (B,1,d); cache {k,v} (B,W,Hkv,hd); pos is the
     token's absolute position — a scalar, or (B,) int32 for rows decoding
     at different depths (the continuous-batching engine's layout).
@@ -378,10 +482,22 @@ def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
     over valid slots — through the policy-selected backend: the Pallas
     flash-decode kernel (``kernels.decode_attention``) or the XLA einsum.
     Returns (out (B,1,d), new_cache).
+
+    ``table`` (B, cap/bs) int32 switches the cache to BLOCK-POOL layout
+    (docs/serving.md): leaves are (n_blocks, bs, Hkv, hd) pools shared
+    across rows, and row b's logical ring slot ``s`` lives at
+    ``pool[table[b, s // bs], s % bs]``.  The ring arithmetic (slot = pos
+    % cap, validity masks) is unchanged — the table only indirects the
+    storage, which is what lets requests with a shared prefix point at
+    the same physical blocks.
     """
     b = x.shape[0]
     q, k_new, v_new = _qkv(params, cfg, x)
-    cap = cache["k"].shape[1]
+    if table is None:
+        cap = cache["k"].shape[1]
+    else:
+        bs = cache["k"].shape[1]
+        cap = table.shape[1] * bs
     pv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     if rope:
         inv = rope_freqs(cfg)
@@ -394,12 +510,21 @@ def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
     if quant:
         kw, ks = _kv_quant(kw)                        # scale (B, Hkv)
         vw, vs = _kv_quant(vw)
-    k = cache["k"].at[rows, slot].set(kw.astype(cache["k"].dtype))
-    v = cache["v"].at[rows, slot].set(vw.astype(cache["v"].dtype))
+    if table is None:
+        wr, ws = rows, slot
+    else:
+        # pool write target: block id from the row's table, offset in block.
+        # Distinct rows write distinct blocks (the engine never shares a
+        # WRITABLE block; retired rows all point at the reserved trash
+        # block, where colliding garbage writes are harmless by design).
+        wr = jnp.take_along_axis(table, (slot // bs)[:, None], axis=1)[:, 0]
+        ws = slot % bs
+    k = cache["k"].at[wr, ws].set(kw.astype(cache["k"].dtype))
+    v = cache["v"].at[wr, ws].set(vw.astype(cache["v"].dtype))
     new_cache = {"k": k, "v": v}
     if quant:
-        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ks)
-        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vs)
+        new_cache["k_scale"] = cache["k_scale"].at[wr, ws].set(ks)
+        new_cache["v_scale"] = cache["v_scale"].at[wr, ws].set(vs)
     qg = _group(q, cfg.n_kv_heads)                    # (B,1,Hkv,G,hd)
     scale = cfg.head_dim ** -0.5
     impl = resolve_decode_impl(cfg) if impl is None else impl
@@ -410,9 +535,21 @@ def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
             qg[:, 0], k, v, pv, window=window, scale=scale,
             interpret=pol.interpret, autotune=pol.autotune,
             k_scale=new_cache.get("k_scale"),
-            v_scale=new_cache.get("v_scale"))
+            v_scale=new_cache.get("v_scale"), table=table)
         o = o.astype(x.dtype)[:, None]                # (B,1,Hkv,G,hd)
     else:
+        if table is None:
+            ka, va = k, v
+            ksc = new_cache.get("k_scale")
+            vsc = new_cache.get("v_scale")
+        else:
+            # dereference the pool: (B, cap/bs, bs, ...) -> (B, cap, ...)
+            ka = k[table].reshape((b, cap) + k.shape[2:])
+            va = v[table].reshape((b, cap) + v.shape[2:])
+            ksc = vsc = None
+            if quant:
+                ksc = new_cache["k_scale"][table].reshape(b, cap, -1)
+                vsc = new_cache["v_scale"][table].reshape(b, cap, -1)
         # slot i holds absolute position pos - ((pos - i) mod W); valid
         # iff >= 0 (and inside the window when one is set)
         idx = jnp.arange(cap)
@@ -420,10 +557,9 @@ def decode_attention(params, cfg, x, cache, pos, *, window=None, rope=True,
         valid = slot_pos >= 0
         if window is not None and window < cap:
             valid &= slot_pos > pv[:, None] - window
-        ka, va = k, v
         if quant:
-            ka = _kv_dequant(k, new_cache["k_scale"])
-            va = _kv_dequant(v, new_cache["v_scale"])
+            ka = _kv_dequant(ka, ksc)
+            va = _kv_dequant(va, vsc)
         s = jnp.einsum("bqhgk,bshk->bhgqs", qg, ka,
                        preferred_element_type=jnp.float32) * scale
         s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)

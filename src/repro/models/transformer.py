@@ -273,8 +273,12 @@ def init_decode_cache(cfg, batch: int, seq_len: int):
     }
 
 
-def block_apply_decode(p, cfg, kind, h, cache, pos):
-    """Single-token block.  h (B,1,d).  Returns (h, new_cache)."""
+def block_apply_decode(p, cfg, kind, h, cache, pos, table=None):
+    """Single-token block.  h (B,1,d).  Returns (h, new_cache).
+
+    ``table`` (B, cap/bs) int32 switches attention caches to block-pool
+    layout (shared-prefix serving, docs/serving.md); recurrent kinds have
+    constant-size state and ignore it."""
     if kind == "rwkv":
         x = norm_apply(p["norm1"], cfg, h)[:, 0]
         y, (tm_shift, wkv) = rwkv_mod.time_mix_decode(
@@ -293,19 +297,93 @@ def block_apply_decode(p, cfg, kind, h, cache, pos):
         new_cache = {"mix": mix_cache}
     else:
         y, new_cache = attn.decode_attention(p["attn"], cfg, x, cache, pos,
-                                             window=_window(cfg, kind))
+                                             window=_window(cfg, kind),
+                                             table=table)
         h = h + y
     x = norm_apply(p["norm2"], cfg, h)
     if kind == "moe":
-        y, _ = moe_mod.moe_apply(p["ffn"], cfg, x)
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, x,
+                                 capacity_factor=_DECODE_MOE_CF(cfg))
     else:
         y = mlp_apply(p["ffn"], cfg, x)
     return h + y, new_cache
 
 
-def decode_step(params, cfg, cache, tokens, pos):
-    """One decode step.  tokens (B,1) int32; pos scalar int32 (absolute
-    position of this token).  Returns (logits (B,1,V) f32, new_cache)."""
+def block_apply_decode_seq(p, cfg, kind, h, cache, pos, commit_len):
+    """T-token chunked decode block (speculative verify/commit).
+
+    h (B,T,d).  Outputs match what T sequential ``block_apply_decode``
+    steps would produce; the cache advances by each row's first
+    ``commit_len[b]`` tokens only.  Recurrent kinds run the sequence form
+    twice — unmasked for the outputs, length-masked for the committed
+    carry (XLA CSE merges the shared projections); attention kinds commit
+    through ``decode_attention_seq``'s masked ring scatter.
+    """
+    b = h.shape[0]
+    cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
+
+    def committed(new_cache, old_cache):
+        # the length-masked carries are exact for commit_len >= 1; at 0
+        # the gather-last carries would grab position 0 instead of the
+        # pre-chunk state, so keep the old cache wholesale there
+        def sel(new, old):
+            m = (cl > 0).reshape((b,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+        return jax.tree.map(sel, new_cache, old_cache)
+
+    if kind == "rwkv":
+        x = norm_apply(p["norm1"], cfg, h)
+        y, _ = rwkv_mod.time_mix_seq(p, cfg, x, cache["tm_shift"],
+                                     cache["wkv"])
+        _, (tm_shift, wkv) = rwkv_mod.time_mix_seq(
+            p, cfg, x, cache["tm_shift"], cache["wkv"], length=cl)
+        h = h + y
+        x = norm_apply(p["norm2"], cfg, h)
+        y, cm_shift = rwkv_mod.channel_mix_seq(p, cfg, x, cache["cm_shift"],
+                                               length=cl)
+        h = h + y
+        new_cache = committed(
+            {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}, cache)
+        return h, new_cache
+
+    x = norm_apply(p["norm1"], cfg, h)
+    if kind == "rec":
+        y, _ = rglru_mod.rglru_seq(p["mix"], cfg, x, cache["mix"])
+        _, mix_cache = rglru_mod.rglru_seq(p["mix"], cfg, x, cache["mix"],
+                                           length=cl)
+        h = h + y
+        new_cache = {"mix": committed(mix_cache, cache["mix"])}
+    else:
+        y, new_cache = attn.decode_attention_seq(p["attn"], cfg, x, cache,
+                                                 pos, cl,
+                                                 window=_window(cfg, kind))
+        h = h + y
+    x = norm_apply(p["norm2"], cfg, h)
+    if kind == "moe":
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, x,
+                                 capacity_factor=_DECODE_MOE_CF(cfg))
+    else:
+        y = mlp_apply(p["ffn"], cfg, x)
+    return h + y, new_cache
+
+
+def _DECODE_MOE_CF(cfg) -> float:
+    # decode is DROPLESS (capacity_factor=E makes cap = tokens*top_k):
+    # capacity dropping depends on which tokens share the dispatch, so a
+    # served token's logits would change with its co-scheduled slots and
+    # with tick batching — breaking multi-tick / speculative
+    # token-identity.  Training keeps the configured (dropping) factor.
+    return float(cfg.moe.n_experts)
+
+
+def decode_seq(params, cfg, cache, tokens, pos, commit_len):
+    """Chunked decode: T tokens per row against the current cache, with a
+    masked commit.  tokens (B,T) int32 at absolute positions
+    ``pos .. pos+T-1`` (pos (B,) int32); commit_len (B,) int32 in [0,T].
+    Returns (logits (B,T,V) f32, new_cache advanced by commit_len tokens).
+    logits[:, j] match what sequential ``decode_step`` calls would produce
+    for token j — this is speculative decoding's verify (commit_len=0)
+    and commit (commit_len=accepted) primitive."""
     pattern, np_, rem = _split(cfg)
     h = embed_apply(params["embed"], cfg, tokens)
 
@@ -315,7 +393,41 @@ def decode_step(params, cfg, cache, tokens, pos):
             bp, bc = xs
             ncs = []
             for pi, kind in enumerate(pattern):
-                h, nc = block_apply_decode(bp[pi], cfg, kind, h, bc[pi], pos)
+                h, nc = block_apply_decode_seq(bp[pi], cfg, kind, h, bc[pi],
+                                               pos, commit_len)
+                ncs.append(nc)
+            return h, tuple(ncs)
+
+        h, new_block_caches = scan_or_unroll(
+            superblock, h, (tuple(params["blocks"]), tuple(cache["blocks"])))
+
+    new_rem = []
+    for i, bp in enumerate(params["rem_blocks"]):
+        h, nc = block_apply_decode_seq(bp, cfg, pattern[i], h,
+                                       cache["rem_blocks"][i], pos,
+                                       commit_len)
+        new_rem.append(nc)
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_apply(params["embed"], cfg, h)
+    return logits, {"blocks": new_block_caches, "rem_blocks": tuple(new_rem)}
+
+
+def decode_step(params, cfg, cache, tokens, pos, table=None):
+    """One decode step.  tokens (B,1) int32; pos scalar int32 (absolute
+    position of this token).  Returns (logits (B,1,V) f32, new_cache).
+    ``table`` (B, cap/bs) int32: block-pool cache layout (see
+    ``block_apply_decode``)."""
+    pattern, np_, rem = _split(cfg)
+    h = embed_apply(params["embed"], cfg, tokens)
+
+    new_block_caches = ()
+    if np_ > 0:
+        def superblock(h, xs):
+            bp, bc = xs
+            ncs = []
+            for pi, kind in enumerate(pattern):
+                h, nc = block_apply_decode(bp[pi], cfg, kind, h, bc[pi], pos,
+                                           table)
                 ncs.append(nc)
             return h, tuple(ncs)
 
@@ -325,7 +437,7 @@ def decode_step(params, cfg, cache, tokens, pos):
     new_rem = []
     for i, bp in enumerate(params["rem_blocks"]):
         h, nc = block_apply_decode(bp, cfg, pattern[i], h,
-                                   cache["rem_blocks"][i], pos)
+                                   cache["rem_blocks"][i], pos, table)
         new_rem.append(nc)
     h = norm_apply(params["final_norm"], cfg, h)
     logits = unembed_apply(params["embed"], cfg, h)

@@ -2,10 +2,16 @@
 
 ``ServingEngine`` runs the whole model zoo through the unified
 ``models.DecodeState`` contract: fixed decode slots, bucketed interleaved
-prefill, one compiled decode step per tick, greedy / temperature / top-k
-sampling, params + state sharded over the replica mesh."""
+prefill, multi-tick decode dispatches (``ticks_per_dispatch`` device-
+resident ticks per host sync), greedy / temperature / top-k sampling
+with per-(request, position) keys, optional speculative decoding
+(``draft_params``/``draft_cfg``/``spec_tokens`` — serving/spec_decode.py)
+and shared-prefix block-pool caches (``block_size``/``num_blocks`` —
+serving/blocks.py), params + state sharded over the replica mesh."""
+from repro.serving.blocks import BlockManager
 from repro.serving.engine import (DEFAULT_BUCKETS, Request, Result,
                                   ServingEngine)
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_slots, slot_key
 
-__all__ = ["ServingEngine", "Request", "Result", "DEFAULT_BUCKETS", "sample"]
+__all__ = ["ServingEngine", "Request", "Result", "DEFAULT_BUCKETS",
+           "BlockManager", "sample", "sample_slots", "slot_key"]

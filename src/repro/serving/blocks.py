@@ -1,0 +1,261 @@
+"""Shared-prefix KV blocks: the ring cache cut into ref-counted,
+fixed-size pool blocks (docs/serving.md).
+
+Instead of one private (capacity,) ring per slot, the engine owns ONE
+pool of ``num_blocks`` blocks of ``block_size`` ring positions each, and
+a per-slot **block table** (slots, capacity/bs) mapping logical ring
+slot ``s`` of a row onto ``pool[table[row, s // bs], s % bs]``.  All the
+ring position arithmetic is untouched — only the physical placement of
+a slot's bytes moves — which is why the decode-attention kernels take
+the table as a second scalar-prefetch argument and otherwise run the
+exact same tile loop.
+
+What the indirection buys:
+
+  sharing   the K/V of prompt position p depends only on tokens <= p, so
+            two requests with the same prompt PREFIX produce bit-equal
+            cache blocks.  ``BlockManager`` chain-hashes each full
+            ``block_size`` prompt chunk (h_j = H(h_{j-1}, chunk_j)) and
+            points a new row's table at already-filled blocks: prefill
+            still runs (it must — the suffix needs its logits) but the
+            pool holds ONE copy of the shared prefix, so a pool of NB
+            blocks serves far more concurrent same-prefix rows than
+            NB*bs/capacity (benchmarks/serving_latency.py measures it).
+  prefill
+  -once     an EXACT full-prompt repeat (greedy engines) admits with no
+            forward at all: the manager cached the first sampled token
+            and a snapshot of the tail block at first admission; the new
+            row shares the full chunks and gets a copy-on-write clone of
+            the tail snapshot (its decode will write into that block —
+            the one genuine divergence point).
+  safety    block 0 is the TRASH block and is never allocated: a retired
+            slot's table is reset to all-zeros, so the garbage its
+            inactive row keeps decoding lands harmlessly in block 0,
+            which no live table references.  Live rows never write a
+            shared block: decode writes sit at positions >= prompt_len,
+            which per-admit full allocation places in private blocks,
+            and rows retire before the ring wraps (``_hit_limits``).
+
+Host-side policy (this file) is pure bookkeeping — refcounts, free
+list, hash indices; device data only moves in ``write_prefill`` (scatter
+a prefilled contiguous ring into the row's blocks) and ``copy_block``
+(COW / snapshot clones).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+
+TRASH = 0     # block 0: retired rows write here, nobody reads it
+
+
+def _chain(prev: bytes, chunk) -> bytes:
+    return hashlib.sha1(prev + np.asarray(chunk, np.int32).tobytes()).digest()
+
+
+@dataclasses.dataclass
+class Admission:
+    """One row's placement decision.  ``table`` is the full per-admit
+    allocation (capacity/bs entries, shared prefix first).  When
+    ``first_token`` is set the prefill forward is SKIPPED (exact-prompt
+    hit): ``cow`` clones the tail snapshot into this row's private
+    block.  Otherwise the engine prefills, scatters, then calls
+    ``BlockManager.finish`` to register the new chunks/snapshot."""
+    table: List[int]
+    n_shared: int                      # shared full-prefix chunks
+    prompt_len: int
+    cow: List[Tuple[int, int]]         # (dst, src) block copies to run
+    first_token: Optional[int] = None  # set => zero-forward admission
+    # registration plan (prefill path only):
+    new_chunks: List[Tuple[bytes, int]] = dataclasses.field(
+        default_factory=list)
+    pkey: Optional[bytes] = None
+    snapshot: Optional[int] = None     # block to clone the tail into
+
+
+class BlockManager:
+    """Host-side allocator for the shared block pool.  ``dedup=False``
+    turns every lookup/registration off (every admission gets fully
+    private blocks) — the control arm of the capacity benchmark."""
+
+    def __init__(self, num_blocks: int, block_size: int, dedup: bool = True,
+                 prefill_once: bool = True):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (trash + 1), "
+                             f"got {num_blocks}")
+        self.nb, self.bs, self.dedup = num_blocks, block_size, dedup
+        # first-token reuse is only sound when sampling is deterministic
+        # given the prompt (greedy) — chunk sharing is sound regardless
+        self.prefill_once = prefill_once
+        self.free: List[int] = list(range(num_blocks - 1, TRASH, -1))
+        self.ref: Dict[int, int] = {}
+        self.chunks: Dict[bytes, int] = {}      # chain hash -> block
+        self._rev: Dict[int, bytes] = {}        # block -> chain hash
+        self.prompts: Dict[bytes, Tuple[int, Optional[int]]] = {}
+        self.prefills_skipped = 0
+        self.peak = 0                      # high-water blocks in use
+
+    # ------------------------------------------------------------ refs ----
+
+    def _alloc(self) -> int:
+        b = self.free.pop()
+        self.ref[b] = 1
+        self.peak = max(self.peak, self.in_use)
+        return b
+
+    def _share(self, b: int) -> int:
+        self.ref[b] += 1
+        return b
+
+    def _unref(self, b: int) -> None:
+        self.ref[b] -= 1
+        if self.ref[b] == 0:
+            del self.ref[b]
+            h = self._rev.pop(b, None)
+            if h is not None:
+                self.chunks.pop(h, None)
+            self.free.append(b)
+
+    def _ensure(self, needed: int, protect: Optional[bytes]) -> bool:
+        """Free snapshot-only pool space (evict cached prompts) until
+        ``needed`` blocks are allocatable.  Never evicts ``protect``."""
+        while len(self.free) < needed:
+            victim = next((k for k in self.prompts if k != protect), None)
+            if victim is None:
+                return False
+            _, snap = self.prompts.pop(victim)
+            if snap is not None:
+                self._unref(snap)
+        return True
+
+    @property
+    def in_use(self) -> int:
+        return self.nb - 1 - len(self.free)
+
+    # ------------------------------------------------------- admissions ----
+
+    def _hashes(self, prompt) -> Tuple[List[bytes], bytes]:
+        hs, h = [], b"ring"
+        for i in range(len(prompt) // self.bs):
+            h = _chain(h, prompt[i * self.bs:(i + 1) * self.bs])
+            hs.append(h)
+        pkey = _chain(h, prompt[len(hs) * self.bs:])
+        return hs, pkey
+
+    def admit(self, prompt, n_k: int) -> Optional[Admission]:
+        """Place one row (prompt = int sequence; n_k = capacity/bs table
+        length).  Returns None when the pool cannot host the row right
+        now — the engine defers the request instead of failing it."""
+        prompt = list(map(int, prompt))
+        n_full = len(prompt) // self.bs
+        tail = len(prompt) - n_full * self.bs
+        hs, pkey = ([], None) if not self.dedup else self._hashes(prompt)
+
+        cached = self.dedup and self.prefill_once and \
+            pkey in self.prompts and all(h in self.chunks for h in hs)
+        if cached:
+            first, snap = self.prompts[pkey]
+            if not self._ensure(n_k - n_full, protect=pkey):
+                return None
+            table = [self._share(self.chunks[h]) for h in hs]
+            cow = []
+            if tail:
+                table.append(self._alloc())
+                cow.append((table[-1], snap))
+            while len(table) < n_k:
+                table.append(self._alloc())
+            self.prefills_skipped += 1
+            return Admission(table=table, n_shared=n_full,
+                             prompt_len=len(prompt), cow=cow,
+                             first_token=first)
+
+        j = 0
+        while self.dedup and j < n_full and hs[j] in self.chunks:
+            j += 1
+        register = self.dedup and self.prefill_once and \
+            pkey not in self.prompts
+        need_snap = register and tail > 0
+        if not self._ensure(n_k - j + int(need_snap), protect=pkey):
+            return None
+        table = [self._share(self.chunks[h]) for h in hs[:j]]
+        table += [self._alloc() for _ in range(n_k - j)]
+        return Admission(
+            table=table, n_shared=j, prompt_len=len(prompt), cow=[],
+            new_chunks=[(hs[i], table[i]) for i in range(j, len(hs))],
+            pkey=pkey if register else None,
+            snapshot=self._alloc() if need_snap else None)
+
+    def finish(self, adm: Admission, first_token: int) -> None:
+        """Register what prefill just materialised: the row's fresh full
+        chunks become shareable, and (greedy engines) the exact prompt
+        maps to (first sampled token, tail snapshot) for prefill-once."""
+        for h, b in adm.new_chunks:
+            self.chunks[h] = b
+            self._rev[b] = h
+        if adm.pkey is not None:
+            self.prompts[adm.pkey] = (int(first_token), adm.snapshot)
+
+    def release(self, adm: Admission) -> None:
+        for b in adm.table:
+            self._unref(b)
+
+
+# ------------------------------------------------------------ device ops ----
+
+def _pool_axis(path) -> int:
+    parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return 1 if models.stacked_cache_path("/".join(parts)) else 0
+
+
+def init_blocked_state(cfg, num_blocks: int, block_size: int,
+                       slots: int) -> models.DecodeState:
+    """The pool-shaped DecodeState: every ring leaf built as if it were
+    a batch of ``num_blocks`` rows of capacity ``block_size`` — i.e. the
+    pool IS a ring cache whose batch axis means 'block'.  ``pos`` stays
+    per-SLOT; the table maps between the two."""
+    cache = models.init_decode_cache(cfg, num_blocks, block_size)
+    return models.DecodeState(cache=cache,
+                              pos=jnp.zeros((slots,), jnp.int32))
+
+
+def write_prefill(state: models.DecodeState, sub: models.DecodeState,
+                  table_row, slot: int, block_size: int) -> models.DecodeState:
+    """Scatter a freshly prefilled CONTIGUOUS ring (batch 1, capacity
+    n_k*bs) into the row's blocks.  Shared prefix blocks are rewritten
+    with bit-identical bytes (same chunk + same prefix => same K/V), so
+    no special-casing is needed."""
+    ids = jnp.asarray(table_row, jnp.int32)
+    n_k, bs = len(table_row), block_size
+
+    def one(path, pool, s):
+        if _pool_axis(path) == 1:
+            ly = pool.shape[0]
+            chunks = s[:, 0, :n_k * bs].reshape((ly, n_k, bs) + s.shape[3:])
+            return pool.at[:, ids].set(chunks.astype(pool.dtype))
+        chunks = s[0, :n_k * bs].reshape((n_k, bs) + s.shape[2:])
+        return pool.at[ids].set(chunks.astype(pool.dtype))
+
+    cache = jax.tree_util.tree_map_with_path(one, state.cache, sub.cache)
+    return models.DecodeState(cache=cache,
+                              pos=state.pos.at[slot].set(sub.pos[0]))
+
+
+def copy_block(state: models.DecodeState, dst: int,
+               src: int) -> models.DecodeState:
+    """Clone one pool block across every ring leaf (COW / snapshots)."""
+
+    def one(path, pool):
+        if _pool_axis(path) == 1:
+            return pool.at[:, dst].set(pool[:, src])
+        return pool.at[dst].set(pool[src])
+
+    return models.DecodeState(
+        cache=jax.tree_util.tree_map_with_path(one, state.cache),
+        pos=state.pos)

@@ -73,20 +73,48 @@ def _state_sharding(cfg, slots, capacity, enc_len, mesh):
         pos=NamedSharding(mesh, P(lead)))
 
 
-def _decode_fn(cfg, temperature, top_k, slots, capacity, enc_len, mesh):
-    key = (cfg, temperature, top_k, slots, capacity, enc_len, mesh)
+def _to_host(x):
+    """THE device->host sync of the decode loop.  ``step()`` calls this
+    exactly once per dispatch, on one packed (2, slots, K) array — the
+    token block and the device-computed retire flags cross together
+    (tests/serving/test_multi_tick.py counts calls to this hook)."""
+    return np.asarray(x)
+
+
+def _decode_fn(cfg, temperature, top_k, slots, capacity, enc_len, mesh,
+               ticks, eos_id, blocked=False):
+    key = (cfg, temperature, top_k, slots, capacity, enc_len, mesh, ticks,
+           eos_id, blocked)
     if key not in _DECODE_FNS:
-        def decode(params, state, toks, rng):
-            logits, state = models.decode_step(params, cfg, state, toks)
-            tok = sampling.sample(rng, logits[:, 0],
-                                  temperature=temperature, top_k=top_k)
-            return tok[:, None], state
+        def decode(params, state, toks, keys, table=None):
+            # K device-resident ticks in ONE dispatch: sampled tokens,
+            # per-row positions and eos flags never leave the device
+            # between ticks; the scan donates the state through.  Rows
+            # that retire mid-block keep decoding garbage — their extra
+            # tokens are dropped host-side at drain, and re-admission's
+            # write_slots overwrites the whole row anyway.
+            def tick(carry, _):
+                state, toks = carry
+                logits, state = models.decode_step(params, cfg, state, toks,
+                                                   table=table)
+                tok = sampling.sample_slots(keys, state.pos, logits[:, 0],
+                                            temperature=temperature,
+                                            top_k=top_k)
+                return (state, tok[:, None]), tok
+
+            (state, last), seq = jax.lax.scan(tick, (state, toks), None,
+                                              length=ticks)
+            block = seq.T                              # (slots, K)
+            flags = (jnp.zeros(block.shape, jnp.int32) if eos_id is None
+                     else (block == eos_id).astype(jnp.int32))
+            return jnp.stack([block, flags]), last, state
 
         kw = {}
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             _, lead = _replica_lead(mesh)
             kw["out_shardings"] = (
+                NamedSharding(mesh, P(None, lead, None)),
                 NamedSharding(mesh, P(lead, None)),
                 _state_sharding(cfg, slots, capacity, enc_len, mesh))
         _DECODE_FNS[key] = jax.jit(decode, donate_argnums=(1,), **kw)
@@ -96,12 +124,16 @@ def _decode_fn(cfg, temperature, top_k, slots, capacity, enc_len, mesh):
 def _prefill_fn(cfg, temperature, top_k, capacity, bucket):
     key = (cfg, temperature, top_k, capacity, bucket)
     if key not in _PREFILL_FNS:
-        def prefill(params, tokens, length, extras, rng):
+        def prefill(params, tokens, length, extras, key):
             logits, sub = models.prefill(params, cfg, tokens, capacity,
                                          length=length, **extras)
             last = logits[jnp.arange(tokens.shape[0]), length - 1]
-            tok = sampling.sample(rng, last, temperature=temperature,
-                                  top_k=top_k)
+            # the first generated token sits at absolute position
+            # ``length`` — sampled with the same positional fold_in rule
+            # the decode loop uses, so streams do not depend on admission
+            # order or tick batching
+            tok = sampling.sample_slots(key[None], length, last,
+                                        temperature=temperature, top_k=top_k)
             return tok[:, None], sub
 
         _PREFILL_FNS[key] = jax.jit(prefill)
@@ -151,6 +183,8 @@ class Result:
     t_submit: float
     t_first: float                     # first token emitted (prefill done)
     t_done: float
+    draft_proposed: int = 0            # spec decode: draft tokens offered
+    draft_accepted: int = 0            # ... of which the target kept
 
     @property
     def ttft(self) -> float:
@@ -160,12 +194,19 @@ class Result:
     def latency(self) -> float:
         return self.t_done - self.t_submit
 
+    @property
+    def acceptance(self) -> float:
+        return self.draft_accepted / max(self.draft_proposed, 1)
+
 
 class ServingEngine:
     def __init__(self, params, cfg, *, slots: int = 4, capacity: int = 256,
                  buckets=None, temperature: float = 0.0, top_k: int = 0,
                  eos_id: Optional[int] = None, mesh=None, seed: int = 0,
-                 enc_len: int = 64):
+                 enc_len: int = 64, ticks_per_dispatch: int = 1,
+                 draft_params=None, draft_cfg=None, spec_tokens: int = 4,
+                 block_size: int = 0, num_blocks: int = 0,
+                 prefix_dedup: bool = True):
         self.cfg, self.slots, self.capacity = cfg, slots, capacity
         bs = tuple(sorted(b for b in (buckets or DEFAULT_BUCKETS)
                           if b <= capacity))
@@ -174,16 +215,79 @@ class ServingEngine:
         self.buckets = bs
         self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
         self.mesh, self.enc_len = mesh, enc_len
-        self.rng = jax.random.PRNGKey(seed)
-        self.state = models.init_decode_state(cfg, slots, capacity,
-                                              enc_len=enc_len)
+        if ticks_per_dispatch < 1:
+            raise ValueError(f"ticks_per_dispatch must be >= 1, "
+                             f"got {ticks_per_dispatch}")
+        self.ticks = ticks_per_dispatch
+        if (draft_params is None) != (draft_cfg is None):
+            raise ValueError("speculative decoding needs BOTH draft_params "
+                             "and draft_cfg (or neither)")
+        self.draft_cfg, self.spec_tokens = draft_cfg, int(spec_tokens)
+        self.draft_state = None
+        self.spec_proposed = 0         # draft tokens offered, engine-wide
+        self.spec_accepted = 0         # ... kept by the target
+        if draft_cfg is not None:
+            from repro.serving import spec_decode
+            if self.spec_tokens < 0:
+                raise ValueError(
+                    f"spec_tokens must be >= 0, got {spec_tokens}")
+            spec_decode.check_spec_pair(cfg, draft_cfg,
+                                        temperature=temperature,
+                                        ticks=self.ticks)
+            self.draft_state = models.init_decode_state(
+                draft_cfg, slots, capacity, enc_len=enc_len)
+        self.block_size = int(block_size)
+        self.block_mgr = None
+        self.table = None
+        if self.block_size > 0:
+            from repro.serving import blocks as blk
+            if mesh is not None:
+                raise NotImplementedError("block-table serving is "
+                                          "single-device for now")
+            if cfg.family not in ("dense", "moe"):
+                raise NotImplementedError(
+                    f"block-table caches need a pure-attention family "
+                    f"(dense/moe), got {cfg.family!r} ({cfg.name})")
+            if cfg.sliding_window is not None:
+                raise NotImplementedError(
+                    "block-table caches need full attention: a windowed "
+                    "ring (cap < seq) wraps and would overwrite shared "
+                    "blocks")
+            if self.ticks != 1 or draft_cfg is not None:
+                raise ValueError("block-table serving composes with "
+                                 "neither multi-tick (rows must retire "
+                                 "before the ring wraps) nor spec decode "
+                                 "yet")
+            if capacity % self.block_size:
+                raise ValueError(f"capacity {capacity} not a multiple of "
+                                 f"block_size {self.block_size}")
+            self.n_k = capacity // self.block_size
+            # default pool: fully private provisioning + the trash block —
+            # sharing then makes it oversubscribable (pass num_blocks)
+            nb = int(num_blocks) or slots * self.n_k + 1
+            self.block_mgr = blk.BlockManager(nb, self.block_size,
+                                              dedup=prefix_dedup,
+                                              prefill_once=temperature == 0.0)
+            self.table = jnp.zeros((slots, self.n_k), jnp.int32)
+            self._slot_adm: List[Optional[Any]] = [None] * slots
+        self.rng = jax.random.PRNGKey(seed)   # base key: slot keys fold rid
+        if self.block_size > 0:
+            from repro.serving import blocks as blk
+            self.state = blk.init_blocked_state(cfg, self.block_mgr.nb,
+                                                self.block_size, slots)
+        else:
+            self.state = models.init_decode_state(cfg, slots, capacity,
+                                                  enc_len=enc_len)
         self.last_tok = jnp.zeros((slots, 1), jnp.int32)
+        self.slot_keys = jnp.broadcast_to(
+            self.rng, (slots,) + self.rng.shape)
         self._active: List[Optional[Request]] = [None] * slots
         self._results: Dict[int, Result] = {}
         self._queue: collections.deque = collections.deque()
         self._next_rid = 0
         self._buckets_used: set = set()
-        self.decode_steps = 0          # compiled-step counter (ticks)
+        self.decode_steps = 0          # model ticks run (K per dispatch)
+        self.dispatches = 0            # compiled decode dispatches
 
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -199,9 +303,29 @@ class ServingEngine:
             self.state = jax.device_put(self.state, shard)
             self.last_tok = jax.device_put(
                 self.last_tok, NamedSharding(mesh, P(lead, None)))
+            self.slot_keys = jax.device_put(
+                self.slot_keys, NamedSharding(mesh, P(lead, None)))
+            if draft_cfg is not None:
+                draft_params = jax.device_put(
+                    draft_params,
+                    jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 draft_params))
+                self.draft_state = jax.device_put(
+                    self.draft_state,
+                    _state_sharding(draft_cfg, slots, capacity, enc_len,
+                                    mesh))
         self.params = params
+        self.draft_params = draft_params
+        if draft_cfg is not None:
+            from repro.serving import spec_decode
+            self._spec = spec_decode.spec_fn(cfg, draft_cfg, self.spec_tokens,
+                                             slots, capacity, enc_len, mesh,
+                                             eos_id)
+        else:
+            self._spec = None
         self._decode = _decode_fn(cfg, temperature, top_k, slots, capacity,
-                                  enc_len, mesh)
+                                  enc_len, mesh, self.ticks, eos_id,
+                                  blocked=self.block_size > 0)
 
     # ----------------------------------------------------------- compile ----
 
@@ -295,25 +419,88 @@ class ServingEngine:
                     "image_mask": jnp.asarray(mask)[None]}
         return {}
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _admit(self, req: Request, slot: int) -> bool:
+        """Prefill ``req`` into ``slot``.  Returns False (request NOT
+        consumed) only in blocked mode when the pool cannot host the row
+        yet — the caller defers it instead of failing."""
         prompt = np.asarray(req.prompt, np.int32)
         bucket = self._bucket(len(prompt))
+        # the request's OWN key, derived from its rid — sampling depends
+        # only on (request, position), never on admission order
+        req_key = sampling.slot_key(self.rng, req.rid)
+        if self.block_mgr is not None:
+            tok = self._admit_blocked(req, slot, bucket, req_key)
+            if tok is None:
+                return False
+            self.last_tok = self.last_tok.at[slot].set(tok)
+            self.slot_keys = self.slot_keys.at[slot].set(req_key)
+            self._active[slot] = req
+            res = self._results[req.rid]
+            res.tokens.append(tok)
+            res.t_first = time.perf_counter()
+            return True
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :len(prompt)] = prompt
-        if self.temperature == 0.0:
-            k = self.rng
-        else:
-            self.rng, k = jax.random.split(self.rng)
         first, sub = self._prefill_fn(bucket)(
             self.params, jnp.asarray(toks),
             jnp.asarray([len(prompt)], jnp.int32), self._extras(req, bucket),
-            k)
+            req_key)
         self.state = models.write_slots(self.state, sub, [slot])
+        if self.draft_cfg is not None:
+            # spec decode: the draft consumes the same prompt so its state
+            # sits at the same position; its sampled first token is
+            # discarded — the stream's first token is the TARGET's
+            _, dsub = _prefill_fn(self.draft_cfg, self.temperature,
+                                  self.top_k, self.capacity, bucket)(
+                self.draft_params, jnp.asarray(toks),
+                jnp.asarray([len(prompt)], jnp.int32), {}, req_key)
+            self.draft_state = models.write_slots(self.draft_state, dsub,
+                                                  [slot])
         self.last_tok = self.last_tok.at[slot].set(first[0])
+        self.slot_keys = self.slot_keys.at[slot].set(req_key)
         self._active[slot] = req
         res = self._results[req.rid]
         res.tokens.append(int(first[0, 0]))
         res.t_first = time.perf_counter()
+        return True
+
+    def _admit_blocked(self, req: Request, slot: int, bucket: int,
+                       req_key) -> Optional[int]:
+        """Blocked-pool admission: place the row's table, then either
+        skip the forward entirely (exact-prompt hit: shared blocks + COW
+        tail clone + cached first token) or prefill and scatter into the
+        row's blocks.  Returns the first token, or None to defer."""
+        from repro.serving import blocks as blk
+        prompt = np.asarray(req.prompt, np.int32)
+        adm = self.block_mgr.admit(prompt, self.n_k)
+        if adm is None:
+            return None                   # pool exhausted — defer
+        self.table = self.table.at[slot].set(jnp.asarray(adm.table,
+                                                         jnp.int32))
+        self._slot_adm[slot] = adm
+        if adm.first_token is not None:
+            for dst, src in adm.cow:      # tail clone: the row WILL write
+                self.state = blk.copy_block(self.state, dst, src)
+            self.state = models.DecodeState(
+                cache=self.state.cache,
+                pos=self.state.pos.at[slot].set(len(prompt)))
+            return adm.first_token
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :len(prompt)] = prompt
+        first, sub = self._prefill_fn(bucket)(
+            self.params, jnp.asarray(toks),
+            jnp.asarray([len(prompt)], jnp.int32), self._extras(req, bucket),
+            req_key)
+        self.state = blk.write_prefill(self.state, sub, adm.table, slot,
+                                       self.block_size)
+        if adm.snapshot is not None:
+            # snapshot the tail block NOW, before any decode write dirties
+            # it — future exact-prompt admissions clone from this copy
+            tail_blk = adm.table[len(prompt) // self.block_size]
+            self.state = blk.copy_block(self.state, adm.snapshot, tail_blk)
+        tok = int(first[0, 0])
+        self.block_mgr.finish(adm, tok)
+        return tok
 
     def _admit_images(self, reqs: List[Request], slots: List[int]) -> None:
         """Conv-family admission: ONE compiled forward classifies every
@@ -354,6 +541,13 @@ class ServingEngine:
     def _retire(self, slot: int, now: float) -> Result:
         req = self._active[slot]
         self._active[slot] = None
+        if self.block_mgr is not None:
+            self.block_mgr.release(self._slot_adm[slot])
+            self._slot_adm[slot] = None
+            # point the dead row at the trash block: its garbage decode
+            # writes land where no live table looks
+            self.table = self.table.at[slot].set(
+                jnp.zeros((self.n_k,), jnp.int32))
         # hand the Result to the caller and forget it — a long-lived
         # engine must not accumulate one token list per request forever
         res = self._results.pop(req.rid)
@@ -376,9 +570,18 @@ class ServingEngine:
     def step(self) -> List[Result]:
         """Retire finished rows, admit what fits (repeating until the
         admission fixpoint, so a slot freed by a single-token request is
-        refilled within the same tick), then run ONE decode tick.
+        refilled within the same tick), then run ONE decode dispatch of
+        ``ticks_per_dispatch`` device-resident model ticks.
 
-        Returns the requests that finished on this tick."""
+        The host sees device data once per dispatch: a packed
+        (2, slots, K) block of sampled tokens + retire flags
+        (``_to_host``).  The drain applies exactly the K=1 retirement
+        rules tick by tick — token streams are identical for every K;
+        a row that finishes at drain-tick j keeps its slot until the
+        next dispatch boundary, so retirement latency is bounded by K
+        ticks (docs/serving.md).
+
+        Returns the requests that finished on this step."""
         finished = []
         while True:
             now = time.perf_counter()
@@ -392,9 +595,15 @@ class ServingEngine:
                     req = self._queue.popleft()
                     if self.cfg.family == "conv":
                         batch.append((slot, req))
+                        admitted = True
+                    elif self._admit(req, slot):
+                        admitted = True
                     else:
-                        self._admit(req, slot)
-                    admitted = True
+                        # block pool exhausted: requeue at the FRONT (FIFO
+                        # order survives) and stop admitting this round —
+                        # retirements will free blocks on later steps
+                        self._queue.appendleft(req)
+                        break
             if batch:
                 self._admit_images([r for _, r in batch],
                                    [s for s, _ in batch])
@@ -402,25 +611,61 @@ class ServingEngine:
                 break
         if not any(self._active) and not self._queue:
             return finished
-        if self.temperature == 0.0:
-            k = self.rng          # greedy: key unused, skip the eager split
+        if not any(self._active):
+            # blocked mode deferred the queue head with an otherwise idle
+            # engine — the pool is as free as it will ever get, so waiting
+            # cannot help; surface the sizing error instead of spinning
+            raise RuntimeError(
+                f"block pool ({self.block_mgr.nb} x {self.block_size}) "
+                f"cannot host one request of {self.n_k} blocks")
+        if self._spec is not None:
+            # propose + verify + commit in ONE dispatch; the drain applies
+            # the same retirement rules per emitted token, reading each
+            # row's accept count from the packed block
+            out, self.last_tok, self.state, self.draft_state = self._spec(
+                self.params, self.draft_params, self.state, self.draft_state,
+                self.last_tok)
+            self.decode_steps += 1      # one target pass per dispatch
+            self.dispatches += 1
+            host = _to_host(out)        # THE device sync point (one/dispatch)
+            g1 = self.spec_tokens + 1
+            emit, flags, acc = host[:, :g1], host[:, g1:2 * g1], host[:, -1]
+            now = time.perf_counter()
+            for slot, req in enumerate(self._active):
+                if req is None:
+                    continue
+                res = self._results[req.rid]
+                a = int(acc[slot])
+                res.draft_proposed += self.spec_tokens
+                res.draft_accepted += a - 1
+                self.spec_proposed += self.spec_tokens
+                self.spec_accepted += a - 1
+                for j in range(a):
+                    res.tokens.append(int(emit[slot, j]))
+                    if self._hit_limits(req) or flags[slot, j]:
+                        finished.append(self._retire(slot, now))
+                        break
+            return finished
+        if self.block_mgr is not None:
+            out, self.last_tok, self.state = self._decode(
+                self.params, self.state, self.last_tok, self.slot_keys,
+                self.table)
         else:
-            self.rng, k = jax.random.split(self.rng)
-        toks, self.state = self._decode(self.params, self.state,
-                                        self.last_tok, k)
-        self.last_tok = toks
-        self.decode_steps += 1
-        host = np.asarray(toks)                       # device sync point
+            out, self.last_tok, self.state = self._decode(
+                self.params, self.state, self.last_tok, self.slot_keys)
+        self.decode_steps += self.ticks
+        self.dispatches += 1
+        host = _to_host(out)            # THE device sync point (one/dispatch)
+        block, flags = host[0], host[1]
         now = time.perf_counter()
-        for slot, req in enumerate(self._active):
-            if req is None:
-                continue
-            res = self._results[req.rid]
-            res.tokens.append(int(host[slot, 0]))
-            done = self._hit_limits(req)
-            done |= self.eos_id is not None and host[slot, 0] == self.eos_id
-            if done:
-                finished.append(self._retire(slot, now))
+        for j in range(self.ticks):
+            for slot, req in enumerate(self._active):
+                if req is None:
+                    continue               # retired at an earlier drain tick
+                res = self._results[req.rid]
+                res.tokens.append(int(block[slot, j]))
+                if self._hit_limits(req) or flags[slot, j]:
+                    finished.append(self._retire(slot, now))
         return finished
 
     def run(self, requests=None) -> List[Result]:

@@ -2,7 +2,15 @@
 
 Pure jittable functions over final-position logits.  ``temperature`` and
 ``top_k`` are engine-level (compile-time) settings — they select the
-sampling computation, they are not traced."""
+sampling computation, they are not traced.
+
+Randomness is POSITIONAL, not sequential: every slot carries its own base
+key (``fold_in(engine_key, rid)``) and the key for the token at absolute
+position ``p`` is ``fold_in(slot_key, p)``.  A token's sample therefore
+depends only on (request, position) — never on which dispatch drew it —
+which is what keeps sampled streams bit-identical across
+``--ticks-per-dispatch`` 1/4/8 and across scheduling order
+(``tests/serving/test_multi_tick.py`` asserts it)."""
 from __future__ import annotations
 
 import jax
@@ -24,3 +32,30 @@ def sample(rng, logits, *, temperature: float = 0.0, top_k: int = 0):
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, NEG, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def slot_key(base, rid: int):
+    """The per-slot base key for request ``rid``: fold_in(engine key, rid)."""
+    return jax.random.fold_in(base, rid)
+
+
+def sample_slots(keys, pos, logits, *, temperature: float = 0.0,
+                 top_k: int = 0):
+    """Per-slot positional sampling.  keys (B, ...) per-slot base PRNG
+    keys (one per row); pos (B,) int32 absolute position of the token
+    being sampled; logits (B, V) float32 -> (B,) int32.
+
+    Each row's key is ``fold_in(keys[b], pos[b])`` — deterministic in
+    (request, position), independent of dispatch batching (K) and of
+    every other slot's traffic.  ``temperature == 0`` is greedy argmax
+    (keys unused, so greedy needs no key bookkeeping at all)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG, logits)
+    ks = jax.vmap(jax.random.fold_in)(keys, pos)
+    return jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg))(ks, logits) \
+        .astype(jnp.int32)

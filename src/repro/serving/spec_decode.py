@@ -1,0 +1,123 @@
+"""Speculative decoding: a small family member drafts, the target
+verifies — one fused device dispatch per accept/commit round.
+
+The model zoo is used against itself (docs/serving.md): a draft model
+(e.g. olmo-1b) runs ``gamma`` cheap greedy ticks from its own
+DecodeState, then the target scores the whole candidate chunk in ONE
+chunked call (``models.decode_seq`` with ``commit_len=0`` — pure
+lookahead, nothing written).  Greedy acceptance:
+
+    x      = [t0, d1 .. dγ]          t0 = last engine token, d = drafts
+    tgt[j] = argmax target logits after consuming x[:j+1]
+    m      = Σ cumprod(d_{j+1} == tgt[j])        accepted draft count
+    a      = m + 1                               tokens emitted (>= 1)
+
+The emitted tokens are exactly ``tgt[0..m]`` — accepted drafts EQUAL the
+target's own greedy chain, plus the target's correction/continuation
+token — so the output stream is token-identical to the plain greedy
+engine (tests/serving/test_spec_decode.py, at 1 and 2 devices).
+
+Commit is rollback-free by construction: the propose rollout's draft
+state is DISCARDED, and both models advance by re-running ``decode_seq``
+over x with ``commit_len=a`` — rejected tokens never touch either ring,
+so there is nothing to roll back.  XLA CSE merges the verify and commit
+passes' shared forward work (same params, same state, same x).
+
+One packed (slots, 2(γ+1)+1) array — emitted tokens, eos flags, per-row
+accept counts — crosses to host per dispatch, same single-transfer
+discipline as the multi-tick loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+
+# fused propose+verify+commit dispatches, shared across engine instances
+_SPEC_FNS: Dict[tuple, Any] = {}
+
+# families decode_seq covers that the serving tier can draft for / with
+SPEC_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def check_spec_pair(tcfg, dcfg, *, temperature: float, ticks: int):
+    """Validate an (target, draft) engine configuration.  Greedy-only:
+    distribution-preserving rejection sampling for temperature > 0 is a
+    follow-up (ROADMAP); K>1 multi-tick and spec are separate dispatch
+    shapes."""
+    if temperature != 0.0:
+        raise ValueError("speculative decoding is greedy-only "
+                         f"(temperature=0), got temperature={temperature}")
+    if ticks != 1:
+        raise ValueError("speculative decoding replaces the multi-tick "
+                         f"dispatch; use ticks_per_dispatch=1, got {ticks}")
+    for name, cfg in (("target", tcfg), ("draft", dcfg)):
+        if cfg.family not in SPEC_FAMILIES:
+            raise NotImplementedError(
+                f"spec decode needs a {SPEC_FAMILIES} {name}, got "
+                f"{cfg.family!r} ({cfg.name})")
+    if tcfg.vocab_size != dcfg.vocab_size:
+        raise ValueError(
+            f"draft/target vocabularies differ: {dcfg.vocab_size} vs "
+            f"{tcfg.vocab_size} — acceptance compares token ids directly")
+
+
+def spec_fn(tcfg, dcfg, gamma: int, slots: int, capacity: int, enc_len: int,
+            mesh, eos_id):
+    """The compiled spec dispatch:
+    (tparams, dparams, tstate, dstate, toks (slots,1))
+      -> (packed (slots, 2(γ+1)+1) int32, last (slots,1), tstate, dstate)
+    packed columns: [emit 0..γ | eos flags 0..γ | a].  Only each row's
+    first ``a`` emit/flag entries are meaningful.  γ=0 degenerates to a
+    plain verified tick (a == 1 always)."""
+    key = (tcfg, dcfg, gamma, slots, capacity, enc_len, mesh, eos_id)
+    if key not in _SPEC_FNS:
+        def spec(tparams, dparams, tstate, dstate, toks):
+            if gamma > 0:
+                def dtick(carry, _):
+                    st, tk = carry
+                    lg, st = models.decode_step(dparams, dcfg, st, tk)
+                    nt = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)
+                    return (st, nt[:, None]), nt
+
+                _, drafts = jax.lax.scan(dtick, (dstate, toks), None,
+                                         length=gamma)
+                x = jnp.concatenate([toks, drafts.T], axis=1)  # (B, γ+1)
+            else:
+                x = toks
+            zero = jnp.zeros((slots,), jnp.int32)
+            tlogits, _ = models.decode_seq(tparams, tcfg, tstate, x, zero)
+            tgt = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
+            if gamma > 0:
+                match = (x[:, 1:] == tgt[:, :-1]).astype(jnp.int32)
+                m = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            else:
+                m = zero
+            a = m + 1
+            # commit: both models consume the accepted prefix of x; the
+            # propose rollout's state was never kept, so rejected drafts
+            # exist nowhere
+            _, tstate = models.decode_seq(tparams, tcfg, tstate, x, a)
+            _, dstate = models.decode_seq(dparams, dcfg, dstate, x, a)
+            emit = tgt                                 # emit j (j<a) = tgt_j
+            last = tgt[jnp.arange(slots), m][:, None]
+            flags = (jnp.zeros(emit.shape, jnp.int32) if eos_id is None
+                     else (emit == eos_id).astype(jnp.int32))
+            packed = jnp.concatenate([emit, flags, a[:, None]], axis=1)
+            return packed, last, tstate, dstate
+
+        kw = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.serving.engine import _replica_lead, _state_sharding
+            _, lead = _replica_lead(mesh)
+            kw["out_shardings"] = (
+                NamedSharding(mesh, P(lead, None)),
+                NamedSharding(mesh, P(lead, None)),
+                _state_sharding(tcfg, slots, capacity, enc_len, mesh),
+                _state_sharding(dcfg, slots, capacity, enc_len, mesh))
+        _SPEC_FNS[key] = jax.jit(spec, donate_argnums=(2, 3), **kw)
+    return _SPEC_FNS[key]

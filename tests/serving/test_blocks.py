@@ -1,0 +1,227 @@
+"""Shared-prefix block-pool serving: the table indirection must be
+invisible in the streams (blocked == plain, on both kernel backends),
+sharing must actually dedup pool blocks and skip repeat prefills, and
+the manager's refcount/COW/eviction bookkeeping must hold under
+exhaustion.  Plus direct parity for the table-indirected decode kernel
+(xla gather vs Pallas scalar-prefetch path)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas)
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.serving import BlockManager, Request, ServingEngine
+from repro.serving.blocks import TRASH
+
+XLA = KernelPolicy(backend="xla")
+
+
+def _cfg(**over):
+    over.setdefault("kernels", XLA)
+    return dataclasses.replace(reduced(ARCHS["olmo-1b"]), **over)
+
+
+def _params(cfg):
+    return models.init(jax.random.PRNGKey(0), cfg)
+
+
+def _streams(results):
+    return {r.rid: tuple(r.tokens) for r in results}
+
+
+def _reqs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=ln),
+                    max_new_tokens=m)
+            for ln, m in zip([5, 9, 13, 7, 11, 3], [6, 3, 8, 5, 2, 7])]
+
+
+# ---------------------------------------------------------- manager unit ----
+
+def test_manager_refcounts_and_trash():
+    m = BlockManager(num_blocks=9, block_size=4)
+    adm = m.admit([1, 2, 3, 4, 5], n_k=2)    # 1 full chunk + tail
+    assert len(adm.table) == 2 and TRASH not in adm.table
+    assert adm.snapshot is not None          # tail snapshot planned
+    m.finish(adm, first_token=7)
+    assert m.in_use == 3                     # 2 table + 1 snapshot
+    m.release(adm)
+    assert m.in_use == 1                     # snapshot stays registered
+    # freed chunk block left the hash index with its refcount
+    assert m.chunks == {}
+
+
+def test_manager_prefix_sharing_and_prefill_once():
+    m = BlockManager(num_blocks=32, block_size=4)
+    a = m.admit(list(range(8)) + [9], n_k=4)          # 2 chunks + tail
+    m.finish(a, first_token=42)
+    # same 2-chunk prefix, different tail: shares both full chunks
+    b = m.admit(list(range(8)) + [7, 7], n_k=4)
+    assert b.first_token is None and b.n_shared == 2
+    assert b.table[:2] == a.table[:2]
+    # exact repeat: zero-forward admission + COW clone of the snapshot
+    c = m.admit(list(range(8)) + [9], n_k=4)
+    assert c.first_token == 42
+    assert c.table[:2] == a.table[:2]
+    assert c.cow == [(c.table[2], a.snapshot)]
+    assert m.prefills_skipped == 1
+    # refcounts: shared chunks held by a, b and c
+    for blk in a.table[:2]:
+        assert m.ref[blk] == 3
+
+
+def test_manager_eviction_under_pressure():
+    """Exhaustion first evicts cached prompts (snapshot blocks); only a
+    truly full pool defers."""
+    m = BlockManager(num_blocks=6, block_size=4)     # 5 usable
+    a = m.admit([1, 2, 3, 4, 5], n_k=2)              # 2 + snapshot = 3
+    m.finish(a, first_token=1)
+    assert m.in_use == 3 and len(m.prompts) == 1
+    # needs 3 (2 table + own snapshot), only 2 free: must evict a's
+    # cached prompt (the snapshot block) to fit
+    b = m.admit([9, 9], n_k=2)
+    assert b is not None
+    m.finish(b, first_token=2)
+    assert len(m.prompts) == 1                       # b's registration only
+    assert m.in_use == 5                             # pool full
+    # nothing evictable covers 3 blocks: truly full -> defer (and the
+    # failed attempt consumed the last cached prompt trying)
+    assert m.admit([8, 8], n_k=2) is None
+    assert len(m.prompts) == 0
+    m.release(a)
+    m.release(b)
+    assert m.admit([8, 8], n_k=2) is not None
+
+
+def test_manager_dedup_off():
+    m = BlockManager(num_blocks=32, block_size=4, dedup=False)
+    a = m.admit([1, 2, 3, 4, 5], n_k=2)
+    m.finish(a, first_token=1)
+    b = m.admit([1, 2, 3, 4, 5], n_k=2)
+    assert b.first_token is None and b.n_shared == 0
+    assert not (set(a.table) & set(b.table))
+    assert m.prefills_skipped == 0
+
+
+# ---------------------------------------------------------- engine level ----
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_blocked_matches_plain(backend):
+    """Block-table serving generates the plain engine's exact streams —
+    with the xla gather path and the Pallas scalar-prefetch kernel."""
+    cfg = _cfg(kernels=KernelPolicy(backend=backend))
+    params = _params(cfg)
+    base = _streams(ServingEngine(params, cfg, slots=2, capacity=64,
+                                  buckets=(16,)).run(_reqs(cfg)))
+    eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        block_size=16)
+    assert _streams(eng.run(_reqs(cfg))) == base
+
+
+def test_sharing_skips_prefills_and_saves_blocks():
+    """Same prompt admitted 4x: one prefill, three zero-forward
+    admissions (COW tail clones), identical streams, and a lower pool
+    high-water mark than the dedup-off control."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = list(range(1, 40))          # 2 full 16-blocks + tail of 7
+    mk = lambda: [Request(prompt=prompt, max_new_tokens=6)        # noqa: E731
+                  for _ in range(4)]
+    shared = ServingEngine(params, cfg, slots=4, capacity=64, buckets=(64,),
+                           block_size=16)
+    s_res = shared.run(mk())
+    assert len({tuple(r.tokens) for r in s_res}) == 1
+    assert shared.block_mgr.prefills_skipped == 3
+    assert shared.prefill_compiles == 1
+
+    private = ServingEngine(params, cfg, slots=4, capacity=64, buckets=(64,),
+                            block_size=16, prefix_dedup=False)
+    p_res = private.run(mk())
+    assert {tuple(r.tokens) for r in p_res} == {tuple(s_res[0].tokens)}
+    assert private.block_mgr.prefills_skipped == 0
+    assert shared.block_mgr.peak < private.block_mgr.peak
+
+
+def test_pool_exhaustion_defers_requests():
+    """A pool that fits one row at a time still completes every request
+    (deferred admissions run after retirements free blocks)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        block_size=16, num_blocks=64 // 16 + 2,
+                        prefix_dedup=False)
+    res = eng.run([Request(prompt=[5, 6, 7], max_new_tokens=5)
+                   for _ in range(3)])
+    assert len(res) == 3
+    assert len({tuple(r.tokens) for r in res}) == 1
+
+
+def test_undersized_pool_raises():
+    cfg = _cfg()
+    eng = ServingEngine(_params(cfg), cfg, slots=1, capacity=64,
+                        buckets=(16,), block_size=16, num_blocks=3)
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="block pool"):
+        eng.step()
+
+
+def test_blocked_gates():
+    cfg = _cfg()
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="multiple"):
+        ServingEngine(params, cfg, capacity=60, block_size=16)
+    with pytest.raises(ValueError, match="neither"):
+        ServingEngine(params, cfg, capacity=64, block_size=16,
+                      ticks_per_dispatch=4)
+    swa = _cfg(sliding_window=32)
+    with pytest.raises(NotImplementedError, match="full attention"):
+        ServingEngine(_params(swa), swa, capacity=64, block_size=16)
+    rec = dataclasses.replace(reduced(ARCHS["rwkv6-7b"]), kernels=XLA)
+    with pytest.raises(NotImplementedError, match="family"):
+        ServingEngine(_params(rec), rec, capacity=64, block_size=16)
+
+
+# ---------------------------------------------------------- kernel level ----
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_table_kernel_parity(quant):
+    """decode_attention with a block table: Pallas (interpret) scalar-
+    prefetch indirection == xla pool-gather reference, fp32 and int8."""
+    rng = np.random.default_rng(0)
+    b, n_k, bs, hkv, g, hd = 3, 4, 8, 2, 2, 32
+    nb = 1 + b * n_k                       # trash + one block per table slot
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, hd)), jnp.float32)
+    pos = jnp.asarray([5, 17, 31], jnp.int32)
+    kw = {}
+    if quant:
+        k = jnp.asarray(rng.integers(-127, 127, (nb, bs, hkv, hd)), jnp.int8)
+        v = jnp.asarray(rng.integers(-127, 127, (nb, bs, hkv, hd)), jnp.int8)
+        kw["k_scale"] = jnp.asarray(
+            rng.uniform(0.01, 0.1, (nb, bs, hkv)), jnp.float32)
+        kw["v_scale"] = jnp.asarray(
+            rng.uniform(0.01, 0.1, (nb, bs, hkv)), jnp.float32)
+    else:
+        k = jnp.asarray(rng.standard_normal((nb, bs, hkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((nb, bs, hkv, hd)), jnp.float32)
+    # distinct blocks per row, deliberately scrambled order
+    table = jnp.asarray(rng.permutation(np.arange(1, 1 + b * n_k))
+                        .reshape(b, n_k), jnp.int32)
+    ref = decode_attention(q, k, v, pos, impl="xla", scale=hd ** -0.5,
+                           table=table, **kw)
+    got = decode_attention_pallas(q, k, v, pos, scale=hd ** -0.5,
+                                  table=table, interpret=True, **kw)
+    np.testing.assert_allclose(got, ref, atol=2e-4, rtol=2e-4)
+    # windowed reads through the table too
+    refw = decode_attention(q, k, v, pos, impl="xla", scale=hd ** -0.5,
+                            window=16, table=table, **kw)
+    gotw = decode_attention_pallas(q, k, v, pos, scale=hd ** -0.5,
+                                   window=16, table=table, interpret=True,
+                                   **kw)
+    np.testing.assert_allclose(gotw, refw, atol=2e-4, rtol=2e-4)

@@ -1,0 +1,133 @@
+"""Multi-tick decode dispatches: K device-resident ticks per host sync
+must change WHEN the host sees tokens, never WHAT is generated.  Streams
+are diffed across K; the single device->host transfer per dispatch is
+counted through the ``engine._to_host`` hook; the dispatch jaxpr is
+checked to actually contain a length-K scan (not K unrolled syncs)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.serving import Request, ServingEngine
+from repro.serving import engine as engine_mod
+
+XLA = KernelPolicy(backend="xla")
+
+
+def _cfg(arch="olmo-1b", **over):
+    return dataclasses.replace(reduced(ARCHS[arch]), kernels=XLA, **over)
+
+
+def _params(cfg):
+    return models.init(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    lengths = [5, 9, 13, 7, 11, 3]
+    budgets = [6, 3, 8, 5, 2, 7]
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=ln),
+                    max_new_tokens=m)
+            for ln, m in zip(lengths, budgets)]
+
+
+def _streams(results):
+    return {r.rid: tuple(r.tokens) for r in results}
+
+
+def test_stream_identity_across_ticks():
+    """K in {1, 4, 8}: identical tokens per request, fewer dispatches."""
+    cfg = _cfg()
+    params = _params(cfg)
+    base = None
+    for k in (1, 4, 8):
+        eng = ServingEngine(params, cfg, slots=2, capacity=64,
+                            buckets=(16,), ticks_per_dispatch=k)
+        got = _streams(eng.run(_reqs(cfg)))
+        assert eng.decode_steps == eng.dispatches * k
+        if base is None:
+            base, base_dispatches = got, eng.dispatches
+        else:
+            assert got == base, f"K={k} changed the generated tokens"
+            assert eng.dispatches < base_dispatches
+    assert len(base) == 6
+
+
+def test_temperature_streams_identical_across_ticks():
+    """Positional fold_in sampling: the same (request, position) draws
+    the same token whether ticks are batched 1, 4 or 8 at a time."""
+    cfg = _cfg()
+    params = _params(cfg)
+    outs = []
+    for k in (1, 4, 8):
+        eng = ServingEngine(params, cfg, slots=2, capacity=64,
+                            buckets=(16,), temperature=0.9, top_k=8,
+                            seed=3, ticks_per_dispatch=k)
+        outs.append(_streams(eng.run(_reqs(cfg))))
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_eos_retires_within_dispatch():
+    """A row whose eos lands mid-block stops exactly where K=1 stops —
+    retirement latency is bounded by the dispatch, not visible in the
+    stream."""
+    cfg = _cfg()
+    params = _params(cfg)
+    probe = ServingEngine(params, cfg, slots=1, capacity=64, buckets=(16,))
+    [res] = probe.run([Request(prompt=[3, 1, 4, 1, 5], max_new_tokens=10)])
+    assert len(res.tokens) == 10
+    eos = res.tokens[4]                   # cut the stream mid-way
+    for k in (1, 4, 8):
+        eng = ServingEngine(params, cfg, slots=1, capacity=64, buckets=(16,),
+                            eos_id=eos, ticks_per_dispatch=k)
+        [r] = eng.run([Request(prompt=[3, 1, 4, 1, 5], max_new_tokens=10)])
+        assert r.tokens == res.tokens[:res.tokens.index(eos) + 1]
+
+
+def test_one_host_transfer_per_dispatch(monkeypatch):
+    """The decode loop syncs device->host EXACTLY once per dispatch, on
+    the one packed (2, slots, K) array."""
+    cfg = _cfg()
+    params = _params(cfg)
+    calls = []
+    real = engine_mod._to_host
+    monkeypatch.setattr(engine_mod, "_to_host",
+                        lambda x: (calls.append(np.shape(x)), real(x))[1])
+    eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        ticks_per_dispatch=4)
+    eng.run(_reqs(cfg))
+    assert len(calls) == eng.dispatches
+    assert all(s == (2, 2, 4) for s in calls)     # (2, slots, K) packed
+
+
+def _find_scans(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            out.append(eqn.params["length"])
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                _find_scans(v.jaxpr, out)
+    return out
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_dispatch_is_one_fused_scan(k):
+    """The compiled dispatch contains a single top-level length-K scan —
+    the K ticks are device-resident, not K host-driven steps."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        ticks_per_dispatch=k)
+    jaxpr = jax.make_jaxpr(eng._decode)(params, eng.state, eng.last_tok,
+                                        eng.slot_keys)
+    assert k in _find_scans(jaxpr.jaxpr, [])
+
+
+def test_bad_ticks_rejected():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="ticks_per_dispatch"):
+        ServingEngine(_params(cfg), cfg, ticks_per_dispatch=0)

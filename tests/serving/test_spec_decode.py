@@ -1,0 +1,230 @@
+"""Speculative decoding correctness: greedy spec output must be token-
+identical to the plain engine whatever the draft proposes — acceptance
+only changes how many dispatches it takes.  Covers dense and hybrid
+targets, an adversarial (random) draft that rejects nearly everything, a
+self-draft that accepts everything, the γ=0 degenerate tick, draft/
+target cache consistency after rejections, the decode_seq primitive the
+whole thing is built on, and the 2-device mesh path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_child
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.serving import Request, ServingEngine
+
+XLA = KernelPolicy(backend="xla")
+
+
+def _cfg(arch="olmo-1b", **over):
+    cfg = dataclasses.replace(reduced(ARCHS[arch]), kernels=XLA, **over)
+    if arch == "recurrentgemma-9b":
+        cfg = dataclasses.replace(cfg, n_layers=3)   # attn + both rec kinds
+    return cfg
+
+
+def _reqs(cfg, seed=0, n=5, budget=8):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=ln),
+                    max_new_tokens=budget)
+            for ln in [5, 9, 3, 7, 11][:n]]
+
+
+def _streams(results):
+    return {r.rid: tuple(r.tokens) for r in results}
+
+
+# ----------------------------------------------------- decode_seq unit ----
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "recurrentgemma-9b"])
+def test_decode_seq_matches_sequential(arch):
+    """decode_seq's logits == T sequential decode_step calls; commit_len
+    = 0 leaves every state leaf bit-identical (the verify contract);
+    commit_len = a advances exactly a tokens (the commit contract)."""
+    cfg = _cfg(arch)
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, size=(2, 6))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 4)),
+                       jnp.int32)
+    _, st = models.prefill(params, cfg, jnp.asarray(prompt), 32)
+
+    seq_logits = []
+    ref = st
+    for j in range(4):
+        lg, ref = models.decode_step(params, cfg, ref, toks[:, j:j + 1])
+        seq_logits.append(lg[:, 0])
+    seq_logits = jnp.stack(seq_logits, 1)
+
+    # verify: commit nothing — logits equal, state untouched
+    lg0, st0 = models.decode_seq(params, cfg, st, toks, 0)
+    np.testing.assert_allclose(lg0, seq_logits, atol=2e-4, rtol=2e-4)
+    jax.tree.map(np.testing.assert_array_equal, st.cache, st0.cache)
+    np.testing.assert_array_equal(st.pos, st0.pos)
+
+    # commit: per-row lengths — pos advances by exactly commit_len
+    _, st2 = models.decode_seq(params, cfg, st, toks,
+                               jnp.asarray([3, 1], jnp.int32))
+    np.testing.assert_array_equal(st2.pos, st.pos + jnp.asarray([3, 1]))
+    # committed prefix must continue exactly like the sequential state
+    ref2 = st
+    for j in range(3):
+        _, ref2 = models.decode_step(params, cfg, ref2, toks[:, j:j + 1])
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 1)), jnp.int32)
+    lg_a, _ = models.decode_step(
+        params, cfg,
+        models.DecodeState(cache=st2.cache, pos=st2.pos), nxt)
+    # row 0 committed 3 of the same tokens the sequential ref consumed
+    lg_b, _ = models.decode_step(params, cfg, ref2, nxt)
+    np.testing.assert_allclose(lg_a[0], lg_b[0], atol=2e-4, rtol=2e-4)
+
+
+def test_decode_seq_rejects_encdec():
+    cfg = _cfg("seamless-m4t-medium")
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    st = models.init_decode_state(cfg, 1, 16)
+    with pytest.raises(NotImplementedError, match="encdec"):
+        models.decode_seq(params, cfg, st, jnp.zeros((1, 2), jnp.int32), 0)
+
+
+# ------------------------------------------------------- engine parity ----
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "recurrentgemma-9b"])
+def test_spec_greedy_identity(arch):
+    """Adversarial draft (random weights, rejects nearly all) and
+    self-draft (accepts all): both produce the plain engine's streams."""
+    cfg = _cfg(arch)
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    dparams = models.init(jax.random.PRNGKey(9), cfg)
+    base = _streams(ServingEngine(params, cfg, slots=2, capacity=64,
+                                  buckets=(16,)).run(_reqs(cfg)))
+
+    adv = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        draft_params=dparams, draft_cfg=cfg, spec_tokens=2)
+    assert _streams(adv.run(_reqs(cfg))) == base
+    assert adv.spec_accepted <= adv.spec_proposed
+
+    own = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        draft_params=params, draft_cfg=cfg, spec_tokens=3)
+    assert _streams(own.run(_reqs(cfg))) == base
+    # the draft IS the target: every proposal must be accepted, and the
+    # engine must finish in fewer dispatches than token-at-a-time decode
+    assert own.spec_proposed > 0
+    assert own.spec_accepted == own.spec_proposed
+    assert own.dispatches < adv.dispatches
+
+
+def test_gamma_zero_degenerates_to_plain_tick():
+    cfg = _cfg()
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    dparams = models.init(jax.random.PRNGKey(9), cfg)
+    plain = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,))
+    base = _streams(plain.run(_reqs(cfg)))
+    eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        draft_params=dparams, draft_cfg=cfg, spec_tokens=0)
+    assert _streams(eng.run(_reqs(cfg))) == base
+    assert eng.spec_proposed == 0 and eng.spec_accepted == 0
+    assert eng.dispatches == plain.dispatches
+
+
+def test_per_request_acceptance_accounting():
+    cfg = _cfg()
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                        draft_params=params, draft_cfg=cfg, spec_tokens=3)
+    results = eng.run(_reqs(cfg, n=4))
+    for r in results:
+        assert r.draft_proposed > 0
+        assert r.draft_accepted == r.draft_proposed   # self-draft
+        assert r.acceptance == 1.0
+    assert sum(r.draft_proposed for r in results) == eng.spec_proposed
+
+
+def test_draft_state_consistent_after_rejections():
+    """After dispatches full of rejections, the draft's cache equals a
+    sequential draft decode of the ACCEPTED stream — rejected proposals
+    left no trace (the rollback-free commit property)."""
+    cfg = _cfg()
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    dparams = models.init(jax.random.PRNGKey(9), cfg)
+    prompt = [3, 1, 4, 1, 5]
+    eng = ServingEngine(params, cfg, slots=1, capacity=64, buckets=(16,),
+                        draft_params=dparams, draft_cfg=cfg, spec_tokens=2)
+    eng.submit(Request(prompt=prompt, max_new_tokens=16))
+    for _ in range(3):
+        eng.step()
+    [req] = [r for r in eng._active if r is not None]
+    emitted = eng._results[req.rid].tokens
+    assert eng.spec_accepted < eng.spec_proposed      # rejections happened
+
+    # both models consumed prompt + emitted[:-1]
+    _, ref = models.prefill(params, cfg, jnp.asarray(prompt)[None], 64)
+    _, dref = models.prefill(dparams, cfg, jnp.asarray(prompt)[None], 64)
+    for t in emitted[:-1]:
+        _, ref = models.decode_step(params, cfg, ref,
+                                    jnp.asarray([[t]], jnp.int32))
+        _, dref = models.decode_step(dparams, cfg, dref,
+                                     jnp.asarray([[t]], jnp.int32))
+    for eng_state, ref_state in ((eng.state, ref),
+                                 (eng.draft_state, dref)):
+        np.testing.assert_array_equal(eng_state.pos, ref_state.pos)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(a, b, atol=2e-4),
+            eng_state.cache, ref_state.cache)
+
+
+def test_spec_gates():
+    cfg = _cfg()
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="greedy"):
+        ServingEngine(params, cfg, temperature=0.5, draft_params=params,
+                      draft_cfg=cfg)
+    with pytest.raises(ValueError, match="ticks"):
+        ServingEngine(params, cfg, ticks_per_dispatch=2,
+                      draft_params=params, draft_cfg=cfg)
+    with pytest.raises(ValueError, match="BOTH"):
+        ServingEngine(params, cfg, draft_params=params)
+    ecfg = _cfg("seamless-m4t-medium")
+    with pytest.raises(NotImplementedError):
+        ServingEngine(models.init(jax.random.PRNGKey(0), ecfg), ecfg,
+                      draft_params=params, draft_cfg=cfg)
+    small = dataclasses.replace(cfg, vocab_size=cfg.vocab_size // 2)
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(params, cfg, draft_params=params, draft_cfg=small)
+
+
+def test_spec_two_device_identity():
+    """Greedy spec on a 2-device replica mesh == single-device plain."""
+    run_child("""
+import dataclasses, numpy as np, jax
+from repro import models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.launch.mesh import make_replica_mesh
+from repro.serving import Request, ServingEngine
+
+cfg = dataclasses.replace(reduced(ARCHS["olmo-1b"]),
+                          kernels=KernelPolicy(backend="xla"))
+params = models.init(jax.random.PRNGKey(0), cfg)
+dparams = models.init(jax.random.PRNGKey(9), cfg)
+rng = np.random.default_rng(0)
+mk = lambda: [Request(prompt=rng2, max_new_tokens=6)
+              for rng2 in [rng.integers(0, cfg.vocab_size, size=ln)
+                           for ln in (5, 9, 3, 7)]]
+reqs = mk()
+plain = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,))
+base = {r.rid: tuple(r.tokens) for r in plain.run(list(reqs))}
+rng = np.random.default_rng(0)
+mesh = make_replica_mesh(jax.device_count())
+eng = ServingEngine(params, cfg, slots=2, capacity=64, buckets=(16,),
+                    mesh=mesh, draft_params=dparams, draft_cfg=cfg,
+                    spec_tokens=2)
+got = {r.rid: tuple(r.tokens) for r in eng.run(mk())}
+assert got == base, (got, base)
+print("mesh spec OK", eng.spec_proposed, eng.spec_accepted)
+""", devices=2)
