@@ -8,10 +8,13 @@ Rows are matched by name; each one reports the us_per_call ratio
 new/old.  Rows slower by more than ``--threshold`` (default 10%) are
 flagged as regressions and the exit code is 1 — the same contract the
 bench suites themselves use, applied across PRs instead of within one
-run.  Added/removed rows are listed but never fail the diff (suites
-grow every PR; absolute times on shared CI hosts drift, which is why
-the threshold is generous and the flag is advisory — a flagged row
-means "explain or re-measure", not "revert").
+run.  Rows present in only ONE file are reported individually AND in
+the summary: added rows are informational (suites grow every PR), and
+removed rows fail the diff under ``--fail-removed`` — a retired row is
+a retired CLAIM, so CI gates force the removal to be deliberate.
+Otherwise the flags are advisory (absolute times on shared CI hosts
+drift, which is why the threshold is generous) — a flagged row means
+"explain or re-measure", not "revert".
 
 ``.partial.json`` files (fast/--only runs) are skipped when globbing:
 they are subsets measured under different iteration counts, so ratios
@@ -31,7 +34,14 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 def load_rows(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
-    return {r["name"]: r for r in payload.get("rows", [])}
+    rows = payload.get("rows", [])
+    by = {}
+    for r in rows:
+        if r["name"] in by:
+            print(f"# WARNING: {os.path.basename(path)} has duplicate row "
+                  f"{r['name']!r} — keeping the last", file=sys.stderr)
+        by[r["name"]] = r
+    return by
 
 
 def newest_pair() -> tuple:
@@ -49,6 +59,10 @@ def main() -> None:
                     help="OLD.json NEW.json (default: two newest)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="flag rows slower by more than this fraction")
+    ap.add_argument("--fail-removed", action="store_true",
+                    help="exit 1 when a row present in OLD is missing "
+                    "from NEW (a retired suite must be retired on "
+                    "purpose, not lost)")
     ap.add_argument("--only", default=None, metavar="PREFIX[,PREFIX...]",
                     help="restrict the diff to rows whose name starts "
                     "with one of the given prefixes (e.g. "
@@ -77,18 +91,30 @@ def main() -> None:
             mark = "  <-- REGRESSION"
             regressions.append((name, ratio))
         print(f"{name:44s} {o:12.1f} {n:12.1f} {ratio:6.2f}x{mark}")
-    for name in sorted(new.keys() - old.keys()):
+    added = sorted(new.keys() - old.keys())
+    removed = sorted(old.keys() - new.keys())
+    for name in added:
         print(f"{name:44s} {'-':>12s} {new[name]['us_per_call']:12.1f}   new")
-    for name in sorted(old.keys() - new.keys()):
+    for name in removed:
         print(f"{name:44s} {old[name]['us_per_call']:12.1f} {'-':>12s}   removed")
+    print(f"\n# {len(old.keys() & new.keys())} common, {len(added)} added, "
+          f"{len(removed)} removed")
 
+    failed = False
     if regressions:
-        print(f"\n{len(regressions)} row(s) regressed more than "
+        print(f"{len(regressions)} row(s) regressed more than "
               f"{args.threshold:.0%}:")
         for name, ratio in sorted(regressions, key=lambda r: -r[1]):
             print(f"  {name}  {ratio:.2f}x")
+        failed = True
+    if removed and args.fail_removed:
+        print(f"{len(removed)} row(s) removed (--fail-removed):")
+        for name in removed:
+            print(f"  {name}")
+        failed = True
+    if failed:
         sys.exit(1)
-    print(f"\nno regressions above {args.threshold:.0%}")
+    print(f"no regressions above {args.threshold:.0%}")
 
 
 if __name__ == "__main__":

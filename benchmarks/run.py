@@ -15,6 +15,9 @@ future PRs have a trajectory baseline.  Mapping to the paper:
   session_throughput  Table 1 through the session layer (train_loop JSONL)
   serving_latency     continuous-batching engine vs the static decode loop
                       (tok/s, p50/p99 request latency, slots curve)
+  serving_tier        multi-process tier: aggregate tok/s at 1 vs 2 engine
+                      instances, decode-tick p99 colocated vs
+                      disaggregated prefill (real worker processes)
 """
 from __future__ import annotations
 
@@ -25,8 +28,8 @@ import traceback
 
 from benchmarks import (common, exchange_strategies, kernel_backends,
                         loading_overlap, local_sgd_ablation, numerics_bench,
-                        parity_training, serving_latency, session_throughput,
-                        table1_throughput)
+                        parity_training, serving_latency, serving_tier,
+                        session_throughput, table1_throughput)
 
 SUITES = {
     "table1_throughput": table1_throughput.main,
@@ -37,6 +40,7 @@ SUITES = {
     "local_sgd_ablation": local_sgd_ablation.main,
     "session_throughput": session_throughput.main,
     "serving_latency": serving_latency.main,
+    "serving_tier": serving_tier.main,
     "numerics_bench": numerics_bench.main,
 }
 

@@ -26,10 +26,13 @@ PR-9 rows ride on top:
                     loop — the host-sync amortization the multi-tick
                     scan buys, isolated from admission noise.
   spec_*            end-to-end speculative decoding vs the target-only
-                    engine on the same request set: the self-draft pair
-                    (acceptance 1.0 — the dispatch-amortization ceiling)
-                    and an adversarial random-weight draft (acceptance
-                    ~chance — the rejection-cost floor).
+                    engine on the same request set: the truncated-layer
+                    draft (the target's own first layer; tail-damped
+                    target weights stand in for the draft/target
+                    agreement a distilled draft would have — measured
+                    >1x, see docs/serving.md break-even) and an
+                    adversarial random-weight draft (acceptance ~chance
+                    — the rejection-cost floor).
   blocks_peak_*     shared-prefix block pool: peak blocks in use for a
                     same-prompt burst with dedup on, vs the dedup-off
                     control (the row VALUE is the shared peak, so
@@ -261,15 +264,64 @@ def main():
 
     _, plain_tps = _spec_run()
     dadv = models.init(jax.random.PRNGKey(9), tcfg)
-    for row, dparams, gamma in (("spec_self_draft", tparams, 3),
-                                ("spec_adversarial_draft", dadv, 2)):
-        eng, tps = _spec_run(draft_params=dparams, draft_cfg=tcfg,
-                             spec_tokens=gamma)
-        emit(f"serving/{row}", 1e6 / tps,
-             f"tok/s={tps:.1f};speedup={tps / plain_tps:.2f}x;"
-             f"acceptance={eng.spec_accepted / eng.spec_proposed:.2f}",
-             slots=4, draft_arch=tcfg.name, target_arch=tcfg.name,
-             spec_tokens=gamma, **tmeta)
+    eng, tps = _spec_run(draft_params=dadv, draft_cfg=tcfg, spec_tokens=2)
+    emit("serving/spec_adversarial_draft", 1e6 / tps,
+         f"tok/s={tps:.1f};speedup={tps / plain_tps:.2f}x;"
+         f"acceptance={eng.spec_accepted / eng.spec_proposed:.2f}",
+         slots=4, draft_arch=tcfg.name, target_arch=tcfg.name,
+         spec_tokens=2, **tmeta)
+
+    # truncated-layer draft: the >1x configuration (docs/serving.md
+    # break-even).  The draft is the target's OWN first layer (1/8 of
+    # its per-tick cost); the target's later layers are damped toward
+    # identity so draft and target argmax agree — random init has no
+    # trained agreement, and damping stands in for the distillation a
+    # real deployment buys.  What the row measures is the ENGINE
+    # mechanics at that acceptance: one fused dispatch per ~(1+gamma*acc)
+    # tokens vs one per token.
+    from repro.serving.spec_decode import truncated_draft
+    scfg = dataclasses.replace(
+        reduced(ARCHS[ARCH], n_layers=8, d_model=128),
+        vocab_size=256, kernels=KernelPolicy(attention="xla"))
+    sparams = models.init(jax.random.PRNGKey(0), scfg)
+    sparams = {**sparams, "blocks": tuple(
+        jax.tree.map(lambda x: x.at[1:].multiply(0.05)
+                     if (x.ndim >= 1 and x.shape[0] == 8) else x, bp)
+        for bp in sparams["blocks"])}
+    gamma = 8
+
+    def _trunc_reqs():
+        # steady decode is what spec accelerates: long generations, so
+        # per-round savings dominate the prefill/compile share
+        r = np.random.default_rng(7)
+        return [Request(prompt=r.integers(0, scfg.vocab_size, size=PROMPT),
+                        max_new_tokens=24 if fast else 48)
+                for _ in range(8)]
+
+    def _trunc_run(**kw):
+        best, eng = 0.0, None
+        for _ in range(2 if fast else 3):
+            eng = ServingEngine(sparams, scfg, slots=4, capacity=CAPACITY,
+                                buckets=(PROMPT,), **kw)
+            t0 = time.perf_counter()
+            toks = sum(len(r.tokens) for r in eng.run(_trunc_reqs()))
+            best = max(best, toks / (time.perf_counter() - t0))
+        return eng, best
+
+    _, strunc_base = _trunc_run()
+    dcfg, dparams = truncated_draft(scfg, sparams, 1)
+    eng, tps = _trunc_run(draft_params=dparams, draft_cfg=dcfg,
+                          spec_tokens=gamma)
+    speedup = tps / strunc_base
+    emit("serving/spec_truncated_draft", 1e6 / tps,
+         f"tok/s={tps:.1f};speedup={speedup:.2f}x;"
+         f"acceptance={eng.spec_accepted / eng.spec_proposed:.2f}",
+         slots=4, draft_arch=dcfg.name, target_arch=scfg.name,
+         spec_tokens=gamma, draft_layers=1, target_layers=8,
+         agreement="tail-damped-0.05", **tmeta)
+    if speedup <= 1.0:
+        print(f"# WARNING: truncated-draft spec only {speedup:.2f}x",
+              flush=True)
 
     # ---- shared-prefix block capacity --------------------------------
     burst_prompt = list(range(1, 40))           # 2 full 16-blocks + tail

@@ -1,0 +1,143 @@
+"""Multi-process serving-tier benchmark (docs/serving.md).
+
+Two claims, measured through REAL worker processes (`python -m
+repro.launch.serve --role engine/prefill`) behind the Router:
+
+  aggregate_tps/procsN   bursty open-loop workload (every request
+                         submitted up front) over N independent engine
+                         instances.  Aggregate useful tok/s — the tier's
+                         whole point is that this scales with N.  The
+                         speedup is core-bound: on a 1-core box two
+                         CPU-bound engines timeshare and the ratio is
+                         ~1.0, so rows carry ``cores`` metadata and the
+                         >=1.5x acceptance is asserted by CI on
+                         multi-core runners, not here.
+  p99_colocated /        decode-tick p99 with long prompts arriving
+  p99_disagg             mid-stream.  Colocated: admission prefill runs
+                         inside the instance's step loop, so every long
+                         prompt is a full stall in the tick tail.
+                         Disaggregated: a prefill worker absorbs the
+                         prompt and the decode instance only ever
+                         injects ready snapshots, so its tail stays
+                         flat.  Row value is the p99 step time (us);
+                         disagg must be LOWER.
+
+Workers are spawned with the same smoke-sized model flags; each arm
+warms the tier (compiles live in each worker process) before timing.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serving import Request, Router
+from repro.serving.tier import spawn_worker
+
+ARGV = ["--arch", "olmo-1b", "--smoke", "--layers", "2", "--d-model", "128",
+        "--capacity", "64", "--seed", "0"]
+
+
+def _spawn_tier(n, *, slots, disagg=False):
+    argv = ARGV + ["--slots", str(slots)]
+    insts = [spawn_worker("engine", argv, name=f"eng{i}") for i in range(n)]
+    pw = spawn_worker("prefill", argv, name="prefill") if disagg else None
+    for h in insts + ([pw] if pw else []):
+        h.connect()
+    return insts, pw
+
+
+def _reqs(n, *, new, ln=8, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, 512, size=ln),
+                    max_new_tokens=new) for _ in range(n)]
+
+
+def _shutdown(insts, pw):
+    for h in insts + ([pw] if pw else []):
+        h.shutdown()
+
+
+# ------------------------------------------------------ aggregate tok/s ----
+
+def _aggregate_tps(procs, *, n_req, new):
+    insts, _ = _spawn_tier(procs, slots=4)
+    try:
+        tps, stats = 0.0, None
+        for round_ in range(2):                   # round 0 warms compiles
+            r = Router(insts)
+            t0 = time.perf_counter()
+            for q in _reqs(n_req, new=new):       # the open-loop burst
+                r.submit(q)
+            res = r.run_until_done(timeout=300)
+            dt = time.perf_counter() - t0
+            tps = sum(len(x["tokens"]) for x in res) / dt
+            stats = r.stats()
+        return tps, stats
+    finally:
+        _shutdown(insts, None)
+
+
+# ------------------------------------------------- disagg p99 comparison ----
+
+def _p99_arm(disagg, *, steady_new, n_long):
+    """4 steady decode streams on a 6-slot instance; long prompts land
+    mid-stream.  Returns the decode instance's p99 step time (seconds)."""
+    insts, pw = _spawn_tier(1, slots=6, disagg=disagg)
+    try:
+        p99 = 0.0
+        for round_ in range(2):                   # round 0 warms compiles
+            r = Router(insts, prefill=pw)
+            for q in _reqs(4, new=steady_new, seed=6):
+                r.submit(q)
+            time.sleep(0.3)                       # streams reach steady state
+            for i in range(n_long):
+                r.submit(_reqs(1, new=4, ln=48, seed=20 + i)[0])
+                time.sleep(0.08)                  # arrivals spread over ticks
+            r.run_until_done(timeout=300)
+            r.stats()                             # flush remaining samples
+            times = r.step_times[insts[0].name]
+            if not times:
+                raise RuntimeError("no step-time samples from instance")
+            p99 = float(np.percentile(times, 99))
+        return p99
+    finally:
+        _shutdown(insts, pw)
+
+
+def main():
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    n_req, new = (12, 16) if fast else (16, 32)
+    cores = os.cpu_count() or 1
+    meta = dict(arch="olmo-1b-smoke", slots=4, cores=cores, backend="xla")
+
+    tps1, _ = _aggregate_tps(1, n_req=n_req, new=new)
+    tps2, st2 = _aggregate_tps(2, n_req=n_req, new=new)
+    scale = tps2 / tps1
+    emit("serving_tier/aggregate_tps/procs1", 1e6 / tps1,
+         f"tok/s={tps1:.1f}", procs=1, **meta)
+    emit("serving_tier/aggregate_tps/procs2", 1e6 / tps2,
+         f"tok/s={tps2:.1f};speedup_vs_procs1={scale:.2f}x;"
+         f"deferred={st2['deferred']}", procs=2, **meta)
+    if scale < 1.5 and cores >= 2:
+        print(f"# WARNING: 2-process aggregate only {scale:.2f}x on "
+              f"{cores} cores", flush=True)
+
+    steady_new, n_long = (32, 4) if fast else (56, 6)
+    p99_co = _p99_arm(False, steady_new=steady_new, n_long=n_long)
+    p99_dis = _p99_arm(True, steady_new=steady_new, n_long=n_long)
+    pmeta = dict(arch="olmo-1b-smoke", slots=6, cores=cores, backend="xla")
+    emit("serving_tier/p99_colocated", p99_co * 1e6,
+         f"p99_step_ms={p99_co * 1e3:.2f}", **pmeta)
+    emit("serving_tier/p99_disagg", p99_dis * 1e6,
+         f"p99_step_ms={p99_dis * 1e3:.2f};"
+         f"vs_colocated={p99_dis / p99_co:.2f}x", **pmeta)
+    if p99_dis >= p99_co:
+        print(f"# WARNING: disagg p99 {p99_dis * 1e3:.2f}ms >= colocated "
+              f"{p99_co * 1e3:.2f}ms", flush=True)
+
+
+if __name__ == "__main__":
+    main()

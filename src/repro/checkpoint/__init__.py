@@ -1,2 +1,3 @@
-from repro.checkpoint.checkpoint import (latest_step, load_meta, restore,
-                                         save, step_dir)
+from repro.checkpoint.checkpoint import (latest_step, load_meta, pack_tree,
+                                         peek_meta, restore, save, step_dir,
+                                         unpack_tree)

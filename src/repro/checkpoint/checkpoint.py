@@ -107,6 +107,56 @@ def restore(directory: str, step: int, like: Any, *,
                                         [restored[k] for k in keys])
 
 
+def pack_tree(tree: Any, meta: dict = None) -> bytes:
+    """Serialize a pytree (+ optional JSON ``meta``) into one in-memory
+    buffer — the wire form of ``save``: same raw-uint8 leaf container,
+    same manifest layout, no filesystem.  The serving tier ships live
+    ``DecodeState`` slot slices between processes with this
+    (serving/tier.py drain/handoff, router→decode prefill handoff);
+    ``unpack_tree`` round-trips any jax dtype exactly, bf16 included."""
+    import io
+    flat = _flatten(tree)
+    manifest, buffers = {}, {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        manifest[key] = {"dtype": str(leaf.dtype), "shape": list(arr.shape)}
+        buffers[key] = np.frombuffer(arr.tobytes(), np.uint8)
+    mjson = json.dumps({"arrays": manifest, "meta": meta}).encode()
+    bio = io.BytesIO()
+    bio.write(len(mjson).to_bytes(8, "little"))
+    bio.write(mjson)
+    np.savez(bio, **buffers)
+    return bio.getvalue()
+
+
+def peek_meta(buf: bytes) -> dict | None:
+    """The ``meta`` dict of a ``pack_tree`` buffer WITHOUT the arrays —
+    no ``like`` structure needed, nothing decoded but the JSON header
+    (the router reads request bookkeeping off in-flight snapshots whose
+    model structure only the engine processes know)."""
+    n = int.from_bytes(buf[:8], "little")
+    return json.loads(buf[8:8 + n].decode()).get("meta")
+
+
+def unpack_tree(buf: bytes, like: Any) -> tuple[Any, dict | None]:
+    """Inverse of ``pack_tree``: (tree shaped like ``like``, meta)."""
+    import io
+    n = int.from_bytes(buf[:8], "little")
+    manifest = json.loads(buf[8:8 + n].decode())
+    data = np.load(io.BytesIO(buf[8 + n:]))
+    restored = {}
+    for key in _flatten(like):
+        meta = manifest["arrays"][key]
+        arr = np.frombuffer(data[key].tobytes(),
+                            dtype=jnp.dtype(meta["dtype"]))
+        restored[key] = jnp.asarray(arr.reshape(meta["shape"]))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    tree = jax.tree_util.tree_unflatten(treedef,
+                                        [restored[k] for k in keys])
+    return tree, manifest.get("meta")
+
+
 def load_meta(directory: str, step: int) -> dict | None:
     """The ``meta`` dict stored with ``save`` (None when absent)."""
     with open(os.path.join(step_dir(directory, step), "manifest.json")) as f:

@@ -207,11 +207,41 @@ def decode_seq(params, cfg, state: DecodeState, tokens, commit_len):
             "decode_seq (speculative decoding) is not implemented for the "
             "encdec family: cross-attention caches are per-utterance and "
             "the serving tier drafts text-only models")
-    b, t = tokens.shape
+    logits, pending = decode_seq_pending(params, cfg, state, tokens)
+    return logits, commit_pending(params, cfg, state, pending, commit_len)
+
+
+def decode_seq_pending(params, cfg, state: DecodeState, tokens):
+    """The commit_len-independent half of ``decode_seq``: run the full
+    T-token forward WITHOUT touching the state.  Returns (logits
+    (B,T,V) f32, pending).  Feed ``pending`` to ``commit_pending`` to
+    advance the state by any per-row prefix afterwards.
+
+    This is what folds speculative decoding's verify+commit pair into
+    ONE target forward per round: ``decode_seq_pending`` gives the
+    verify logits, the accept count is derived from them, and
+    ``commit_pending`` applies the accepted prefix as a masked scatter
+    (attention) / masked carry re-run (recurrent kinds) — never a
+    second forward (serving/spec_decode.py)."""
+    _check_decode_family(cfg)
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "decode_seq (speculative decoding) is not implemented for the "
+            "encdec family: cross-attention caches are per-utterance and "
+            "the serving tier drafts text-only models")
+    return transformer.decode_seq_pending(params, cfg, state.cache, tokens,
+                                          state.pos)
+
+
+def commit_pending(params, cfg, state: DecodeState, pending,
+                   commit_len) -> DecodeState:
+    """Commit each row's first ``commit_len[b]`` tokens of a
+    ``decode_seq_pending`` chunk; returns the advanced DecodeState."""
+    b = state.pos.shape[0]
     cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
-    logits, cache = transformer.decode_seq(params, cfg, state.cache, tokens,
-                                           state.pos, cl)
-    return logits, DecodeState(cache=cache, pos=state.pos + cl)
+    cache = transformer.decode_seq_commit(params, cfg, state.cache, pending,
+                                          state.pos, cl)
+    return DecodeState(cache=cache, pos=state.pos + cl)
 
 
 # slot surgery: the continuous-batching engine swaps one request's state
@@ -252,6 +282,22 @@ def write_slots(state: DecodeState, sub: DecodeState, slots) -> DecodeState:
     return DecodeState(cache=cache, pos=state.pos.at[slots].set(sub.pos))
 
 
+def read_slots(state: DecodeState, slots) -> DecodeState:
+    """Gather rows ``slots`` of ``state`` into a sub-state (batch =
+    len(slots)) — the exact inverse of ``write_slots``: round-tripping a
+    sub-state through read/write is the identity, which is what makes
+    drain/handoff snapshots (serving/tier.py) byte-faithful."""
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def one(path, leaf):
+        if _leaf_batch_axis(path) == 1:
+            return leaf[:, slots]
+        return leaf[slots]
+
+    cache = jax.tree_util.tree_map_with_path(one, state.cache)
+    return DecodeState(cache=cache, pos=state.pos[slots])
+
+
 def model_inputs(cfg, batch: int, seq_len: int):
     """Shape/dtype description of the training/prefill batch.  For the
     conv family ``seq_len`` is ignored — the batch is images + labels."""
@@ -276,5 +322,6 @@ __all__ = ["alexnet", "encdec", "transformer", "vision", "init", "logits_fn",
            "loss_fn",
            "DecodeState", "DECODE_FAMILIES", "init_decode_cache",
            "init_decode_state", "prefill", "decode_step", "decode_seq",
-           "write_slots",
+           "decode_seq_pending", "commit_pending",
+           "write_slots", "read_slots",
            "stacked_cache_path", "model_inputs"]

@@ -371,13 +371,28 @@ def decode_attention_seq(params, cfg, x, cache, pos, commit_len, *,
     for each row's first ``commit_len[b]`` tokens (0 <= commit_len <= T,
     traced per row).
 
-    This is speculative decoding's verify/commit primitive: verify calls
-    with ``commit_len=0`` (pure lookahead), commit re-runs with the
-    accepted length — rejected tokens never touch the ring, so there is
-    nothing to roll back (docs/serving.md).
+    This is speculative decoding's verify/commit primitive: the forward
+    (``decode_attention_seq_pending``) is commit_len-independent, and
+    the commit (``commit_attention_seq``) is a pure masked scatter of
+    the write-ready K/V chunk the forward already computed — so a
+    verify-then-commit round costs ONE attention forward, not two
+    (docs/serving.md).  Rejected tokens never touch the ring, so there
+    is nothing to roll back.
 
     Returns (out (B,T,d), new_cache committed through commit_len).
     """
+    out, pending = decode_attention_seq_pending(params, cfg, x, cache, pos,
+                                                window=window, rope=rope)
+    return out, commit_attention_seq(cache, pending, pos, commit_len)
+
+
+def decode_attention_seq_pending(params, cfg, x, cache, pos, *,
+                                 window=None, rope=True):
+    """The commit_len-independent forward half of ``decode_attention_seq``:
+    returns (out (B,T,d), pending) where ``pending`` holds the
+    write-ready (storage-dtype, quantized if the cache is) K/V chunk —
+    everything ``commit_attention_seq`` needs to commit any prefix
+    without re-running the attention math."""
     b, t, _ = x.shape
     cap = cache["k"].shape[1]
     if t > cap:
@@ -385,7 +400,6 @@ def decode_attention_seq(params, cfg, x, cache, pos, commit_len, *,
                          f">= {t} (distinct slots mod cap); got {cap}")
     q, k_new, v_new = _qkv(params, cfg, x)
     pv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
     positions = pv[:, None] + jnp.arange(t)[None, :]          # (B, T)
     if rope:
         inv = rope_freqs(cfg)
@@ -438,26 +452,42 @@ def decode_attention_seq(params, cfg, x, cache, pos, commit_len, *,
     o = jnp.einsum("bhgqs,bshk->bqhgk", p, va_all,
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
-    # masked commit (fill_cache's where-set pattern): T consecutive
-    # positions stay distinct mod cap, so the row scatter never collides;
-    # tokens past commit_len write their slot's previous value back
+    pending = {"k": kw, "v": vw}
+    if quant:
+        pending["k_scale"], pending["v_scale"] = ks, vs
+    o = o.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    return _out(params, cfg, o), pending
+
+
+def commit_attention_seq(cache, pending, pos, commit_len):
+    """Masked commit of a ``decode_attention_seq_pending`` chunk
+    (fill_cache's where-set pattern): T consecutive positions stay
+    distinct mod cap, so the row scatter never collides; tokens past
+    commit_len write their slot's previous value back.  No attention
+    math runs here — this is the whole point of the pending split."""
+    b, t = pending["k"].shape[:2]
+    cap = cache["k"].shape[1]
     dt = cache["k"].dtype
+    pv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
+    positions = pv[:, None] + jnp.arange(t)[None, :]          # (B, T)
     rows = jnp.arange(b)[:, None]
     slots = jnp.mod(positions, cap)
-    wvalid = j[None, :] < cl[:, None]                         # (B, T)
-    k_g = jnp.where(wvalid[..., None, None], kw.astype(dt),
+    wvalid = jnp.arange(t)[None, :] < cl[:, None]             # (B, T)
+    k_g = jnp.where(wvalid[..., None, None], pending["k"].astype(dt),
                     cache["k"][rows, slots])
-    v_g = jnp.where(wvalid[..., None, None], vw.astype(dt),
+    v_g = jnp.where(wvalid[..., None, None], pending["v"].astype(dt),
                     cache["v"][rows, slots])
     new_cache = {"k": cache["k"].at[rows, slots].set(k_g),
                  "v": cache["v"].at[rows, slots].set(v_g)}
-    if quant:
+    if "k_scale" in cache:
         new_cache["k_scale"] = cache["k_scale"].at[rows, slots].set(
-            jnp.where(wvalid[..., None], ks, cache["k_scale"][rows, slots]))
+            jnp.where(wvalid[..., None], pending["k_scale"],
+                      cache["k_scale"][rows, slots]))
         new_cache["v_scale"] = cache["v_scale"].at[rows, slots].set(
-            jnp.where(wvalid[..., None], vs, cache["v_scale"][rows, slots]))
-    o = o.reshape(b, t, cfg.n_heads, cfg.head_dim)
-    return _out(params, cfg, o), new_cache
+            jnp.where(wvalid[..., None], pending["v_scale"],
+                      cache["v_scale"][rows, slots]))
+    return new_cache
 
 
 def resolve_decode_impl(cfg) -> str:

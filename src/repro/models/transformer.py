@@ -314,12 +314,54 @@ def block_apply_decode_seq(p, cfg, kind, h, cache, pos, commit_len):
 
     h (B,T,d).  Outputs match what T sequential ``block_apply_decode``
     steps would produce; the cache advances by each row's first
-    ``commit_len[b]`` tokens only.  Recurrent kinds run the sequence form
-    twice — unmasked for the outputs, length-masked for the committed
-    carry (XLA CSE merges the shared projections); attention kinds commit
-    through ``decode_attention_seq``'s masked ring scatter.
+    ``commit_len[b]`` tokens only.  Split into the commit_len-independent
+    forward (``block_decode_seq_pending``) and the commit
+    (``block_commit_seq``) so a verify round can compute its accept
+    count from the logits and still commit without a second forward.
     """
-    b = h.shape[0]
+    h, pending = block_decode_seq_pending(p, cfg, kind, h, cache, pos)
+    return h, block_commit_seq(p, cfg, kind, cache, pending, pos, commit_len)
+
+
+def block_decode_seq_pending(p, cfg, kind, h, cache, pos):
+    """The forward half: (h (B,T,d), pending) with the cache UNTOUCHED.
+
+    ``pending`` carries exactly what ``block_commit_seq`` needs to
+    commit any per-row prefix afterwards: the write-ready K/V chunk for
+    attention kinds (commit is then a pure masked scatter), the normed
+    sublayer inputs for recurrent kinds (commit re-runs only the
+    length-masked carry, never the output path)."""
+    if kind == "rwkv":
+        x1 = norm_apply(p["norm1"], cfg, h)
+        y, _ = rwkv_mod.time_mix_seq(p, cfg, x1, cache["tm_shift"],
+                                     cache["wkv"])
+        h = h + y
+        x2 = norm_apply(p["norm2"], cfg, h)
+        y, _ = rwkv_mod.channel_mix_seq(p, cfg, x2, cache["cm_shift"])
+        return h + y, {"x1": x1, "x2": x2}
+
+    x = norm_apply(p["norm1"], cfg, h)
+    if kind == "rec":
+        y, _ = rglru_mod.rglru_seq(p["mix"], cfg, x, cache["mix"])
+        h = h + y
+        pending = {"x1": x}
+    else:
+        y, pending = attn.decode_attention_seq_pending(
+            p["attn"], cfg, x, cache, pos, window=_window(cfg, kind))
+        h = h + y
+    x = norm_apply(p["norm2"], cfg, h)
+    if kind == "moe":
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, x,
+                                 capacity_factor=_DECODE_MOE_CF(cfg))
+    else:
+        y = mlp_apply(p["ffn"], cfg, x)
+    return h + y, pending
+
+
+def block_commit_seq(p, cfg, kind, cache, pending, pos, commit_len):
+    """The commit half: advance ``cache`` by each row's first
+    ``commit_len[b]`` tokens of a ``block_decode_seq_pending`` chunk."""
+    b = jax.tree.leaves(cache)[0].shape[0]
     cl = jnp.broadcast_to(jnp.asarray(commit_len, jnp.int32), (b,))
 
     def committed(new_cache, old_cache):
@@ -332,39 +374,18 @@ def block_apply_decode_seq(p, cfg, kind, h, cache, pos, commit_len):
         return jax.tree.map(sel, new_cache, old_cache)
 
     if kind == "rwkv":
-        x = norm_apply(p["norm1"], cfg, h)
-        y, _ = rwkv_mod.time_mix_seq(p, cfg, x, cache["tm_shift"],
-                                     cache["wkv"])
         _, (tm_shift, wkv) = rwkv_mod.time_mix_seq(
-            p, cfg, x, cache["tm_shift"], cache["wkv"], length=cl)
-        h = h + y
-        x = norm_apply(p["norm2"], cfg, h)
-        y, cm_shift = rwkv_mod.channel_mix_seq(p, cfg, x, cache["cm_shift"],
-                                               length=cl)
-        h = h + y
-        new_cache = committed(
+            p, cfg, pending["x1"], cache["tm_shift"], cache["wkv"],
+            length=cl)
+        _, cm_shift = rwkv_mod.channel_mix_seq(
+            p, cfg, pending["x2"], cache["cm_shift"], length=cl)
+        return committed(
             {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}, cache)
-        return h, new_cache
-
-    x = norm_apply(p["norm1"], cfg, h)
     if kind == "rec":
-        y, _ = rglru_mod.rglru_seq(p["mix"], cfg, x, cache["mix"])
-        _, mix_cache = rglru_mod.rglru_seq(p["mix"], cfg, x, cache["mix"],
-                                           length=cl)
-        h = h + y
-        new_cache = {"mix": committed(mix_cache, cache["mix"])}
-    else:
-        y, new_cache = attn.decode_attention_seq(p["attn"], cfg, x, cache,
-                                                 pos, cl,
-                                                 window=_window(cfg, kind))
-        h = h + y
-    x = norm_apply(p["norm2"], cfg, h)
-    if kind == "moe":
-        y, _ = moe_mod.moe_apply(p["ffn"], cfg, x,
-                                 capacity_factor=_DECODE_MOE_CF(cfg))
-    else:
-        y = mlp_apply(p["ffn"], cfg, x)
-    return h + y, new_cache
+        _, mix_cache = rglru_mod.rglru_seq(p["mix"], cfg, pending["x1"],
+                                           cache["mix"], length=cl)
+        return {"mix": committed(mix_cache, cache["mix"])}
+    return attn.commit_attention_seq(cache, pending, pos, cl)
 
 
 def _DECODE_MOE_CF(cfg) -> float:
@@ -384,32 +405,73 @@ def decode_seq(params, cfg, cache, tokens, pos, commit_len):
     logits[:, j] match what sequential ``decode_step`` calls would produce
     for token j — this is speculative decoding's verify (commit_len=0)
     and commit (commit_len=accepted) primitive."""
+    logits, pending = decode_seq_pending(params, cfg, cache, tokens, pos)
+    return logits, decode_seq_commit(params, cfg, cache, pending, pos,
+                                     commit_len)
+
+
+def decode_seq_pending(params, cfg, cache, tokens, pos):
+    """The commit_len-independent half of ``decode_seq``: full forward
+    against the current cache, cache untouched.  Returns (logits
+    (B,T,V) f32, pending) where ``pending`` feeds ``decode_seq_commit``.
+    Speculative decoding uses this to verify and commit with ONE target
+    forward per round: compute logits, derive the accept count, then
+    commit the same pending chunk."""
     pattern, np_, rem = _split(cfg)
     h = embed_apply(params["embed"], cfg, tokens)
 
-    new_block_caches = ()
+    block_pending = ()
     if np_ > 0:
         def superblock(h, xs):
             bp, bc = xs
+            ps = []
+            for pi, kind in enumerate(pattern):
+                h, pd = block_decode_seq_pending(bp[pi], cfg, kind, h,
+                                                 bc[pi], pos)
+                ps.append(pd)
+            return h, tuple(ps)
+
+        h, block_pending = scan_or_unroll(
+            superblock, h, (tuple(params["blocks"]), tuple(cache["blocks"])))
+
+    rem_pending = []
+    for i, bp in enumerate(params["rem_blocks"]):
+        h, pd = block_decode_seq_pending(bp, cfg, pattern[i], h,
+                                         cache["rem_blocks"][i], pos)
+        rem_pending.append(pd)
+    h = norm_apply(params["final_norm"], cfg, h)
+    logits = unembed_apply(params["embed"], cfg, h)
+    return logits, {"blocks": block_pending, "rem_blocks": tuple(rem_pending)}
+
+
+def decode_seq_commit(params, cfg, cache, pending, pos, commit_len):
+    """Advance ``cache`` by each row's first ``commit_len[b]`` tokens of a
+    ``decode_seq_pending`` chunk.  No attention math re-runs — attention
+    kinds are a masked ring scatter, recurrent kinds re-run only the
+    length-masked carry from the stored sublayer inputs."""
+    pattern, np_, rem = _split(cfg)
+
+    new_block_caches = ()
+    if np_ > 0:
+        def superblock(c, xs):
+            bp, bc, bpd = xs
             ncs = []
             for pi, kind in enumerate(pattern):
-                h, nc = block_apply_decode_seq(bp[pi], cfg, kind, h, bc[pi],
-                                               pos, commit_len)
-                ncs.append(nc)
-            return h, tuple(ncs)
+                ncs.append(block_commit_seq(bp[pi], cfg, kind, bc[pi],
+                                            bpd[pi], pos, commit_len))
+            return c, tuple(ncs)
 
-        h, new_block_caches = scan_or_unroll(
-            superblock, h, (tuple(params["blocks"]), tuple(cache["blocks"])))
+        _, new_block_caches = scan_or_unroll(
+            superblock, 0, (tuple(params["blocks"]), tuple(cache["blocks"]),
+                            tuple(pending["blocks"])))
 
     new_rem = []
     for i, bp in enumerate(params["rem_blocks"]):
-        h, nc = block_apply_decode_seq(bp, cfg, pattern[i], h,
-                                       cache["rem_blocks"][i], pos,
-                                       commit_len)
-        new_rem.append(nc)
-    h = norm_apply(params["final_norm"], cfg, h)
-    logits = unembed_apply(params["embed"], cfg, h)
-    return logits, {"blocks": new_block_caches, "rem_blocks": tuple(new_rem)}
+        new_rem.append(block_commit_seq(bp, cfg, pattern[i],
+                                        cache["rem_blocks"][i],
+                                        pending["rem_blocks"][i], pos,
+                                        commit_len))
+    return {"blocks": new_block_caches, "rem_blocks": tuple(new_rem)}
 
 
 def decode_step(params, cfg, cache, tokens, pos, table=None):

@@ -7,11 +7,20 @@ resident ticks per host sync), greedy / temperature / top-k sampling
 with per-(request, position) keys, optional speculative decoding
 (``draft_params``/``draft_cfg``/``spec_tokens`` — serving/spec_decode.py)
 and shared-prefix block-pool caches (``block_size``/``num_blocks`` —
-serving/blocks.py), params + state sharded over the replica mesh."""
+serving/blocks.py), params + state sharded over the replica mesh.
+
+The multi-process tier stacks on top: N engine instances as worker
+processes (serving/tier.py) behind a least-loaded ``Router``
+(serving/router.py) with deferred-admission backpressure, disaggregated
+prefill/decode, and elastic drain/handoff of live slots."""
 from repro.serving.blocks import BlockManager
-from repro.serving.engine import (DEFAULT_BUCKETS, Request, Result,
-                                  ServingEngine)
+from repro.serving.engine import (DEFAULT_BUCKETS, DrainingError, Request,
+                                  Result, ServingEngine)
+from repro.serving.router import DeadInstanceError, Router
 from repro.serving.sampling import sample, sample_slots, slot_key
+from repro.serving.tier import InstanceHandle, PrefillWorker, TierError
 
 __all__ = ["ServingEngine", "Request", "Result", "DEFAULT_BUCKETS",
-           "BlockManager", "sample", "sample_slots", "slot_key"]
+           "BlockManager", "sample", "sample_slots", "slot_key",
+           "DrainingError", "Router", "DeadInstanceError",
+           "InstanceHandle", "PrefillWorker", "TierError"]

@@ -46,6 +46,12 @@ from repro.serving import sampling
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
 
+
+class DrainingError(RuntimeError):
+    """submit() on a draining engine: the instance is snapshotting its
+    live slots for handoff and must not take on new work.  The router
+    (serving/router.py) catches this and re-routes to a peer."""
+
 # compiled decode/prefill steps are shared ACROSS engine instances (keyed
 # by everything that shapes the computation: config identity, sampling
 # settings, slot/capacity shapes, mesh) — a fresh engine on the same
@@ -284,6 +290,7 @@ class ServingEngine:
         self._active: List[Optional[Request]] = [None] * slots
         self._results: Dict[int, Result] = {}
         self._queue: collections.deque = collections.deque()
+        self._draining = False
         self._next_rid = 0
         self._buckets_used: set = set()
         self.decode_steps = 0          # model ticks run (K per dispatch)
@@ -350,6 +357,10 @@ class ServingEngine:
     # ------------------------------------------------------------- queue ----
 
     def submit(self, request: Request) -> int:
+        if self._draining:
+            raise DrainingError(
+                "engine is draining (handoff in progress): submit to a "
+                "peer instance instead")
         if self.cfg.family == "conv":
             expect = (self.cfg.image_size, self.cfg.image_size,
                       self.cfg.in_channels)
@@ -564,6 +575,123 @@ class ServingEngine:
         res = self._results[req.rid]
         return (len(res.tokens) >= req.max_new_tokens or
                 res.prompt_len + len(res.tokens) - 1 >= self.capacity)
+
+    # ---------------------------------------------------- tier interface ----
+    # load inspection + elastic drain/handoff for the multi-process tier
+    # (serving/router.py spreads on the stats; serving/tier.py ships the
+    # snapshots between processes through checkpoint.pack_tree)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(r is None for r in self._active)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    def load(self) -> dict:
+        """Router-facing load signal: slots free NOW, queued behind them,
+        and whether the instance still admits."""
+        return {"free_slots": self.free_slots, "queue_len": self.queue_len,
+                "active": self.slots - self.free_slots,
+                "draining": self._draining}
+
+    def export_slot(self, slot: int) -> dict:
+        """Snapshot one live slot for handoff: the row's DecodeState
+        slice (``models.read_slots``), its last sampled token, its
+        positional sampling key, and the request/result bookkeeping.
+        Replaying the snapshot into ANY free slot of a same-shape engine
+        (``import_snapshot``) continues the stream byte-identically —
+        sampling is positional (slot_key x pos), retire arithmetic is
+        (prompt_len, len(tokens), capacity), and neither depends on the
+        slot index or on the peers' traffic."""
+        req = self._active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not active")
+        res = self._results[req.rid]
+        sub = models.read_slots(self.state, [slot])
+        return {
+            "arrays": {
+                "cache": jax.device_get(sub.cache),
+                "pos": jax.device_get(sub.pos),
+                "last_tok": jax.device_get(self.last_tok[slot:slot + 1]),
+                "slot_key": jax.device_get(
+                    jax.random.key_data(self.slot_keys[slot])
+                    if jnp.issubdtype(self.slot_keys.dtype, jax.dtypes.prng_key)
+                    else self.slot_keys[slot]),
+            },
+            "meta": {
+                "rid": int(req.rid),         # engine-LOCAL id: the router
+                "prompt": np.asarray(req.prompt, np.int64).tolist(),  # maps
+                "max_new_tokens": int(req.max_new_tokens),   # it to its own
+                "prompt_len": res.prompt_len,
+                "tokens": list(res.tokens),
+                "t_submit": res.t_submit, "t_first": res.t_first,
+                "draft_proposed": res.draft_proposed,
+                "draft_accepted": res.draft_accepted,
+            },
+        }
+
+    def import_snapshot(self, snap: dict) -> Optional[int]:
+        """Replay an ``export_slot`` snapshot into a free slot.  Returns
+        the request's NEW (engine-local) rid, or None when no slot is
+        free — the caller holds the snapshot and retries after a step.
+        Also the disaggregation entry point: a prefill worker's output is
+        the same snapshot shape (serving/tier.py), so a decode instance
+        admits prefilled work without ever running a prefill itself."""
+        slot = next((s for s, r in enumerate(self._active) if r is None),
+                    None)
+        if slot is None:
+            return None
+        arrays, meta = snap["arrays"], snap["meta"]
+        sub = models.DecodeState(
+            cache=jax.tree.map(jnp.asarray, arrays["cache"]),
+            pos=jnp.asarray(arrays["pos"]))
+        self.state = models.write_slots(self.state, sub, [slot])
+        self.last_tok = self.last_tok.at[slot].set(
+            jnp.asarray(arrays["last_tok"][0]))
+        key = jnp.asarray(arrays["slot_key"])
+        if jnp.issubdtype(self.slot_keys.dtype, jax.dtypes.prng_key):
+            key = jax.random.wrap_key_data(key)
+        self.slot_keys = self.slot_keys.at[slot].set(key)
+        req = Request(prompt=np.asarray(meta["prompt"], np.int32),
+                      max_new_tokens=meta["max_new_tokens"],
+                      rid=self._next_rid)
+        self._next_rid += 1
+        self._active[slot] = req
+        self._results[req.rid] = Result(
+            rid=req.rid, prompt_len=meta["prompt_len"],
+            tokens=list(meta["tokens"]),
+            t_submit=meta["t_submit"], t_first=meta["t_first"], t_done=0.0,
+            draft_proposed=meta["draft_proposed"],
+            draft_accepted=meta["draft_accepted"])
+        return req.rid
+
+    def drain(self) -> tuple:
+        """Elastic drain: stop admitting, snapshot every live slot, hand
+        back the untouched queue.  Returns (snapshots, queued_requests);
+        afterwards the engine is empty and rejects submits
+        (``DrainingError``) — the router replays the snapshots into
+        peers, so a rolling restart drops zero requests."""
+        if self.block_mgr is not None:
+            raise NotImplementedError(
+                "drain: block-pool tables index a process-local pool; "
+                "export/replay needs the dense ring layout")
+        if self.draft_cfg is not None:
+            raise NotImplementedError(
+                "drain: spec engines would need the draft DecodeState "
+                "exported alongside the target's")
+        self._draining = True
+        snaps = [self.export_slot(s) for s, r in enumerate(self._active)
+                 if r is not None]
+        queued = list(self._queue)
+        self._queue.clear()
+        for s, r in enumerate(self._active):
+            if r is not None:
+                self._active[s] = None
+        for r in list(self._results):
+            self._results.pop(r, None)       # queued rows held Results too
+        return snaps, queued
 
     # -------------------------------------------------------------- step ----
 

@@ -18,10 +18,13 @@ token — so the output stream is token-identical to the plain greedy
 engine (tests/serving/test_spec_decode.py, at 1 and 2 devices).
 
 Commit is rollback-free by construction: the propose rollout's draft
-state is DISCARDED, and both models advance by re-running ``decode_seq``
-over x with ``commit_len=a`` — rejected tokens never touch either ring,
-so there is nothing to roll back.  XLA CSE merges the verify and commit
-passes' shared forward work (same params, same state, same x).
+state is DISCARDED, and rejected tokens never touch either ring, so
+there is nothing to roll back.  Verify and commit share ONE target
+forward: ``models.decode_seq_pending`` produces the verify logits plus
+a pending chunk, the accept count ``a`` is derived from the logits, and
+``models.commit_pending`` applies the accepted prefix as a masked
+scatter / masked carry re-run — no second target forward per round (the
+draft still re-runs its cheap chunk to advance its own state).
 
 One packed (slots, 2(γ+1)+1) array — emitted tokens, eos flags, per-row
 accept counts — crosses to host per dispatch, same single-transfer
@@ -29,6 +32,7 @@ discipline as the multi-tick loop.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict
 
 import jax
@@ -65,6 +69,46 @@ def check_spec_pair(tcfg, dcfg, *, temperature: float, ticks: int):
             f"{tcfg.vocab_size} — acceptance compares token ids directly")
 
 
+def truncated_draft(cfg, params, k: int):
+    """The genuinely-cheap draft: the target's OWN first ``k`` layers,
+    sharing its embedding, unembedding and final norm by reference —
+    zero extra training, zero extra memory for the shared leaves, and a
+    per-tick cost of k/L of the target's.
+
+    Layers apply superblock-major (transformer.py): truncating at ``k``
+    keeps the first ``k // P`` full superblocks (P = pattern length) as
+    stacked params and peels the next ``k % P`` pattern positions into
+    rem_blocks — exactly the order the full model would have run them.
+    Because the draft IS a prefix of the target (same residual stream,
+    same unembed), its greedy argmax correlates with the target's far
+    better than an independent small model's would, which is what buys
+    the acceptance rate a >1x speedup needs (docs/serving.md)."""
+    pattern, np_, rem = models.transformer._split(cfg)
+    P = len(pattern)
+    if not 0 < k < cfg.n_layers:
+        raise ValueError(f"draft layers must be in (0, {cfg.n_layers}), "
+                         f"got {k}")
+    j, r = divmod(k, P)
+    dcfg = dataclasses.replace(cfg, n_layers=k,
+                               name=f"{cfg.name}-draft{k}")
+    dparams = {"embed": params["embed"], "final_norm": params["final_norm"]}
+    if j > 0:
+        dparams["blocks"] = tuple(jax.tree.map(lambda x: x[:j], bp)
+                                  for bp in params["blocks"])
+    else:
+        dparams["blocks"] = ()
+    if r == 0:
+        rems = ()
+    elif j < np_:
+        # the partial superblock: stack index j of pattern positions 0..r-1
+        rems = tuple(jax.tree.map(lambda x: x[j], params["blocks"][pi])
+                     for pi in range(r))
+    else:
+        rems = tuple(params["rem_blocks"][:r])
+    dparams["rem_blocks"] = rems
+    return dcfg, dparams
+
+
 def spec_fn(tcfg, dcfg, gamma: int, slots: int, capacity: int, enc_len: int,
             mesh, eos_id):
     """The compiled spec dispatch:
@@ -89,7 +133,8 @@ def spec_fn(tcfg, dcfg, gamma: int, slots: int, capacity: int, enc_len: int,
             else:
                 x = toks
             zero = jnp.zeros((slots,), jnp.int32)
-            tlogits, _ = models.decode_seq(tparams, tcfg, tstate, x, zero)
+            tlogits, pending = models.decode_seq_pending(tparams, tcfg,
+                                                         tstate, x)
             tgt = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
             if gamma > 0:
                 match = (x[:, 1:] == tgt[:, :-1]).astype(jnp.int32)
@@ -97,10 +142,12 @@ def spec_fn(tcfg, dcfg, gamma: int, slots: int, capacity: int, enc_len: int,
             else:
                 m = zero
             a = m + 1
-            # commit: both models consume the accepted prefix of x; the
-            # propose rollout's state was never kept, so rejected drafts
-            # exist nowhere
-            _, tstate = models.decode_seq(tparams, tcfg, tstate, x, a)
+            # commit: ONE target forward per round — the verify pass's
+            # pending chunk is committed directly; only the (cheap) draft
+            # re-runs a chunk to advance its own state.  The propose
+            # rollout's state was never kept, so rejected drafts exist
+            # nowhere
+            tstate = models.commit_pending(tparams, tcfg, tstate, pending, a)
             _, dstate = models.decode_seq(dparams, dcfg, dstate, x, a)
             emit = tgt                                 # emit j (j<a) = tgt_j
             last = tgt[jnp.arange(slots), m][:, None]

@@ -1,0 +1,105 @@
+"""Router + multi-process tier edge cases (docs/serving.md): bursty
+admission spreads over instances, an instance dying mid-request gets its
+work re-placed on a peer, drain hands live streams to peers with zero
+dropped requests, and a draining instance rejects new admissions.
+
+These tests spawn REAL worker processes (`python -m repro.launch.serve
+--role engine`) — each one imports jax and compiles, so the module keeps
+the process count minimal and shares a tier across tests."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.launch import serve
+from repro.serving import Request, Router, ServingEngine
+from repro.serving.tier import spawn_worker
+
+ARGV = ["--arch", "olmo-1b", "--smoke", "--layers", "2", "--d-model", "64",
+        "--slots", "2", "--capacity", "48"]
+
+
+def _reqs(n=6, new=16, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, 512, size=6), max_new_tokens=new)
+            for _ in range(n)]
+
+
+def _reference_streams(n=6, new=16, seed=3):
+    """What the tier must emit: the same engine the workers build
+    (serve.build_cfg on the same argv), run in-process."""
+    args = serve.build_parser().parse_args(ARGV)
+    cfg = serve.build_cfg(args)
+    params = models.init(jax.random.PRNGKey(args.seed), cfg)
+    eng = ServingEngine(params, cfg, slots=6, capacity=args.capacity,
+                        seed=args.seed)
+    return sorted(tuple(r.tokens) for r in eng.run(_reqs(n, new, seed)))
+
+
+@pytest.fixture(scope="module")
+def tier():
+    insts = [spawn_worker("engine", ARGV, name=f"eng{i}") for i in range(2)]
+    for h in insts:
+        h.connect()
+    yield insts
+    for h in insts:
+        h.shutdown()
+
+
+def test_burst_spreads_over_instances(tier):
+    """Bursty admission fairness: 8 requests into 2x2-slot instances
+    must land on BOTH instances — least-loaded ranking refreshes stats
+    every placement, so no instance starves while another queues."""
+    r = Router(tier)
+    for q in _reqs(n=8, new=8, seed=11):
+        r.submit(q)
+    res = r.run_until_done(timeout=300)
+    assert len(res) == 8
+    st = r.stats()["instances"]
+    stepped = [n for n, s in st.items() if s["decode_steps"] > 0]
+    assert len(stepped) == 2, f"one instance starved: {st}"
+
+
+def test_drain_handoff_zero_drops_byte_identical(tier):
+    """The tentpole acceptance check, across real processes: drain an
+    instance mid-stream, its slots replay into the peer, every request
+    finishes, and the union of token streams is byte-identical to an
+    uninterrupted single-engine run (greedy, positional sampling)."""
+    r = Router(tier)
+    for q in _reqs():
+        r.submit(q)
+    time.sleep(0.5)                          # let streams get mid-flight
+    r.drain_instance(tier[0])
+    res = r.run_until_done(timeout=300)
+    assert len(res) == 6                     # zero dropped requests
+    assert sorted(tuple(x["tokens"]) for x in res) == _reference_streams()
+    # the drained instance now rejects admissions with a typed status
+    status, _ = tier[0].call("submit", {"prompt": [1, 2],
+                                        "max_new_tokens": 2, "rid": 99})
+    assert status == "draining"
+    tier[0].drained = True                   # later tests must skip it
+
+
+def test_instance_death_retries_on_peer():
+    """Kill a worker mid-request: the router marks it dead, re-places
+    its outstanding requests on the peer from scratch (at-least-once),
+    and every request still finishes."""
+    insts = [spawn_worker("engine", ARGV, name=f"mort{i}") for i in range(2)]
+    try:
+        for h in insts:
+            h.connect()
+        r = Router(insts)
+        for q in _reqs():
+            r.submit(q)
+        time.sleep(0.3)                      # some requests placed + ticking
+        insts[0].proc.kill()
+        res = r.run_until_done(timeout=300)
+        assert len(res) == 6
+        assert sorted(tuple(x["tokens"]) for x in res) \
+            == _reference_streams()
+        assert r.stats()["dead"] == ["mort0"]
+    finally:
+        for h in insts:
+            h.shutdown()

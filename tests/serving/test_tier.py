@@ -1,0 +1,175 @@
+"""Serving-tier state movement, in one process: snapshot containers
+round-trip byte-exactly, export/import is the identity on a slot's
+stream, and drain replays into a fresh engine with zero dropped
+requests and byte-identical tokens (greedy).  The multi-process layer
+on top is tests/serving/test_router.py."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, models
+from repro.configs import ARCHS, reduced
+from repro.kernels.common import KernelPolicy
+from repro.serving import DrainingError, Request, ServingEngine
+from repro.serving import tier as tier_mod
+
+CAP = 32
+
+
+def _cfg(**over):
+    cfg = reduced(ARCHS["olmo-1b"], n_layers=2, d_model=64, vocab=128)
+    return dataclasses.replace(cfg, kernels=KernelPolicy(backend="xla"),
+                               **over)
+
+
+def _params(cfg):
+    return models.init(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(cfg, n=6, ln=6, new=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=ln),
+                    max_new_tokens=new) for _ in range(n)]
+
+
+def _streams(results):
+    return sorted(tuple(r.tokens) for r in results)
+
+
+# ----------------------------------------------------------- containers ----
+
+def test_pack_tree_roundtrip_exact_bytes():
+    tree = {"a": np.arange(6, dtype=np.int32).reshape(2, 3),
+            "b": (np.ones((3,), jnp.bfloat16) * 1.5,
+                  np.array([-7], np.int8))}
+    buf = checkpoint.pack_tree(tree, meta={"rid": 41, "note": "x"})
+    assert checkpoint.peek_meta(buf) == {"rid": 41, "note": "x"}
+    out, meta = checkpoint.unpack_tree(buf, tree)
+    assert meta["rid"] == 41
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.dtype == y.dtype
+        assert np.array_equal(np.asarray(x).view(np.uint8),
+                              np.asarray(y).view(np.uint8))
+
+
+def test_read_slots_inverts_write_slots():
+    cfg = _cfg()
+    cache = models.init_decode_cache(cfg, 4, CAP)
+    state = models.DecodeState(
+        cache=jax.tree.map(
+            lambda l: jnp.add(l, jnp.arange(l.size, dtype=l.dtype)
+                              .reshape(l.shape)) if l.size else l,
+            cache),
+        pos=jnp.asarray([3, 5, 7, 9], jnp.int32))
+    sub = models.read_slots(state, [2])
+    blank = models.DecodeState(cache=models.init_decode_cache(cfg, 4, CAP),
+                               pos=jnp.zeros((4,), jnp.int32))
+    back = models.write_slots(blank, sub, [2])
+    again = models.read_slots(back, [2])
+    for x, y in zip(jax.tree.leaves(sub), jax.tree.leaves(again)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert int(again.pos[0]) == 7
+
+
+def test_snapshot_pack_unpack_is_exact():
+    cfg = _cfg()
+    eng = ServingEngine(_params(cfg), cfg, slots=2, capacity=CAP)
+    for q in _reqs(cfg, n=2):
+        eng.submit(q)
+    eng.step()
+    snap = eng.export_slot(0)
+    like = tier_mod.snapshot_like(cfg, CAP, eng.enc_len)
+    buf = tier_mod.pack_snapshot(snap)
+    assert checkpoint.peek_meta(buf)["rid"] == snap["meta"]["rid"]
+    out = tier_mod.unpack_snapshot(buf, like)
+    for x, y in zip(jax.tree.leaves(snap["arrays"]),
+                    jax.tree.leaves(out["arrays"])):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert out["meta"]["tokens"] == snap["meta"]["tokens"]
+
+
+# -------------------------------------------------------- drain / replay ----
+
+def test_drain_replay_byte_identical():
+    """The acceptance criterion: snapshot mid-stream, replay into a
+    DIFFERENT engine (different slots get used, different peers), finish
+    — the union of token streams equals an uninterrupted run's exactly."""
+    cfg = _cfg()
+    params = _params(cfg)
+    ref = ServingEngine(params, cfg, slots=3, capacity=CAP).run(_reqs(cfg))
+    want = _streams(ref)
+
+    eng1 = ServingEngine(params, cfg, slots=3, capacity=CAP)
+    for q in _reqs(cfg):
+        eng1.submit(q)
+    fin = []
+    for _ in range(4):                       # mid-flight: some tokens out
+        fin += eng1.step()
+    snaps, queued = eng1.drain()
+    assert len(snaps) + len(queued) + len(fin) == 6   # nothing dropped
+    assert eng1.load()["draining"]
+
+    like = tier_mod.snapshot_like(cfg, CAP, eng1.enc_len)
+    bufs = [tier_mod.pack_snapshot(s) for s in snaps]   # cross-process wire
+    eng2 = ServingEngine(params, cfg, slots=3, capacity=CAP)
+    for b in bufs:
+        assert eng2.import_snapshot(tier_mod.unpack_snapshot(b, like)) \
+            is not None
+    for q in queued:
+        eng2.submit(Request(prompt=q.prompt,
+                            max_new_tokens=q.max_new_tokens))
+    fin += eng2.run([])
+    assert _streams(fin) == want
+
+
+def test_submit_while_draining_is_typed_error():
+    cfg = _cfg()
+    eng = ServingEngine(_params(cfg), cfg, slots=2, capacity=CAP)
+    eng.drain()
+    with pytest.raises(DrainingError):
+        eng.submit(_reqs(cfg, n=1)[0])
+
+
+def test_drain_gates_unsupported_modes():
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, slots=2, capacity=CAP,
+                        block_size=16, num_blocks=8)
+    with pytest.raises(NotImplementedError):
+        eng.drain()
+
+
+# ------------------------------------------------------- prefill worker ----
+
+def test_prefill_worker_matches_colocated_stream():
+    """Disaggregation must be invisible: a prefill-worker snapshot
+    injected into a decode engine continues exactly the stream the
+    colocated engine would have produced."""
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _reqs(cfg, n=3, seed=4)
+    want = _streams(ServingEngine(params, cfg, slots=3,
+                                  capacity=CAP).run(reqs))
+
+    pw = tier_mod.PrefillWorker(params, cfg, capacity=CAP)
+    eng = ServingEngine(params, cfg, slots=3, capacity=CAP)
+    like = tier_mod.snapshot_like(cfg, CAP, eng.enc_len)
+    for rid, q in enumerate(reqs):
+        wire = tier_mod.request_to_wire(q)
+        wire["rid"] = rid                    # router normally stamps this
+        buf = tier_mod.pack_snapshot(pw.prefill(wire))
+        assert eng.import_snapshot(tier_mod.unpack_snapshot(buf, like)) \
+            is not None
+    assert pw.prefills == 3
+    assert _streams(eng.run([])) == want
+
+
+def test_wire_rejects_vision_requests():
+    with pytest.raises(NotImplementedError):
+        tier_mod.request_to_wire(
+            Request(prompt=[1, 2], max_new_tokens=4,
+                    image=np.zeros((8, 8, 3), np.float32)))
